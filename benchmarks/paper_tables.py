@@ -1,0 +1,188 @@
+"""Paper-experiment benchmarks: one function per ASO-Fed table/figure.
+
+Scaled-down (CPU single-core) but structurally identical reproductions:
+same algorithms, same non-IID streaming setup, same metrics, same
+comparisons.  Results land in results/paper/*.json and are summarized as
+``name,us_per_call,derived`` CSV rows by run.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import HistoryPoint, RunConfig, make_sim_clients, run
+from repro.data import (
+    airquality_like,
+    extrasensory_like,
+    fitrec_like,
+    fmnist_like,
+)
+from repro.models import LOCAL, build_model
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "paper")
+
+ALGS = ["asofed", "asofed_d", "asofed_f", "fedavg", "fedprox", "fedasync",
+        "local", "global"]
+
+
+def _model_for(dataset: str):
+    if dataset == "fmnist":
+        cfg = get_arch("paper-cnn")
+        return cfg, build_model(cfg, LOCAL)
+    feat = {"fitrec": 10, "airquality": 8, "extrasensory": 32}[dataset]
+    out = {"fitrec": 1, "airquality": 1, "extrasensory": 6}[dataset]
+    cfg = dataclasses.replace(
+        get_arch("paper-lstm"), in_features=feat, out_features=out, hidden=32
+    )
+    return cfg, build_model(cfg, LOCAL)
+
+
+def _data_for(dataset: str, quick: bool):
+    n = 0.5 if quick else 1.0
+    if dataset == "fitrec":
+        return fitrec_like(n_clients=int(10 * n) or 4, n_per=160)
+    if dataset == "airquality":
+        return airquality_like(n_clients=9, n_per=int(300 * n))
+    if dataset == "extrasensory":
+        return extrasensory_like(n_clients=int(12 * n) or 6, n_per=int(200 * n))
+    if dataset == "fmnist":
+        return fmnist_like(n_clients=20, scale=0.015 if quick else 0.05)
+    raise KeyError(dataset)
+
+
+def _run_cfg(dataset: str, quick: bool) -> RunConfig:
+    task = "classification" if dataset in ("extrasensory", "fmnist") else "regression"
+    lam = {"fitrec": 1.0, "airquality": 1.0, "extrasensory": 0.8,
+           "fmnist": 0.5}[dataset]
+    # fmnist's CNN is ~10x costlier per step on one CPU core: shorter budget
+    budget = (800.0 if dataset == "fmnist" else 1600.0) if quick else 6000.0
+    return RunConfig(
+        T=100000, sim_time_budget=budget,
+        batch_size=16, local_epochs=2, eta=0.03, lam=lam, beta=0.001,
+        task=task, eval_every=200 if quick else 100, seed=0,
+        participation=0.2,
+    )
+
+
+def _dispatch(alg: str, model, cfg_model, clients, cfg: RunConfig):
+    """Maps table row names to runner configs (ablations included)."""
+    sync_algs = ("fedavg", "fedprox", "local", "global")
+    base = alg.split("_")[0] if alg.startswith("asofed") else alg
+    if alg == "asofed_d":
+        cfg = dataclasses.replace(cfg, dynamic_lr=False)
+        base = "asofed"
+    elif alg == "asofed_f":
+        cfg = dataclasses.replace(cfg, feature_learning=False)
+        base = "asofed"
+    if base in sync_algs:
+        # sync/local/global rounds are ~K/C times costlier per iteration;
+        # cap their round count so every method gets the same sim budget
+        t = 60 if cfg.task == "classification" else 150
+        cfg = dataclasses.replace(cfg, T=t, eval_every=20)
+    return run(base, model, cfg_model, clients, cfg)
+
+
+def table_5_1(quick: bool = True, datasets=None) -> Dict:
+    """Prediction performance comparison (paper Table 5.1)."""
+    datasets = datasets or ["fitrec", "airquality", "extrasensory", "fmnist"]
+    results: Dict[str, Dict[str, Dict[str, float]]] = {}
+    timings: Dict[str, Dict[str, float]] = {}
+    for ds in datasets:
+        cfg_model, model = _model_for(ds)
+        base_cfg = _run_cfg(ds, quick)
+        results[ds] = {}
+        timings[ds] = {}
+        os.makedirs(OUT_DIR, exist_ok=True)
+        for alg in ALGS:
+            data = _data_for(ds, quick)
+            clients = make_sim_clients(data, seed=0)
+            t0 = time.perf_counter()
+            hist = _dispatch(alg, model, cfg_model, clients, base_cfg)
+            timings[ds][alg] = time.perf_counter() - t0
+            last = hist[-1] if hist else None
+            results[ds][alg] = dict(last.metrics) if last else {}
+            results[ds][alg]["sim_time"] = last.sim_time if last else None
+            results[ds][alg]["iters"] = last.global_iter if last else 0
+            results[ds][alg]["history"] = [
+                {"t": h.global_iter, "sim": h.sim_time, **h.metrics}
+                for h in hist
+            ]
+            # incremental checkpointing: a killed run keeps finished work
+            with open(os.path.join(OUT_DIR, "table_5_1.json"), "w") as f:
+                json.dump({"results": results, "wall": timings}, f, indent=2)
+    return results
+
+
+def table_6_1(results: Dict) -> Dict:
+    """Computation-time comparison (paper Table 6.1): simulated seconds for
+    the fixed budget + achieved iterations (async >> sync throughput)."""
+    out = {}
+    for ds, per_alg in results.items():
+        out[ds] = {
+            alg: {"sim_time": v.get("sim_time"), "iters": v.get("iters")}
+            for alg, v in per_alg.items()
+        }
+    with open(os.path.join(OUT_DIR, "table_6_1.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def fig_4_dropouts(quick: bool = True) -> Dict:
+    """Robustness to permanent dropouts (paper Fig. 4)."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out: Dict[str, Dict] = {}
+    for ds in ["airquality", "extrasensory"]:
+        cfg_model, model = _model_for(ds)
+        base = _run_cfg(ds, quick)
+        rates = [0.0, 0.25, 0.5] if quick else [0.0, 0.1, 0.2, 0.3, 0.4, 0.5]
+        out[ds] = {}
+        for alg in ["asofed", "fedavg", "fedasync"]:
+            out[ds][alg] = {}
+            for rate in rates:
+                cfg = dataclasses.replace(base, dropout_frac=rate)
+                clients = make_sim_clients(_data_for(ds, quick), seed=0)
+                hist = _dispatch(alg, model, cfg_model, clients, cfg)
+                out[ds][alg][str(rate)] = dict(hist[-1].metrics) if hist else {}
+                with open(os.path.join(OUT_DIR, "fig_4_dropout.json"), "w") as f:
+                    json.dump(out, f, indent=2)  # incremental checkpoint
+    return out
+
+
+def fig_5_periodic(quick: bool = True) -> Dict:
+    """Periodic (per-iteration) dropouts (paper Fig. 5) — ASO-Fed only,
+    as in the paper."""
+    ds = "airquality"
+    os.makedirs(OUT_DIR, exist_ok=True)
+    cfg_model, model = _model_for(ds)
+    base = _run_cfg(ds, quick)
+    out = {}
+    for rate in [0.0, 0.1, 0.3, 0.5]:
+        cfg = dataclasses.replace(base, periodic_dropout=rate)
+        clients = make_sim_clients(_data_for(ds, quick), seed=0)
+        hist = run("asofed", model, cfg_model, clients, cfg)
+        out[str(rate)] = [
+            {"t": h.global_iter, "sim": h.sim_time, **h.metrics} for h in hist
+        ]
+    with open(os.path.join(OUT_DIR, "fig_5_periodic.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def fig_6_growth(results: Dict) -> Dict:
+    """Performance vs arriving training data (paper Fig. 6): read off the
+    eval histories (the stream grows with global iteration)."""
+    out = {}
+    for ds, per_alg in results.items():
+        out[ds] = {
+            alg: v.get("history", []) for alg, v in per_alg.items()
+            if alg in ("asofed", "fedavg", "fedasync", "local", "global")
+        }
+    with open(os.path.join(OUT_DIR, "fig_6_growth.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    return out

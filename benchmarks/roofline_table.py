@@ -1,0 +1,117 @@
+"""Aggregate the dry-run JSONs into the §Roofline / §Dry-run tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+ARCH_ORDER = [
+    "deepseek-v2-lite-16b", "whisper-small", "qwen2-vl-72b",
+    "kimi-k2-1t-a32b", "falcon-mamba-7b", "tinyllama-1.1b",
+    "recurrentgemma-9b", "qwen2-0.5b", "internlm2-20b", "phi4-mini-3.8b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_results(mesh: str = "pod1", suffix: str = "") -> List[Dict]:
+    out = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            path = os.path.join(
+                RESULTS_DIR, f"{arch}_{shape}_{mesh}{suffix}.json"
+            )
+            if os.path.exists(path):
+                with open(path) as f:
+                    out.append(json.load(f))
+    return out
+
+
+def true_live_gib(r: Dict) -> float:
+    """HBM-resident GiB/device recomputed from memory components (early
+    baseline JSONs stored args+temps only; this makes all records
+    comparable: args + outputs - aliased + temps)."""
+    m = r.get("memory", {})
+    live = (
+        (m.get("argument_size_in_bytes") or 0)
+        + (m.get("output_size_in_bytes") or 0)
+        - (m.get("alias_size_in_bytes") or 0)
+        + (m.get("temp_size_in_bytes") or 0)
+    )
+    return live / 2**30
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    return f"{x:.4f}"
+
+
+def markdown_table(results: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | strat | compute s | memory s | collective s | "
+        "dominant | 6ND/HLO | live GiB/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                f"skipped ({r['reason']}) | - | - | - |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                f"ERROR | - | - | - |"
+            )
+            continue
+        t = r["roofline"]
+        live = true_live_gib(r)
+        ur = t["useful_ratio"]
+        ur_s = f"{ur:.2f}" if t["hlo_flops"] > 1e9 else "-"
+        lines.append(
+            "| {arch} | {shape} | {strat} | {c} | {m} | {k} | **{dom}** | "
+            "{ur} | {live:.2f} | {fits} |".format(
+                arch=r["arch"], shape=r["shape"], strat=r["strategy"],
+                c=_fmt_s(t["compute_s"]), m=_fmt_s(t["memory_s"]),
+                k=_fmt_s(t["collective_s"]), dom=t["dominant"],
+                ur=ur_s, live=live,
+                fits="yes" if live <= 16.0 else "NO",
+            )
+        )
+    return "\n".join(lines)
+
+
+def csv_rows(results: List[Dict]):
+    rows = []
+    for r in results:
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        dom_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            dom_s * 1e6,  # dominant-term seconds -> us ("us_per_call")
+            t["dominant"],
+        ))
+    return rows
+
+
+def main():
+    for mesh in ("pod1", "pod2"):
+        res = load_results(mesh)
+        if not res:
+            continue
+        print(f"\n== {mesh} ({len(res)} combos) ==")
+        print(markdown_table(res))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""End-to-end driver: federated pretraining of a small LLM with ASO-Fed.
+
+Thin wrapper over ``repro.launch.train`` — 4 clients with non-IID domain
+token streams, asynchronous server folds + feature pass every round.
+Defaults are CPU-friendly (a ~10M reduced qwen2); pass ``--steps 300`` and
+a bigger arch for the full run on real hardware.
+
+    PYTHONPATH=src python examples/fed_llm_pretrain.py
+    PYTHONPATH=src python examples/fed_llm_pretrain.py -- --arch tinyllama-1.1b --steps 300
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--":
+        sys.argv = [sys.argv[0]] + sys.argv[2:]
+    else:
+        sys.argv = [sys.argv[0], "--arch", "qwen2-0.5b", "--reduced",
+                    "--clients", "4", "--steps", "40", "--seq", "128",
+                    "--batch", "4"]
+    train_main()

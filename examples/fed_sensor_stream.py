@@ -1,0 +1,41 @@
+"""The paper's scenario: asynchronous online FL over streaming sensor data.
+
+9 weather-station clients (Air-Quality-like regression), heterogeneous
+network delays (10-100 s), online data growth — ASO-Fed vs FedAvg vs
+FedAsync at an equal simulated-time budget (the paper's Fig. 3 axis).
+
+    PYTHONPATH=src python examples/fed_sensor_stream.py
+"""
+import dataclasses
+
+from repro.configs import get_arch
+from repro.core import RunConfig, make_sim_clients, run
+from repro.data import airquality_like
+from repro.models import LOCAL, build_model
+
+
+def main():
+    cfg_model = dataclasses.replace(
+        get_arch("paper-lstm"), in_features=8, out_features=1, hidden=32
+    )
+    model = build_model(cfg_model, LOCAL)
+    budget = 2500.0  # simulated seconds
+    base = RunConfig(T=100_000, sim_time_budget=budget, batch_size=16,
+                     eta=0.03, lam=1.0, beta=0.001, task="regression",
+                     eval_every=100, seed=0)
+    print(f"{'method':10s} {'iters':>6s} {'sim_time':>9s} {'MAE':>8s} {'SMAPE':>8s}")
+    for alg in ["asofed", "fedavg", "fedprox", "fedasync"]:
+        cfg = base
+        if alg in ("fedavg", "fedprox"):
+            cfg = dataclasses.replace(base, T=200, eval_every=10)
+        clients = make_sim_clients(airquality_like(n_clients=9, n_per=250),
+                                   seed=0)
+        h = run(alg, model, cfg_model, clients, cfg)[-1]
+        print(f"{alg:10s} {h.global_iter:6d} {h.sim_time:8.0f}s "
+              f"{h.metrics['mae']:8.4f} {h.metrics['smape']:8.4f}")
+    print("\nASO-Fed fits ~10x more global iterations into the same wall "
+          "clock because the server never waits for stragglers (paper §6.2).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Quickstart: the ASO-Fed protocol end-to-end in ~a minute on CPU.
+
+Builds a reduced TinyLlama, runs a few asynchronous federated rounds over
+3 non-IID clients (Eq. 4-11: prox surrogate, decay-corrected gradient,
+dynamic step size, server fold + feature pass), then serves a few tokens
+from the aggregated central model.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.feature_learning import apply_feature_learning
+from repro.data.lm import batches_from_tokens, federated_token_clients
+from repro.models import LOCAL, build_model
+from repro.optim.asofed import asofed_transform, init_slots
+
+ARCH = "tinyllama-1.1b"
+CLIENTS, ROUNDS, SEQ, BATCH = 3, 24, 64, 4
+ETA, LAM, BETA = 5e-3, 0.1, 0.001
+
+
+def main():
+    cfg = get_arch(ARCH).reduced()
+    model = build_model(cfg, LOCAL)
+    key = jax.random.PRNGKey(0)
+    w_server = model.init(key)
+    print(f"{cfg.name} (reduced): "
+          f"{sum(x.size for x in jax.tree.leaves(w_server))/1e6:.1f}M params")
+
+    streams = federated_token_clients(CLIENTS, cfg.vocab_size, 50_000)
+    iters = [batches_from_tokens(s, BATCH, SEQ, seed=i)
+             for i, s in enumerate(streams)]
+    delays = np.random.default_rng(0).uniform(10, 100, CLIENTS)
+    slots = [init_slots(w_server) for _ in range(CLIENTS)]
+    n_k = np.ones(CLIENTS)
+
+    @jax.jit
+    def local_step(params, server, sl, batch, delay):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+        upd, sl = asofed_transform(g, sl, params, server,
+                                   lam=LAM, beta=BETA, eta=ETA, delay=delay)
+        return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, upd), sl, loss
+
+    heap = [(delays[k], k) for k in range(CLIENTS)]
+    heapq.heapify(heap)
+    for t in range(1, ROUNDS + 1):
+        now, k = heapq.heappop(heap)  # earliest-finishing client wins (async)
+        batch = {kk: jnp.asarray(v) for kk, v in next(iters[k]).items()}
+        new_w, slots[k], loss = local_step(
+            w_server, w_server, slots[k], batch, jnp.float32(delays[k]))
+        n_k[k] += BATCH * SEQ
+        weight = n_k[k] / n_k.sum()
+        # Eq. (4): fold this client's delta; Eq. (5)-(6): feature pass
+        w_server = jax.tree.map(
+            lambda w, old, new: w - weight * (old - new), w_server, w_server, new_w)
+        w_server = apply_feature_learning(w_server, cfg)
+        heapq.heappush(heap, (now + delays[k], k))
+        print(f"round {t:2d}  client {k}  sim_t={now:7.1f}s  loss={float(loss):.3f}")
+
+    # serve from the central model
+    prompt = {"tokens": jnp.asarray(streams[0][:SEQ])[None],
+              "labels": jnp.zeros((1, SEQ), jnp.int32)}
+    logits, cache = model.prefill(w_server, prompt, max_len=SEQ + 8)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = []
+    for i in range(8):
+        logits, cache = model.decode_step(
+            w_server, cache, tok, jnp.full((1,), SEQ + i, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("generated:", out)
+
+
+if __name__ == "__main__":
+    main()

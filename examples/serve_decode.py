@@ -1,0 +1,18 @@
+"""Serving example: batched prefill + decode across architecture families
+(full attention KV cache, MLA latent cache, Mamba recurrent state).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+ARCHS = ["tinyllama-1.1b", "falcon-mamba-7b", "deepseek-v2-lite-16b"]
+
+if __name__ == "__main__":
+    argv0 = sys.argv[0]
+    for arch in ARCHS:
+        print(f"\n=== {arch} (reduced) ===")
+        sys.argv = [argv0, "--arch", arch, "--reduced", "--batch", "2",
+                    "--prompt-len", "32", "--gen", "16", "--temperature", "0"]
+        serve_main()

@@ -1,0 +1,35 @@
+"""Mixed-precision policy.
+
+TPU-native policy: bf16 params+activations for the large-model dry-runs,
+fp32 master state for the federated server recursion (Eq.4 accumulates small
+deltas -- bf16 would lose them), fp32 for small paper-scale models.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: jnp.dtype = jnp.bfloat16
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    accum_dtype: jnp.dtype = jnp.float32
+    # Server-side federated state (central model, h_k, v_k slots).
+    server_dtype: jnp.dtype = jnp.float32
+
+    def cast_compute(self, tree):
+        import jax
+
+        return jax.tree.map(lambda x: x.astype(self.compute_dtype), tree)
+
+
+# Large-model policy (dry-run / production mesh).
+BF16 = Policy()
+# Paper-scale policy (LSTM/CNN on CPU, exact repro arithmetic).
+FP32 = Policy(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+
+
+def bytes_of(dtype) -> int:
+    return jnp.dtype(dtype).itemsize

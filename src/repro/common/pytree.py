@@ -1,0 +1,61 @@
+"""Pytree arithmetic used across the federated core.
+
+All functions are jit-friendly (pure, no python-level data-dependent control
+flow) and operate leaf-wise on arbitrary parameter pytrees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    """a + b, leaf-wise."""
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """a - b, leaf-wise."""
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    """s * a for scalar s, leaf-wise."""
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(s, x, y):
+    """s * x + y, leaf-wise (the BLAS axpy)."""
+    return jax.tree.map(lambda xi, yi: s * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Sum over leaves of <a_i, b_i> (flattened inner product)."""
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.zeros((), jnp.float32))
+
+
+def tree_l2_norm(a):
+    """Global L2 norm over the whole pytree."""
+    sq = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def param_count(tree) -> int:
+    """Total number of parameters (python int; not traceable)."""
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    """Total parameter bytes (python int; not traceable)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_any_nan(a):
+    """Traceable: True if any leaf contains a NaN/Inf."""
+    flags = jax.tree.map(lambda x: jnp.any(~jnp.isfinite(x.astype(jnp.float32))), a)
+    return jax.tree.reduce(jnp.logical_or, flags, jnp.zeros((), jnp.bool_))

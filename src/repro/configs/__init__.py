@@ -1,0 +1,49 @@
+"""Architecture configs.  Importing this package registers every arch."""
+from repro.configs.base import (
+    ARCHS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    applicable,
+    get_arch,
+    get_shape,
+)
+
+# Register all architectures (import side-effects).
+from repro.configs import (  # noqa: F401
+    deepseek_v2_lite_16b,
+    whisper_small,
+    qwen2_vl_72b,
+    kimi_k2_1t_a32b,
+    falcon_mamba_7b,
+    tinyllama_1_1b,
+    recurrentgemma_9b,
+    qwen2_0_5b,
+    internlm2_20b,
+    phi4_mini_3_8b,
+    paper_models,
+)
+
+ASSIGNED_ARCHS = [
+    "deepseek-v2-lite-16b",
+    "whisper-small",
+    "qwen2-vl-72b",
+    "kimi-k2-1t-a32b",
+    "falcon-mamba-7b",
+    "tinyllama-1.1b",
+    "recurrentgemma-9b",
+    "qwen2-0.5b",
+    "internlm2-20b",
+    "phi4-mini-3.8b",
+]
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "applicable",
+    "get_arch",
+    "get_shape",
+    "ASSIGNED_ARCHS",
+]

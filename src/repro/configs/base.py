@@ -1,0 +1,186 @@
+"""Model / shape configuration system.
+
+Every assigned architecture registers a ``ModelConfig`` here (one file per
+arch).  Configs are frozen dataclasses; ``reduced()`` derives the CPU-runnable
+smoke variant (<=2 layers, d_model<=512, <=4 experts) of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+from repro.common.registry import Registry
+
+ARCHS: Registry["ModelConfig"] = Registry("architecture")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio | lstm | cnn
+    citation: str = ""
+
+    # transformer trunk
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "swiglu"  # swiglu | gelu
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0  # leading dense (non-MoE) layers
+
+    # MLA (DeepSeek-style multi-head latent attention)
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # SSM (Mamba-1)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_dt_rank: int = 0
+
+    # hybrid (RecurrentGemma): repeating block pattern
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("rglru", "rglru", "attn")
+    local_window: int = 0  # local-attention window (hybrid archs)
+    lru_width: int = 0
+
+    # long-context variant for dense archs (beyond-paper SWA config)
+    sliding_window: int = 0  # 0 = full attention
+
+    # multimodal stubs
+    mrope_sections: Tuple[int, ...] = ()  # (t, h, w) rotary sections
+    n_patches: int = 0  # VLM: stub patch-embedding prefix length
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_frames: int = 0  # audio: stub frame-embedding length
+    max_decode_len: int = 0  # enc-dec decode horizon cap (0 = unlimited)
+
+    # paper-scale models (LSTM / CNN)
+    in_features: int = 0
+    out_features: int = 0
+    hidden: int = 0
+
+    # distribution strategy: "tp" (heads divisible by model axis) or
+    # "seqp" (sequence-parallel attention, replicated weights)
+    parallel_strategy: str = "tp"
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.n_heads and not self.head_dim and not self.use_mla:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.family == "ssm" and not self.ssm_dt_rank and self.d_model:
+            object.__setattr__(self, "ssm_dt_rank", math.ceil(self.d_model / 16))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True iff the arch can run long_500k (sub-quadratic path exists)."""
+        if self.family == "ssm" or self.block_pattern:
+            return True
+        if self.is_encoder_decoder:
+            return False  # whisper: full-attn decoder, short horizon by design
+        return True  # dense/vlm/moe: via the sliding-window variant
+
+    def with_sliding_window(self, window: int = 8192) -> "ModelConfig":
+        return dataclasses.replace(self, sliding_window=window)
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: same family/topology, tiny dims."""
+        # hybrids keep one full (rglru, rglru, attn) superblock
+        min_layers = 3 if self.block_pattern else 2
+        r = dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, min_layers) if self.n_layers else 0,
+            encoder_layers=min(self.encoder_layers, 2),
+            d_model=min(self.d_model, 256) if self.d_model else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            d_ff_expert=min(self.d_ff_expert, 128) if self.d_ff_expert else 0,
+            vocab_size=min(self.vocab_size, 512) if self.vocab_size else 0,
+            n_heads=min(self.n_heads, 4) if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            kv_lora_rank=min(self.kv_lora_rank, 64) if self.kv_lora_rank else 0,
+            q_lora_rank=min(self.q_lora_rank, 64) if self.q_lora_rank else 0,
+            qk_nope_head_dim=min(self.qk_nope_head_dim, 32),
+            qk_rope_head_dim=min(self.qk_rope_head_dim, 16),
+            v_head_dim=min(self.v_head_dim, 32),
+            lru_width=min(self.lru_width, 256) if self.lru_width else 0,
+            local_window=min(self.local_window, 64) if self.local_window else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            encoder_frames=min(self.encoder_frames, 16) if self.encoder_frames else 0,
+            n_patches=min(self.n_patches, 16) if self.n_patches else 0,
+            hidden=min(self.hidden, 64) if self.hidden else 0,
+        )
+        # recompute derived head_dim for the reduced trunk
+        if r.n_heads and not r.use_mla:
+            object.__setattr__(r, "head_dim", r.d_model // r.n_heads)
+        if r.family == "ssm":
+            object.__setattr__(r, "ssm_dt_rank", math.ceil(r.d_model / 16))
+        # MLA reduced mrope
+        if r.mrope_sections:
+            hd = r.head_dim
+            t = hd // 4
+            object.__setattr__(r, "mrope_sections", (hd // 2 - 2 * t, t, t))
+        return r
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    return ARCHS.get(name)()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def applicable(arch: ModelConfig, shape: ShapeConfig) -> bool:
+    """Whether (arch, shape) is a valid dry-run pair (DESIGN.md skip table)."""
+    if shape.name == "long_500k" and not arch.supports_long_context:
+        return False
+    return True

@@ -1,0 +1,26 @@
+"""Phi-4-mini-3.8B — dense RoPE + SwiGLU + GQA model.
+
+[arXiv:2412.08905]  32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064.
+"""
+from repro.configs.base import ARCHS, ModelConfig
+
+
+@ARCHS.register("phi4-mini-3.8b")
+def phi4_mini_3_8b() -> ModelConfig:
+    return ModelConfig(
+        name="phi4-mini-3.8b",
+        family="dense",
+        citation="arXiv:2412.08905",
+        n_layers=32,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab_size=200064,
+        tie_embeddings=True,
+        rope_theta=10000.0,
+        norm="rmsnorm",
+        act="swiglu",
+        # 24 heads don't divide the 16-way model axis: sequence-parallel attn.
+        parallel_strategy="seqp",
+    )

@@ -1,0 +1,42 @@
+"""ASO-Fed core: async server (Eq.4), feature learning (Eq.5-6), online
+client update (Eq.7-11), event-driven federation simulator + baselines."""
+from repro.core.client import (
+    ClientState,
+    client_step,
+    dynamic_multiplier,
+    init_client_state,
+    receive_server_model,
+    surrogate_grad,
+)
+from repro.core.feature_learning import apply_feature_learning, first_layer_path
+from repro.core.federated import (
+    ALGORITHMS,
+    HistoryPoint,
+    RunConfig,
+    SimClient,
+    make_sim_clients,
+    run,
+)
+from repro.core.server import ServerState, aggregate, init_server
+from repro.core.streaming import OnlineStream
+
+__all__ = [
+    "ClientState",
+    "client_step",
+    "dynamic_multiplier",
+    "init_client_state",
+    "receive_server_model",
+    "surrogate_grad",
+    "apply_feature_learning",
+    "first_layer_path",
+    "ALGORITHMS",
+    "HistoryPoint",
+    "RunConfig",
+    "SimClient",
+    "make_sim_clients",
+    "run",
+    "ServerState",
+    "aggregate",
+    "init_server",
+    "OnlineStream",
+]

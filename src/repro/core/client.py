@@ -1,0 +1,131 @@
+"""ASO-Fed client: online local update (paper §4.2, Algorithm 2 lines 9-17).
+
+Per received central model w^t the client computes
+
+    s_k(w_k)   = f_k(w_k) + (lambda/2) ||w_k - w^t||^2          (Eq. 7)
+    grad_zeta  = grad_s - grad_s_pre + h_pre                    (Eq. 8)
+    h          = beta * h + (1 - beta) * v                      (Eq. 9 / line 15)
+    w_k^{t+1}  = w_k^t - r_k^t * eta_bar * grad_zeta            (Eq. 10-11)
+    v          = grad_s (current)                               (line 16)
+
+with the dynamic step multiplier r_k^t = max(1, log(mean past delay))
+(§4.2 "Dynamic Learning Step Size").  All state is an explicit pytree so the
+same code jits on one CPU (paper scale) or pjits over the production mesh
+(LLM scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_axpy, tree_scale, tree_sub, tree_zeros_like
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ClientState:
+    """Everything client k carries between rounds (pytree)."""
+
+    params: Any  # w_k
+    server_params: Any  # latest received w^t
+    h: Any  # Eq.(9) balance slot
+    v: Any  # previous surrogate gradient (grad_s_pre)
+    delay_sum: jnp.ndarray  # sum of past per-round delays d_k^tau
+    rounds: jnp.ndarray  # t (rounds this client participated in)
+    n_samples: jnp.ndarray  # n'_k — current local data size (online growth)
+
+
+def init_client_state(params, n_samples: float = 0.0) -> ClientState:
+    z = tree_zeros_like(params)
+    return ClientState(
+        params=params,
+        server_params=params,
+        h=z,
+        v=jax.tree.map(jnp.copy, z),
+        delay_sum=jnp.zeros((), jnp.float32),
+        rounds=jnp.zeros((), jnp.float32),
+        n_samples=jnp.asarray(n_samples, jnp.float32),
+    )
+
+
+def dynamic_multiplier(delay_sum, rounds, new_delay):
+    """r_k^t = max(1, log(dbar)) with dbar the running mean delay (Eq. 11)."""
+    dbar = (delay_sum + new_delay) / jnp.maximum(rounds + 1.0, 1.0)
+    return jnp.maximum(1.0, jnp.log(jnp.maximum(dbar, 1e-6)))
+
+
+def surrogate_grad(loss_fn: Callable, params, server_params, batch, lam: float):
+    """grad of s_k = f_k + (lam/2)||w_k - w||^2 at w_k (Eq. 7)."""
+
+    def s(p):
+        l, metrics = loss_fn(p, batch)
+        return l, metrics
+
+    (loss, metrics), g = jax.value_and_grad(s, has_aux=True)(params)
+    g = jax.tree.map(
+        lambda gi, wi, si: gi + lam * (wi - si), g, params, server_params
+    )
+    return g, loss, metrics
+
+
+def client_step(
+    loss_fn: Callable,
+    state: ClientState,
+    batch,
+    *,
+    lam: float,
+    beta: float,
+    eta: float,
+    delay,
+    new_samples=0.0,
+    use_dynamic_lr: bool = True,
+):
+    """One ASO-Fed local round.  Returns (new_state, metrics).
+
+    ``delay`` is the observed communication+compute delay for this round
+    (drives the dynamic step size); ``new_samples`` is the online growth of
+    the local dataset before this round.
+    """
+    g, loss, metrics = surrogate_grad(
+        loss_fn, state.params, state.server_params, batch, lam
+    )
+    # Eq. (8): variance-corrected direction
+    zeta = jax.tree.map(lambda gs, vp, hp: gs - vp + hp, g, state.v, state.h)
+    delay = jnp.asarray(delay, jnp.float32)
+    if use_dynamic_lr:
+        r = dynamic_multiplier(state.delay_sum, state.rounds, delay)
+    else:
+        r = jnp.ones((), jnp.float32)
+    step = r * eta
+    new_params = tree_axpy(-step, zeta, state.params)
+    # Eq. (9) / line 15-16: slot updates with the *previous* v
+    new_h = jax.tree.map(lambda hp, vp: beta * hp + (1.0 - beta) * vp,
+                         state.h, state.v)
+    new_state = ClientState(
+        params=new_params,
+        server_params=state.server_params,
+        h=new_h,
+        v=g,
+        delay_sum=state.delay_sum + delay,
+        rounds=state.rounds + 1.0,
+        n_samples=state.n_samples + jnp.asarray(new_samples, jnp.float32),
+    )
+    out = dict(metrics)
+    out.update({"loss": loss, "r_mult": r, "step": step})
+    return new_state, out
+
+
+def receive_server_model(state: ClientState, server_params) -> ClientState:
+    """Client pulls the latest central model (starts its next local round
+    from it, per Fig. 2: clients keep their own copy of w)."""
+    return dataclasses.replace(
+        state, params=server_params, server_params=server_params
+    )
+
+
+def local_delta(state_before: ClientState, state_after: ClientState):
+    """w_k^t - w_k^{t+1} — what the server folds in (Eq. 4)."""
+    return tree_sub(state_before.params, state_after.params)

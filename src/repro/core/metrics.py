@@ -1,0 +1,73 @@
+"""Evaluation metrics matching the paper's Table 5.1 columns."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def mae(pred: np.ndarray, target: np.ndarray) -> float:
+    return float(np.mean(np.abs(pred - target)))
+
+
+def smape(pred: np.ndarray, target: np.ndarray, eps: float = 1e-8) -> float:
+    return float(
+        np.mean(np.abs(pred - target) / (np.abs(pred) + np.abs(target) + eps))
+    )
+
+
+def accuracy(logits: np.ndarray, labels: np.ndarray) -> float:
+    return float(np.mean(np.argmax(logits, -1) == labels))
+
+
+def _prf(logits: np.ndarray, labels: np.ndarray):
+    """Macro precision / recall / F1 over present classes."""
+    pred = np.argmax(logits, -1)
+    classes = np.unique(labels)
+    ps, rs, fs = [], [], []
+    for c in classes:
+        tp = np.sum((pred == c) & (labels == c))
+        fp = np.sum((pred == c) & (labels != c))
+        fn = np.sum((pred != c) & (labels == c))
+        p = tp / max(tp + fp, 1)
+        r = tp / max(tp + fn, 1)
+        f = 2 * p * r / max(p + r, 1e-9)
+        ps.append(p)
+        rs.append(r)
+        fs.append(f)
+    return float(np.mean(ps)), float(np.mean(rs)), float(np.mean(fs))
+
+
+def precision(logits, labels) -> float:
+    return _prf(logits, labels)[0]
+
+
+def recall(logits, labels) -> float:
+    return _prf(logits, labels)[1]
+
+
+def f1(logits, labels) -> float:
+    return _prf(logits, labels)[2]
+
+
+def balanced_accuracy(logits: np.ndarray, labels: np.ndarray) -> float:
+    """Mean per-class recall (the paper's BA)."""
+    pred = np.argmax(logits, -1)
+    accs = []
+    for c in np.unique(labels):
+        m = labels == c
+        accs.append(np.mean(pred[m] == c))
+    return float(np.mean(accs))
+
+
+def classification_report(logits, labels):
+    p, r, f = _prf(logits, labels)
+    return {
+        "f1": f,
+        "precision": p,
+        "recall": r,
+        "ba": balanced_accuracy(logits, labels),
+        "accuracy": accuracy(logits, labels),
+    }
+
+
+def regression_report(pred, target):
+    return {"mae": mae(pred, target), "smape": smape(pred, target)}

@@ -1,0 +1,77 @@
+"""ASO-Fed central server (paper §4.1, Algorithm 2 lines 3-8).
+
+The server folds in ONE client's update the moment it arrives (Eq. 4):
+
+    w^{t+1} = w^t - (n'_k / N') (w_k^t - w_k^{t+1})
+
+then applies the Eq.(5)-(6) feature pass.  Two faithful formulations:
+
+* ``keep_copies=True`` — the paper's memory layout: the server stores the
+  latest copy of every client model and differences it against the upload
+  (paper Fig. 2).  Used at paper scale.
+* ``keep_copies=False`` — delta mode: clients upload w_k^t - w_k^{t+1}
+  directly; mathematically identical, O(1) server memory.  Used at LLM
+  scale where K model copies cannot live in HBM (DESIGN.md §2).
+
+The aggregation arithmetic is fp32 (bf16 would lose the n_k/N-scaled
+deltas) and is jit/pjit-friendly — at LLM scale ``aggregate`` runs under
+the same mesh/shardings as the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_axpy, tree_sub
+from repro.configs.base import ModelConfig
+from repro.core.feature_learning import apply_feature_learning
+
+
+@dataclasses.dataclass
+class ServerState:
+    w: Any  # central model (fp32)
+    copies: Dict[int, Any]  # latest local copies (paper mode)
+    n: Dict[int, float]  # per-client current sample counts n'_k
+    t: int = 0  # global iteration counter
+
+
+def init_server(w, client_ids, n_init: Optional[Dict[int, float]] = None,
+                keep_copies: bool = True) -> ServerState:
+    copies = {k: jax.tree.map(jnp.copy, w) for k in client_ids} if keep_copies else {}
+    n = {k: float(n_init[k]) if n_init else 1.0 for k in client_ids}
+    return ServerState(w=w, copies=copies, n=n, t=0)
+
+
+@jax.jit
+def _fold(w, delta, weight):
+    """w - weight * delta, fp32."""
+    return tree_axpy(-weight, delta, w)
+
+
+def aggregate(
+    state: ServerState,
+    client_id: int,
+    upload,
+    n_k: float,
+    cfg: ModelConfig,
+    *,
+    upload_is_delta: bool = False,
+    feature_learning: bool = True,
+    use_kernel: bool = False,
+) -> ServerState:
+    """One asynchronous global iteration (Eq. 4 + Eq. 5-6)."""
+    state.n[client_id] = float(n_k)
+    N = sum(state.n.values())
+    weight = jnp.asarray(n_k / max(N, 1e-9), jnp.float32)
+    if upload_is_delta:
+        delta = upload
+    else:
+        delta = tree_sub(state.copies[client_id], upload)
+        state.copies[client_id] = upload
+    w = _fold(state.w, delta, weight)
+    if feature_learning:
+        w = apply_feature_learning(w, cfg, use_kernel=use_kernel)
+    return dataclasses.replace(state, w=w, t=state.t + 1)

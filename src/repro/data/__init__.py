@@ -1,0 +1,21 @@
+from repro.data.synthetic import (
+    airquality_like,
+    extrasensory_like,
+    fitrec_like,
+    fmnist_like,
+    DATASETS,
+)
+from repro.data.partition import dirichlet_partition, label_sorted_partition
+from repro.data.lm import synthetic_token_stream, federated_token_clients
+
+__all__ = [
+    "airquality_like",
+    "extrasensory_like",
+    "fitrec_like",
+    "fmnist_like",
+    "DATASETS",
+    "dirichlet_partition",
+    "label_sorted_partition",
+    "synthetic_token_stream",
+    "federated_token_clients",
+]

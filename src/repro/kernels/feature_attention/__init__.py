@@ -1,0 +1,3 @@
+from repro.kernels.feature_attention.ops import feature_attention
+
+__all__ = ["feature_attention"]

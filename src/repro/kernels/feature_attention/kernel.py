@@ -1,0 +1,49 @@
+"""Pallas TPU kernel for the ASO-Fed server feature pass (Eq. 5-6).
+
+One HBM pass: each grid step streams a (block_rows, cols) stripe of the
+weight matrix into VMEM, computes the row-softmax of |w| and rescales in
+registers, and writes the stripe back — fusing the 3 passes (abs+max, sum,
+scale) of the naive lowering.  The op is bandwidth-bound; the win is the
+3x -> 1x HBM traffic reduction on every server aggregation (it runs once per
+*global iteration* on the first-layer weights, so it sits on the
+aggregation critical path).
+
+VMEM budget: block_rows * cols * 4 B;  block_rows is chosen by ops.py so the
+stripe stays under ~2 MB (full rows keep the softmax single-pass).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _feature_attention_kernel(w_ref, o_ref, *, normalize):
+    w = w_ref[...].astype(jnp.float32)  # (block_rows, cols)
+    a = jnp.abs(w)
+    m = jnp.max(a, axis=-1, keepdims=True)
+    e = jnp.exp(a - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    out = e / denom * w
+    if normalize:
+        # restore per-row L2 norm (the paper's "weight normalization")
+        n_in = jnp.sqrt(jnp.sum(w * w, axis=-1, keepdims=True))
+        n_out = jnp.sqrt(jnp.sum(out * out, axis=-1, keepdims=True))
+        out = out * (n_in / jnp.maximum(n_out, 1e-12))
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def feature_attention_kernel(w, *, block_rows: int, normalize: bool = True,
+                             interpret: bool = False):
+    rows, cols = w.shape
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(_feature_attention_kernel, normalize=normalize),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+    )(w)

@@ -1,0 +1,41 @@
+"""Public wrapper for the feature-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.feature_attention.kernel import feature_attention_kernel
+from repro.kernels.feature_attention.ref import feature_attention_ref
+
+_VMEM_STRIPE_BYTES = 2 * 1024 * 1024
+
+
+def _block_rows(cols: int) -> int:
+    rows = max(8, _VMEM_STRIPE_BYTES // max(cols * 4, 1))
+    # round down to a multiple of 8 (TPU sublane)
+    return max(8, (rows // 8) * 8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_kernel", "interpret", "normalize")
+)
+def feature_attention(w, *, use_kernel: bool = False, interpret: bool = False,
+                      normalize: bool = True):
+    """ASO-Fed Eq.(5)-(6): row-softmax of |w| times w (norm-preserving by
+    default; ``normalize=False`` = the literal equation — see ref.py).
+
+    Accepts any rank >= 1: trailing axis is the softmax ("column") axis,
+    leading axes are flattened into rows (conv kernels, stacked layers...).
+    """
+    shape = w.shape
+    w2 = w.reshape(-1, shape[-1])
+    if use_kernel:
+        out = feature_attention_kernel(
+            w2, block_rows=_block_rows(w2.shape[1]), normalize=normalize,
+            interpret=interpret,
+        )
+    else:
+        out = feature_attention_ref(w2, normalize=normalize)
+    return out.reshape(shape)

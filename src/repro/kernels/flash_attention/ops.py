@@ -1,0 +1,34 @@
+"""Public wrapper: model layout (B, S, KV, G, hd) <-> kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "contiguous", "interpret", "use_kernel"),
+)
+def flash_attention(q, k, v, *, q_positions, k_positions, causal=True,
+                    window=0, contiguous=True, interpret=False,
+                    use_kernel=True):
+    """q: (B, S, KV, G, hd); k/v: (B, S_kv, KV, hd).  Returns model layout."""
+    B, Sq, KV, G, hd = q.shape
+    qk = q.transpose(0, 2, 3, 1, 4).reshape(B, KV * G, Sq, hd)
+    kk = k.transpose(0, 2, 1, 3)  # (B, KV, Skv, hd)
+    vk = v.transpose(0, 2, 1, 3)
+    if use_kernel:
+        o = flash_attention_kernel(
+            qk, kk, vk, q_positions, k_positions, causal=causal,
+            window=window, contiguous=contiguous, interpret=interpret,
+        )
+    else:
+        o = flash_attention_ref(
+            qk, kk, vk, q_positions, k_positions, causal=causal, window=window
+        )
+    return o.reshape(B, KV, G, Sq, hd).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash attention: dense masked softmax attention.
+
+Layout matches ops.py: q (B, H, S_q, hd), k/v (B, KV, S_kv, hd) with
+GQA group G = H // KV; masks from absolute positions.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, q_positions, k_positions, *, causal=True,
+                        window=0, scale=None):
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    kx = jnp.repeat(k, G, axis=1)  # (B, H, Skv, hd)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    qp = q_positions[:, None, :, None]
+    kp = k_positions[:, None, None, :]
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.linear_scan.ops import linear_scan
+
+__all__ = ["linear_scan"]

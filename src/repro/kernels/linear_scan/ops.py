@@ -1,0 +1,44 @@
+"""Public wrapper for the linear-scan kernel.
+
+Accepts the model-side layouts:
+  Mamba : a, b (B, S, d_inner, N) — flattened to C = d_inner * N
+  RG-LRU: a, b (B, S, width)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linear_scan.kernel import linear_scan_kernel
+from repro.kernels.linear_scan.ref import linear_scan_ref
+
+_VMEM_TILE_BYTES = 4 * 1024 * 1024
+
+
+def _pick_chunk(S: int, C: int) -> int:
+    chunk = max(8, _VMEM_TILE_BYTES // max(8 * C, 1))
+    chunk = min(256, chunk, S)
+    # power-of-two for the doubling scan
+    p = 1
+    while p * 2 <= chunk:
+        p *= 2
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def linear_scan(a, b, *, use_kernel: bool = True, interpret: bool = False):
+    """Returns (h, h_last) in the input layout."""
+    shape = a.shape
+    B, S = shape[0], shape[1]
+    a2 = a.reshape(B, S, -1)
+    b2 = b.reshape(B, S, -1)
+    C = a2.shape[-1]
+    if use_kernel:
+        h, hlast = linear_scan_kernel(
+            a2, b2, chunk=_pick_chunk(S, C), interpret=interpret
+        )
+    else:
+        h, hlast = linear_scan_ref(a2, b2)
+    return h.reshape(shape), hlast.reshape((B,) + shape[2:])

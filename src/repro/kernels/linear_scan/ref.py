@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the linear recurrence h_t = a_t * h_{t-1} + b_t.
+
+Sequential fp32 scan — the ground truth for both the chunked XLA path
+(models.scan_utils) and the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a, b, h0=None):
+    """a, b: (B, S, C).  Returns (h: (B, S, C), h_last: (B, C))."""
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    B, S, C = a.shape
+    h = jnp.zeros((B, C), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, ab):
+        ai, bi = ab
+        h = ai * h + bi
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h, (jnp.moveaxis(a32, 1, 0),
+                                        jnp.moveaxis(b32, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(b.dtype), h_last.astype(b.dtype)

@@ -1,0 +1,467 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+__doc__ = """Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, with zero array allocation (ShapeDtypeStruct stand-ins).
+
+The compiled artifact is the profile: memory_analysis() proves per-device
+fit, cost_analysis() gives FLOPs/bytes, and the post-SPMD HLO text gives the
+collective schedule — the three §Roofline terms derive from these.
+
+Usage (one combination per process keeps compile memory bounded):
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh pod1 [--fed-state full|none] \
+        [--no-fsdp] [--shard-cache-seq] [--offload-fed-state] \
+        [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all  # loop everything
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, applicable, get_arch, get_shape
+from repro.launch import hlo as hlo_lib
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_batch, abstract_decode_inputs, build_model, make_dist
+from repro.models.spec import abstract_params
+from repro.optim.asofed import asofed_transform
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def resolve_cfg(arch: str, shape_name: str):
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    if shape.name == "long_500k" and cfg.family in ("dense", "vlm", "moe"):
+        # sub-quadratic variant required at 512k (DESIGN.md §4)
+        cfg = cfg.with_sliding_window(8192)
+    return cfg, shape
+
+
+def make_fed_train_step(model, *, lam=1.0, beta=0.001, eta=1e-3,
+                        offload_slots=False, fused_round=False,
+                        microbatch=1):
+    """The paper's client update (Eq. 7-11) as the production train_step.
+
+    offload_slots: the decay slots (h, v) persist in pinned host memory and
+    are staged through HBM inside the step (§Perf kimi ladder).
+    fused_round: single-local-step rounds have w_k == w^t at entry, so the
+    Eq. (7) prox term is identically zero and the server copy needn't be
+    device-resident — the step signature drops it (beyond-paper note).
+    """
+    if offload_slots:
+        from repro.models.spec import param_shardings
+
+        dev_sh = param_shardings(model.spec, model.dist.rules, model.dist.mesh)
+        host_sh = jax.tree.map(
+            lambda s: s.with_memory_kind("pinned_host"), dev_sh
+        )
+
+    def _stage_in(tree):
+        return jax.tree.map(
+            lambda x, s: x if x.size == 0 else jax.device_put(x, s),
+            tree, dev_sh,
+        )
+
+    def _stage_out(tree):
+        return jax.tree.map(
+            lambda x, s: x if x.size == 0 else jax.device_put(x, s),
+            tree, host_sh,
+        )
+
+    def _core(params, server_params, slots, batch, delay):
+        if microbatch > 1:
+            # gradient accumulation: activations/MoE transients scale 1/N
+            def reshape_mb(x):
+                b = x.shape[0]
+                return x.reshape((microbatch, b // microbatch) + x.shape[1:])
+
+            mb = jax.tree.map(reshape_mb, batch)
+
+            def one(acc, b):
+                g_acc, l_acc = acc
+
+                def loss_of(p):
+                    l, m = model.loss(p, b)
+                    return l
+
+                l, g = jax.value_and_grad(loss_of)(params)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(a.dtype), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            z = jax.tree.map(
+                lambda pp: jnp.zeros(pp.shape, jnp.bfloat16), params
+            )
+            (grads, loss), _ = jax.lax.scan(
+                one, (z, jnp.zeros((), jnp.float32)), mb
+            )
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss / microbatch
+        else:
+            def loss_of(p):
+                l, metrics = model.loss(p, batch)
+                return l, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True
+            )(params)
+        if offload_slots:
+            from repro.optim.asofed import AsoFedSlots
+
+            slots = AsoFedSlots(
+                h=_stage_in(slots.h), v=_stage_in(slots.v),
+                delay_sum=slots.delay_sum, rounds=slots.rounds,
+            )
+        updates, new_slots = asofed_transform(
+            grads, slots, params,
+            params if server_params is None else server_params,
+            lam=0.0 if fused_round else lam,
+            beta=beta, eta=eta, delay=delay,
+        )
+        # keep the update in the param dtype: an fp32 round-trip blocks
+        # XLA from fusing grad->update->add into the donated buffer (§Perf)
+        new_params = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), params, updates
+        )
+        if offload_slots:
+            from repro.optim.asofed import AsoFedSlots
+
+            new_slots = AsoFedSlots(
+                h=_stage_out(new_slots.h), v=_stage_out(new_slots.v),
+                delay_sum=new_slots.delay_sum, rounds=new_slots.rounds,
+            )
+        return new_params, new_slots, loss
+
+    if fused_round:
+        def train_step(params, slots, batch, delay):
+            return _core(params, None, slots, batch, delay)
+    else:
+        def train_step(params, server_params, slots, batch, delay):
+            return _core(params, server_params, slots, batch, delay)
+    return train_step
+
+
+def make_plain_train_step(model, *, eta=1e-3):
+    """Baseline (non-federated) SGD step — for §Perf comparisons."""
+
+    def train_step(params, batch):
+        def loss_of(p):
+            l, _ = model.loss(p, batch)
+            return l
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - eta * g.astype(jnp.float32))
+            .astype(p.dtype),
+            params, grads,
+        )
+        return new_params, loss
+
+    return train_step
+
+
+def _abstract_slots(model, offload: bool = False, dtype=jnp.float32,
+                    selective: bool = False):
+    """AsoFedSlots as ShapeDtypeStructs (fp32 by default, param shardings;
+    optionally bf16, host-pinned, and/or *selective* — zero-size slots for
+    routed-expert weights, excluding them from the decay recursion
+    (§Perf kimi ladder; beyond-paper adaptation, DESIGN.md)."""
+    import jax.tree_util as jtu
+
+    from repro.optim.asofed import AsoFedSlots
+
+    p32 = abstract_params(
+        model.spec, dtype, rules=model.dist.rules, mesh=model.dist.mesh
+    )
+    if selective:
+        mesh = model.dist.mesh
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        empty = jax.ShapeDtypeStruct(
+            (0,), dtype, sharding=NamedSharding(mesh, PartitionSpec())
+        )
+
+        def filt(path, leaf):
+            keys = [str(getattr(q, "key", "")) for q in path]
+            if "moe" in keys and any(k in ("w_gate", "w_up", "w_down")
+                                     for k in keys):
+                return empty
+            return leaf
+
+        p32 = jtu.tree_map_with_path(filt, p32)
+    if offload:
+        def to_host(s):
+            return jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=s.sharding.with_memory_kind("pinned_host")
+            )
+
+        p32 = jax.tree.map(to_host, p32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return AsoFedSlots(
+        h=p32, v=jax.tree.map(lambda x: x, p32), delay_sum=scalar, rounds=scalar
+    )
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, *, fed_state="full",
+            fsdp=True, shard_cache_seq=False, offload_fed_state=False,
+            offload_server=False, donate=False, fsdp_pod=False,
+            cache_seq_axis="default", seq_parallel=True,
+            strategy_override=None, scan_impl="xla", fused_round=False,
+            slots_bf16=False, selective_slots=False, microbatch=1,
+            moe_impl="auto", remat="block") -> Dict[str, Any]:
+    cfg, shape = resolve_cfg(arch, shape_name)
+    if strategy_override:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, parallel_strategy=strategy_override)
+    if not applicable(cfg, shape):
+        return {"status": "skipped", "reason": "inapplicable (DESIGN.md §4)",
+                "arch": arch, "shape": shape_name, "mesh": mesh_name}
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    chips = mesh.devices.size
+    fsdp_axes = ("pod", "data") if (fsdp_pod and mesh_name == "pod2") else ("data",)
+    dist_kw = dict(
+        fsdp=fsdp, shard_cache_seq=shard_cache_seq,
+        seq_parallel=seq_parallel, fsdp_axes=fsdp_axes,
+        cache_seq_axis=cache_seq_axis, scan_impl=scan_impl,
+        moe_impl=moe_impl, remat=(remat if shape.kind == "train" else "none"),
+    )
+    if moe_impl == "ep_serve":
+        from repro.models.model import rules_for
+
+        base_rules = rules_for(
+            cfg, mesh, fsdp=fsdp, seq_parallel=seq_parallel,
+            cache_seq_axis=cache_seq_axis,
+        )
+        # serving layout: experts resident over data rows, expert d_ff over
+        # model cols — zero weight movement per decode step
+        dist_kw["rules"] = base_rules.override(
+            "ep_serve", experts=fsdp_axes, expert_ff="model"
+        )
+    dist = make_dist(cfg, mesh, **dist_kw)
+    model = build_model(cfg, dist)
+    t0 = time.perf_counter()
+
+    def _host(tree):
+        def to_host(s):
+            return jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=s.sharding.with_memory_kind("pinned_host"),
+            )
+
+        return jax.tree.map(to_host, tree)
+
+    with mesh:
+        params = model.abstract_params(jnp.bfloat16)
+        if shape.kind == "train":
+            batch = abstract_batch(cfg, shape, dist)
+            if fed_state == "full":
+                step = make_fed_train_step(
+                    model, offload_slots=offload_fed_state,
+                    fused_round=fused_round, microbatch=microbatch,
+                )
+                slots = _abstract_slots(
+                    model, offload=offload_fed_state,
+                    dtype=jnp.bfloat16 if slots_bf16 else jnp.float32,
+                    selective=selective_slots,
+                )
+                delay = jax.ShapeDtypeStruct((), jnp.float32)
+                if fused_round:
+                    donate_kw = {"donate_argnums": (0, 1)} if donate else {}
+                    lowered = jax.jit(step, **donate_kw).lower(
+                        params, slots, batch, delay
+                    )
+                else:
+                    server = model.abstract_params(jnp.bfloat16)
+                    if offload_server:
+                        server = _host(server)
+                    donate_kw = {"donate_argnums": (0, 2)} if donate else {}
+                    lowered = jax.jit(step, **donate_kw).lower(
+                        params, server, slots, batch, delay
+                    )
+            else:
+                step = make_plain_train_step(model)
+                donate_kw = {"donate_argnums": (0,)} if donate else {}
+                lowered = jax.jit(step, **donate_kw).lower(params, batch)
+        elif shape.kind == "prefill":
+            batch = abstract_batch(cfg, shape, dist)
+
+            def prefill_step(p, b):
+                return model.prefill(p, b)
+
+            lowered = jax.jit(prefill_step).lower(params, batch)
+        else:  # decode
+            cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+            dec_in = abstract_decode_inputs(cfg, shape, dist)
+
+            def serve_step(p, c, tokens, cur_index):
+                return model.decode_step(p, c, tokens, cur_index)
+
+            donate_kw = {"donate_argnums": (1,)} if donate else {}
+            lowered = jax.jit(serve_step, **donate_kw).lower(
+                params, cache, dec_in["tokens"], dec_in["cur_index"]
+            )
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    analysis = hlo_lib.analyze(text)
+    terms = rl.derive(analysis, chips, cfg, shape)
+
+    mem_info = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        mem_info[attr] = getattr(mem, attr, None)
+    # HBM-resident bytes while the step runs: inputs + outputs (minus
+    # donation aliasing) + temporaries.  Host-pinned args are excluded by
+    # XLA's accounting already.
+    live = (
+        (mem_info.get("argument_size_in_bytes") or 0)
+        + (mem_info.get("output_size_in_bytes") or 0)
+        - (mem_info.get("alias_size_in_bytes") or 0)
+        + (mem_info.get("temp_size_in_bytes") or 0)
+    )
+    result = {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "kind": shape.kind,
+        "fed_state": fed_state,
+        "fsdp": fsdp,
+        "fsdp_axes": list(fsdp_axes),
+        "shard_cache_seq": shard_cache_seq,
+        "cache_seq_axis": cache_seq_axis,
+        "offload_fed_state": offload_fed_state,
+        "offload_server": offload_server,
+        "donate": donate,
+        "fused_round": fused_round,
+        "slots_bf16": slots_bf16,
+        "selective_slots": selective_slots,
+        "microbatch": microbatch,
+        "seq_parallel": seq_parallel,
+        "strategy": cfg.parallel_strategy,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_info,
+        "live_bytes_per_device": live,
+        "live_gib_per_device": round(live / 2**30, 3),
+        "fits_16g_hbm": bool(live <= 16 * 2**30),
+        "xla_cost_reference": {k: cost.get(k) for k in
+                               ("flops", "bytes accessed", "transcendentals")
+                               if cost and k in cost},
+        "collectives": analysis["per_kind"],
+        "collective_operand_bytes_per_device": analysis["coll_operand_bytes"],
+        "collective_wire_bytes_per_device": analysis["wire_bytes"],
+        "roofline": terms.as_dict(),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=SHAPES + [None])
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--fed-state", default="full", choices=["full", "none"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--shard-cache-seq", action="store_true")
+    ap.add_argument("--offload-fed-state", action="store_true")
+    ap.add_argument("--offload-server", action="store_true")
+    ap.add_argument("--donate", action="store_true")
+    ap.add_argument("--fsdp-pod", action="store_true")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--cache-seq-axis", default="default",
+                    choices=["default", "none", "model", "data"])
+    ap.add_argument("--strategy-override", default=None,
+                    choices=[None, "tp", "seqp"])
+    ap.add_argument("--moe-impl", default="auto")
+    ap.add_argument("--scan-impl", default="xla", choices=["xla", "naive"])
+    ap.add_argument("--fused-round", action="store_true")
+    ap.add_argument("--slots-bf16", action="store_true")
+    ap.add_argument("--selective-slots", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--remat", default="block", choices=["block", "none"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in SHAPES:
+                combos.append((a, s, args.mesh))
+    else:
+        combos.append((args.arch, args.shape, args.mesh))
+
+    failures = 0
+    for arch, shp, mesh_name in combos:
+        tag = f"{arch}_{shp}_{mesh_name}"
+        if args.fed_state != "full":
+            tag += f"_{args.fed_state}"
+        if args.shard_cache_seq:
+            tag += "_csq"
+        if args.offload_fed_state:
+            tag += "_offload"
+        if args.no_fsdp:
+            tag += "_nofsdp"
+        if args.tag:
+            tag += f"_{args.tag}"
+        try:
+            res = run_one(
+                arch, shp, mesh_name, fed_state=args.fed_state,
+                fsdp=not args.no_fsdp, shard_cache_seq=args.shard_cache_seq,
+                offload_fed_state=args.offload_fed_state,
+                offload_server=args.offload_server, donate=args.donate,
+                fsdp_pod=args.fsdp_pod, cache_seq_axis=args.cache_seq_axis,
+                seq_parallel=not args.no_seq_parallel,
+                strategy_override=args.strategy_override,
+                scan_impl=args.scan_impl, fused_round=args.fused_round,
+                slots_bf16=args.slots_bf16,
+                selective_slots=args.selective_slots,
+                microbatch=args.microbatch,
+                moe_impl=args.moe_impl, remat=args.remat,
+            )
+        except Exception as e:  # noqa: BLE001 — record the failure, keep going
+            res = {"status": "error", "arch": arch, "shape": shp,
+                   "mesh": mesh_name, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            failures += 1
+        path = os.path.join(args.out, tag + ".json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+        status = res["status"]
+        extra = ""
+        if status == "ok":
+            r = res["roofline"]
+            extra = (f" dominant={r['dominant']} compute={r['compute_s']:.4f}s"
+                     f" mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s"
+                     f" live={res['live_gib_per_device']}GiB"
+                     f" compile={res['compile_s']}s")
+        elif status == "error":
+            extra = " " + res["error"][:160]
+        print(f"[{status}] {tag}{extra}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

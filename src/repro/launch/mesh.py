@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing never touches jax device
+initialization — the dry-run sets XLA_FLAGS for 512 placeholder devices
+before any jax import; tests and benchmarks see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e: one pod = (data=16, model=16) = 256 chips; two pods add a
+    leading 'pod' axis (512 chips).  'pod' composes with 'data' as the
+    gradient/batch axis; 'model' stays intra-pod (ICI-friendly)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Debug mesh over however many (possibly virtual) devices exist."""
+    n = len(jax.devices())
+    data = max(1, n // model_parallel)
+    return jax.make_mesh((data, model_parallel), ("data", "model"))

@@ -1,0 +1,24 @@
+from repro.models.dist import DistContext, LOCAL
+from repro.models.model import (
+    Model,
+    abstract_batch,
+    abstract_decode_inputs,
+    build_model,
+    build_spec,
+    make_batch,
+    make_dist,
+    rules_for,
+)
+
+__all__ = [
+    "DistContext",
+    "LOCAL",
+    "Model",
+    "abstract_batch",
+    "abstract_decode_inputs",
+    "build_model",
+    "build_spec",
+    "make_batch",
+    "make_dist",
+    "rules_for",
+]

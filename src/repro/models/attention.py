@@ -1,0 +1,460 @@
+"""Attention library: GQA (+causal / sliding-window / local / cross),
+DeepSeek-style MLA, and fixed-shape KV-cache decode.
+
+All functions are written in *global* shapes; distribution is applied by
+``with_sharding_constraint`` (via DistContext) and pjit's SPMD partitioner.
+The blocked online-softmax forward bounds live score memory to one KV block
+(the XLA analogue of the Pallas flash kernel in ``repro.kernels``; the model
+switches to the kernel with ``attention_impl="pallas"``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.dist import DistContext
+from repro.models.layers import mrope, rope
+from repro.models.spec import ParamDef
+
+NEG_INF = -1e30
+
+
+def _pick_block(s_kv: int, target: int = 1024) -> int:
+    b = min(target, s_kv)
+    while s_kv % b and b > 1:
+        b //= 2
+    if b >= 128 or b == s_kv:
+        return max(b, 1)
+    # awkward sequence length (no power-of-2 divisor >= 128): prefer one
+    # big block over hundreds of tiny scan steps
+    if s_kv <= 4 * target:
+        return s_kv
+    for cand in range(min(target, s_kv), 127, -1):
+        if s_kv % cand == 0:
+            return cand
+    return s_kv
+
+
+# ---------------------------------------------------------------------------
+# Blocked online-softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def blocked_attention(
+    q,  # (B, S_q, KV, G, hd)
+    k,  # (B, S_kv, KV, hd)
+    v,  # (B, S_kv, KV, hd)
+    *,
+    q_positions,  # (B, S_q) int32
+    k_positions,  # (B, S_kv) int32 (use a huge sentinel for invalid slots)
+    causal: bool = True,
+    window: int = 0,  # >0: sliding window (keys with q_pos - k_pos >= window masked)
+    scale: Optional[float] = None,
+    block_size: int = 1024,
+):
+    B, S_q, KV, G, hd = q.shape
+    S_kv = k.shape[1]
+    vd = v.shape[-1]  # value dim may differ from key dim (MLA)
+    blk = _pick_block(S_kv, block_size)
+    n_blk = S_kv // blk
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+
+    kb = jnp.moveaxis(k.reshape(B, n_blk, blk, KV, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, n_blk, blk, KV, vd), 1, 0)
+    pb = jnp.moveaxis(k_positions.reshape(B, n_blk, blk), 1, 0)
+
+    acc0 = jnp.zeros((B, S_q, KV, G, vd), jnp.float32)
+    m0 = jnp.full((B, S_q, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S_q, KV, G), jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        # per-KV-block remat: backward recomputes scores/probs from (k,v)
+        # blocks instead of storing every block's (B,Sq,KV,G,blk) residuals
+        acc, m, l = carry
+        ki, vi, pi = inp  # (B, blk, KV, hd), (B, blk)
+        s = jnp.einsum(
+            "bqkgd,btkd->bqkgt", q.astype(jnp.float32), ki.astype(jnp.float32)
+        ) * scale  # (B, S_q, KV, G, blk)
+        qp = q_positions[:, :, None, None, None]  # (B,S_q,1,1,1)
+        kp = pi[:, None, None, None, :]  # (B,1,1,1,blk)
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= kp <= qp
+        if window > 0:
+            mask &= (qp - kp) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgt,btkd->bqkgd", p, vi.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)  # (B, S_q, KV, G, hd)
+
+
+def decode_attention(
+    q,  # (B, 1, KV, G, hd)
+    k_cache,  # (B, S, KV, hd)
+    v_cache,  # (B, S, KV, hd)
+    k_positions,  # (B, S) int32; huge sentinel for unwritten slots
+    q_position,  # (B,) int32
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+    extra_kv=None,  # (k (B,1,KV,hd), v) — current token, deferred cache write
+):
+    """One-token cached attention; softmax over (possibly sharded) cache seq.
+
+    When the cache write is deferred (read-only cache), the current token's
+    K/V enter as an explicit extra column combined in log-space so the
+    result is identical to attending over the updated cache."""
+    B, _, KV, G, hd = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    q32 = q.astype(jnp.float32)
+    s = jnp.einsum("bokgd,btkd->bkgt", q32, k_cache.astype(jnp.float32)) * scale
+    qp = q_position[:, None, None, None]
+    kp = k_positions[:, None, None, :]
+    mask = kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, NEG_INF)
+    if extra_kv is None:
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+        return out[:, None].astype(q.dtype)  # (B, 1, KV, G, hd)
+    # deferred-write path: combine the (possibly seq-sharded) cache term and
+    # the current token's self term in log-space — no concat across the
+    # sharded cache axis (a concat would force a per-layer gather, §Perf)
+    ke, ve = extra_kv
+    se = jnp.einsum("bokgd,bokd->bkgo", q32, ke.astype(jnp.float32)) * scale
+    se = se[..., 0]  # (B, KV, G)
+    m = jnp.maximum(jnp.max(s, axis=-1), se)
+    p_c = jnp.exp(s - m[..., None])  # (B, KV, G, S)
+    p_e = jnp.exp(se - m)  # (B, KV, G)
+    num = jnp.einsum("bkgt,btkd->bkgd", p_c, v_cache.astype(jnp.float32))
+    num = num + p_e[..., None] * ve[:, 0, :, None, :].astype(jnp.float32)
+    den = jnp.sum(p_c, axis=-1) + p_e
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    return out[:, None].astype(q.dtype)  # (B, 1, KV, G, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamDef((d, H, hd), ("fsdp", "heads", "head_dim"), init="fan_in"),
+        "wk": ParamDef((d, KV, hd), ("fsdp", "kv_heads", "head_dim"), init="fan_in"),
+        "wv": ParamDef((d, KV, hd), ("fsdp", "kv_heads", "head_dim"), init="fan_in"),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "fsdp"), init="fan_in"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamDef((H, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = ParamDef((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = ParamDef((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def _project_qkv(params, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, params["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    return q, k, v
+
+
+def _apply_rope(cfg: ModelConfig, q, k, q_pos, k_pos, mrope_pos=None):
+    if cfg.mrope_sections and mrope_pos is not None:
+        q = mrope(q, mrope_pos, cfg.mrope_sections, cfg.rope_theta)
+        k = mrope(k, mrope_pos, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = rope(q, q_pos, cfg.rope_theta)
+        k = rope(k, k_pos, cfg.rope_theta)
+    return q, k
+
+
+def gqa_forward(
+    params,
+    x,  # (B, S, d)
+    cfg: ModelConfig,
+    dist: DistContext,
+    *,
+    positions=None,  # (B, S) absolute positions; default arange
+    mrope_pos=None,  # (3, B, S) for M-RoPE archs
+    causal: bool = True,
+    window: int = 0,
+    use_rope: bool = True,
+    kv_override=None,  # (k, v, k_positions) for cross-attention
+    return_kv: bool = False,
+):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(params, x, cfg)
+    if kv_override is not None:
+        k, v, k_positions = kv_override
+        if use_rope:
+            q = rope(q, positions, cfg.rope_theta) if not cfg.mrope_sections else q
+    else:
+        k_positions = positions
+        if use_rope:
+            q, k = _apply_rope(cfg, q, k, positions, positions, mrope_pos)
+    q = dist.constrain(q, "batch", "seq", "heads", None)
+    k = dist.constrain(k, "batch", None, "kv_heads", None)  # seq gathered (seqp)
+    v = dist.constrain(v, "batch", None, "kv_heads", None)
+
+    if dist.attention_impl in ("pallas", "pallas_interpret") and kv_override is None:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        qh = q.reshape(B, S, KV, G, hd)
+        out = fa_ops.flash_attention(
+            qh,
+            k,
+            v,
+            q_positions=positions,
+            k_positions=k_positions,
+            causal=causal,
+            window=window,
+            interpret=(dist.attention_impl == "pallas_interpret"),
+        )
+    else:
+        qh = q.reshape(B, S, KV, G, hd)
+        out = blocked_attention(
+            qh,
+            k,
+            v,
+            q_positions=positions,
+            k_positions=k_positions,
+            causal=causal,
+            window=window,
+        )
+    out = out.reshape(B, S, H, hd)
+    out = dist.constrain(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    y = dist.constrain(y, "batch", "act_seq", None)
+    if return_kv:
+        return y, (k, v, k_positions)
+    return y
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    W = cfg.sliding_window or cfg.local_window
+    slots = min(max_len, W) if W else max_len
+    return {
+        "k": jnp.zeros((batch, slots, KV, hd), dtype),
+        "v": jnp.zeros((batch, slots, KV, hd), dtype),
+        # absolute position of each slot; sentinel => masked by causal check
+        "pos": jnp.full((batch, slots), jnp.iinfo(jnp.int32).max, jnp.int32),
+    }
+
+
+def gqa_decode(
+    params,
+    x,  # (B, 1, d)
+    cache,
+    cur_index,  # (B,) int32 absolute position of the new token
+    cfg: ModelConfig,
+    dist: DistContext,
+    *,
+    window: int = 0,
+    mrope_pos=None,
+    use_rope: bool = True,
+    defer_write: bool = False,
+):
+    """One-token cached attention.
+
+    defer_write=True: the cache stays READ-ONLY here — the new token's K/V
+    attend via an explicit extra column and are returned for a single
+    stacked scatter after the layer scan.  This lets XLA alias the donated
+    cache buffer instead of double-buffering the scan's cache ys (§Perf
+    'deferred cache commit').
+    """
+    B, _, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    q, k, v = _project_qkv(params, x, cfg)
+    pos = cur_index[:, None]  # (B, 1)
+    if use_rope:
+        q, k = _apply_rope(cfg, q, k, pos, pos, mrope_pos)
+    slots = cache["k"].shape[1]
+    write_idx = cur_index % slots
+    bidx = jnp.arange(B, dtype=jnp.int32)
+    if defer_write:
+        k_cache, v_cache, pos_cache = cache["k"], cache["v"], cache["pos"]
+        extra = (k, v, pos.astype(jnp.int32))
+    else:
+        # scatter the new KV into its slot: O(B) rows written (a dense
+        # one-hot update rewrites the whole cache — 2x cache bytes/step)
+        k_cache = cache["k"].at[bidx, write_idx].set(k[:, 0], mode="drop")
+        v_cache = cache["v"].at[bidx, write_idx].set(v[:, 0], mode="drop")
+        pos_cache = cache["pos"].at[bidx, write_idx].set(
+            cur_index.astype(jnp.int32), mode="drop"
+        )
+        extra = None
+    k_cache = dist.constrain(k_cache, "batch", "cache_seq", "kv_heads", None)
+    v_cache = dist.constrain(v_cache, "batch", "cache_seq", "kv_heads", None)
+    out = decode_attention(
+        q.reshape(B, 1, KV, G, hd),
+        k_cache,
+        v_cache,
+        pos_cache,
+        cur_index,
+        window=window,
+        extra_kv=extra[:2] if extra else None,
+    )
+    out = out.reshape(B, 1, H, hd)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    y = dist.constrain(y, "batch", None, None)
+    if defer_write:
+        return y, (k[:, 0], v[:, 0])  # (B, KV, hd) each — committed later
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq": ParamDef((d, H, dn + dr), ("fsdp", "heads", None), init="fan_in"),
+        "w_dkv": ParamDef((d, r), ("fsdp", None), init="fan_in"),
+        "w_kr": ParamDef((d, dr), ("fsdp", None), init="fan_in"),
+        "kv_norm": ParamDef((r,), (None,), init="ones"),
+        "w_uk": ParamDef((r, H, dn), (None, "heads", None), init="fan_in"),
+        "w_uv": ParamDef((r, H, dv), (None, "heads", None), init="fan_in"),
+        "wo": ParamDef((H, dv, d), ("heads", None, "fsdp"), init="fan_in"),
+    }
+
+
+def _mla_compress(params, x):
+    """x -> (normalized latent c_kv, rotary key k_r)."""
+    c_kv = x @ params["w_dkv"]  # (B, S, r)
+    c32 = c_kv.astype(jnp.float32)
+    c_kv = (
+        c32
+        * jax.lax.rsqrt(jnp.mean(jnp.square(c32), -1, keepdims=True) + 1e-6)
+        * params["kv_norm"].astype(jnp.float32)
+    ).astype(x.dtype)
+    k_r = x @ params["w_kr"]  # (B, S, dr)
+    return c_kv, k_r
+
+
+def mla_forward(
+    params,
+    x,
+    cfg: ModelConfig,
+    dist: DistContext,
+    *,
+    positions=None,
+    causal: bool = True,
+    window: int = 0,
+    return_kv: bool = False,
+):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])  # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_r = _mla_compress(params, x)
+    k_r = rope(k_r[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]  # (B,S,dr)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, params["w_uk"])  # (B,S,H,dn)
+    vh = jnp.einsum("bsr,rhe->bshe", c_kv, params["w_uv"])  # (B,S,H,dv)
+    # assemble full-rank q/k with the shared rotary key broadcast per head
+    qf = jnp.concatenate([q_nope, q_rope], -1)  # (B,S,H,dn+dr)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_r[:, :, None, :], (B, S, H, dr))], -1
+    )
+    qf = dist.constrain(qf, "batch", "seq", "heads", None)
+    kf = dist.constrain(kf, "batch", None, "heads", None)
+    vh = dist.constrain(vh, "batch", None, "heads", None)
+    out = blocked_attention(
+        qf.reshape(B, S, H, 1, dn + dr),
+        kf,
+        vh,
+        q_positions=positions,
+        k_positions=positions,
+        causal=causal,
+        window=window,
+        scale=1.0 / math.sqrt(dn + dr),
+    )
+    out = out.reshape(B, S, H, dv)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    y = dist.constrain(y, "batch", "act_seq", None)
+    if return_kv:
+        return y, (c_kv, k_r, positions)
+    return y
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """MLA decode cache stores the *compressed* latent — the paper's memory win."""
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_r": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, max_len), jnp.iinfo(jnp.int32).max, jnp.int32),
+    }
+
+
+def mla_decode(params, x, cache, cur_index, cfg: ModelConfig, dist: DistContext):
+    """Weight-absorbed MLA decode: attention runs in the latent space."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    pos = cur_index[:, None]
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, pos, cfg.rope_theta)  # (B,1,H,dr)
+    c_new, kr_new = _mla_compress(params, x)
+    kr_new = rope(kr_new[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+    slots = cache["c_kv"].shape[1]
+    write_idx = cur_index % slots
+    bidx = jnp.arange(B, dtype=jnp.int32)
+    c_cache = cache["c_kv"].at[bidx, write_idx].set(c_new[:, 0], mode="drop")
+    kr_cache = cache["k_r"].at[bidx, write_idx].set(kr_new[:, 0], mode="drop")
+    pos_cache = cache["pos"].at[bidx, write_idx].set(
+        cur_index.astype(jnp.int32), mode="drop"
+    )
+    c_cache = dist.constrain(c_cache, "batch", "cache_seq", None)
+    # absorbed query: q_lat (B,1,H,r) = q_nope @ w_uk^T(head-wise)
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, params["w_uk"])
+    s = (
+        jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32), c_cache.astype(jnp.float32))
+        + jnp.einsum("bshe,bte->bhst", q_rope.astype(jnp.float32), kr_cache.astype(jnp.float32))
+    )[:, :, 0] / math.sqrt(dn + dr)  # (B,H,S)
+    mask = pos_cache[:, None, :] <= cur_index[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, c_cache.astype(jnp.float32))  # (B,H,r)
+    out = jnp.einsum("bhr,rhe->bhe", o_lat, params["w_uv"].astype(jnp.float32))
+    y = jnp.einsum("bhe,hed->bd", out.astype(x.dtype), params["wo"])[:, None]
+    new_cache = {"c_kv": c_cache, "k_r": kr_cache, "pos": pos_cache}
+    return dist.constrain(y, "batch", None, None), new_cache

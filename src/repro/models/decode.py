@@ -1,0 +1,595 @@
+"""Serving paths: KV/recurrent-state caches, prefill, one-token decode.
+
+Caches are fixed-shape (production style): attention caches hold
+``min(max_len, window)`` slots with absolute-position tags (circular for
+sliding-window variants); SSM/RG-LRU carry O(1) recurrent state.  All decode
+steps scan over stacked per-layer caches, so the HLO stays depth-independent.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.dist import DistContext
+from repro.models.transformer import (
+    _embed_inputs,
+    _head_matrix,
+    _maybe_remat,
+    _sinusoidal,
+    _whisper_encode,
+)
+
+INT_SENTINEL = np.iinfo(np.int32).max
+
+
+def _attn_slots(cfg: ModelConfig, max_len: int) -> int:
+    W = cfg.sliding_window or 0
+    return min(max_len, W) if W else max_len
+
+
+def _local_slots(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.local_window) if cfg.local_window else max_len
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (concrete zeros + logical axes for the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_cache(cfg, B, slots, dtype, layers):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    lead = (layers,) if layers is not None else ()
+    return {
+        "k": jnp.zeros(lead + (B, slots, KV, hd), dtype),
+        "v": jnp.zeros(lead + (B, slots, KV, hd), dtype),
+        "pos": jnp.full(lead + (B, slots), INT_SENTINEL, jnp.int32),
+    }
+
+
+def _gqa_cache_axes(layers=True):
+    lead = ("layers",) if layers else ()
+    return {
+        "k": lead + ("batch", "cache_seq", "kv_heads", None),
+        "v": lead + ("batch", "cache_seq", "kv_heads", None),
+        "pos": lead + ("batch", "cache_seq"),
+    }
+
+
+def _mla_cache(cfg, B, slots, dtype, layers):
+    lead = (layers,) if layers is not None else ()
+    return {
+        "c_kv": jnp.zeros(lead + (B, slots, cfg.kv_lora_rank), dtype),
+        "k_r": jnp.zeros(lead + (B, slots, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full(lead + (B, slots), INT_SENTINEL, jnp.int32),
+    }
+
+
+def _mla_cache_axes(layers=True):
+    lead = ("layers",) if layers else ()
+    return {
+        "c_kv": lead + ("batch", "cache_seq", None),
+        "k_r": lead + ("batch", "cache_seq", None),
+        "pos": lead + ("batch", "cache_seq"),
+    }
+
+
+def _ssm_state(cfg, B, dtype, layers):
+    lead = (layers,) if layers is not None else ()
+    return {
+        "h": jnp.zeros(lead + (B, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros(lead + (B, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def _ssm_state_axes(layers=True):
+    lead = ("layers",) if layers else ()
+    return {
+        "h": lead + ("batch", "d_inner", None),
+        "conv": lead + ("batch", None, "d_inner"),
+    }
+
+
+def _lru_state(cfg, B, dtype, layers):
+    lead = (layers,) if layers is not None else ()
+    return {
+        "h": jnp.zeros(lead + (B, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros(lead + (B, rglru_lib._CONV_K - 1, cfg.lru_width), dtype),
+    }
+
+
+def _lru_state_axes(layers=True):
+    lead = ("layers",) if layers else ()
+    return {
+        "h": lead + ("batch", "d_inner"),
+        "conv": lead + ("batch", None, "d_inner"),
+    }
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int, dtype=jnp.bfloat16):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"kv": _gqa_cache(cfg, B, _attn_slots(cfg, max_len), dtype, cfg.n_layers)}
+    if fam == "moe":
+        mk = _mla_cache if cfg.use_mla else _gqa_cache
+        slots = _attn_slots(cfg, max_len)
+        c = {"moe_kv": mk(cfg, B, slots, dtype, cfg.n_layers - cfg.first_dense_layers)}
+        if cfg.first_dense_layers:
+            c["dense_kv"] = mk(cfg, B, slots, dtype, cfg.first_dense_layers)
+        return c
+    if fam == "ssm":
+        return {"state": _ssm_state(cfg, B, dtype, cfg.n_layers)}
+    if fam == "hybrid":
+        n_super, rem = divmod(cfg.n_layers, 3)
+        c = {
+            "super": {
+                "r1": _lru_state(cfg, B, dtype, n_super),
+                "r2": _lru_state(cfg, B, dtype, n_super),
+                "a": _gqa_cache(cfg, B, _local_slots(cfg, max_len), dtype, n_super),
+            }
+        }
+        if rem:
+            c["tail"] = _lru_state(cfg, B, dtype, rem)
+        return c
+    if fam == "audio":
+        F = cfg.encoder_frames
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        Ld = cfg.n_layers
+        return {
+            "self": _gqa_cache(cfg, B, max_len, dtype, Ld),
+            "cross_k": jnp.zeros((Ld, B, F, KV, hd), dtype),
+            "cross_v": jnp.zeros((Ld, B, F, KV, hd), dtype),
+        }
+    raise ValueError(fam)
+
+
+def cache_axes(cfg: ModelConfig):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"kv": _gqa_cache_axes()}
+    if fam == "moe":
+        ax = _mla_cache_axes if cfg.use_mla else _gqa_cache_axes
+        c = {"moe_kv": ax()}
+        if cfg.first_dense_layers:
+            c["dense_kv"] = ax()
+        return c
+    if fam == "ssm":
+        return {"state": _ssm_state_axes()}
+    if fam == "hybrid":
+        n_super, rem = divmod(cfg.n_layers, 3)
+        c = {
+            "super": {
+                "r1": _lru_state_axes(),
+                "r2": _lru_state_axes(),
+                "a": _gqa_cache_axes(),
+            }
+        }
+        if rem:
+            c["tail"] = _lru_state_axes()
+        return c
+    if fam == "audio":
+        return {
+            "self": _gqa_cache_axes(),
+            "cross_k": ("layers", "batch", None, "kv_heads", None),
+            "cross_v": ("layers", "batch", None, "kv_heads", None),
+        }
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Prefill helpers
+# ---------------------------------------------------------------------------
+
+
+def _kv_to_cache(k, v, positions, slots: int):
+    """Pack full-sequence K/V (B,S,KV,hd) into a slot cache (last ``slots``)."""
+    B, S = k.shape[:2]
+    if S <= slots:
+        pad = slots - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pc = jnp.pad(
+            positions.astype(jnp.int32),
+            ((0, 0), (0, pad)),
+            constant_values=INT_SENTINEL,
+        )
+        return {"k": kc, "v": vc, "pos": pc}
+    perm = np.arange(S - slots, S) % slots  # static permutation
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(slots)
+    return {
+        "k": k[:, S - slots :][:, inv],
+        "v": v[:, S - slots :][:, inv],
+        "pos": positions[:, S - slots :][:, inv].astype(jnp.int32),
+    }
+
+
+def _latent_to_cache(c_kv, k_r, positions, slots: int):
+    B, S = c_kv.shape[:2]
+    if S <= slots:
+        pad = slots - S
+        return {
+            "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+            "k_r": jnp.pad(k_r, ((0, 0), (0, pad), (0, 0))),
+            "pos": jnp.pad(
+                positions.astype(jnp.int32), ((0, 0), (0, pad)),
+                constant_values=INT_SENTINEL,
+            ),
+        }
+    perm = np.arange(S - slots, S) % slots
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(slots)
+    return {
+        "c_kv": c_kv[:, S - slots :][:, inv],
+        "k_r": k_r[:, S - slots :][:, inv],
+        "pos": positions[:, S - slots :][:, inv].astype(jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Prefill (forward + cache capture) per family
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, dist: DistContext, batch,
+            max_len: int | None = None):
+    """Returns (last-token logits (B, V), cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    fam = cfg.family
+    x, positions, mrope_pos = (None, None, None)
+    if fam != "audio":
+        x, positions, mrope_pos = _embed_inputs(params, cfg, batch, dist)
+
+    if fam in ("dense", "vlm"):
+        slots = _attn_slots(cfg, max_len)
+
+        def body(carry, p):
+            h = carry
+            hh = L.apply_norm(cfg.norm, p["ln1"], h)
+            a, (k, v, kpos) = attn.gqa_forward(
+                p["attn"], hh, cfg, dist, positions=positions,
+                mrope_pos=mrope_pos, causal=True, window=cfg.sliding_window,
+                return_kv=True,
+            )
+            h = h + a
+            hh = L.apply_norm(cfg.norm, p["ln2"], h)
+            h = h + L.mlp(p["mlp"], hh, cfg.act, dist.constrain)
+            h = dist.constrain(h, "batch", "act_seq", None)
+            return h, _kv_to_cache(k, v, kpos, slots)
+
+        x, kv = jax.lax.scan(_maybe_remat(body, dist), x, params["blocks"])
+        cache = {"kv": kv}
+    elif fam == "moe":
+        slots = _attn_slots(cfg, max_len)
+        cache = {}
+
+        def attn_and_cache(p, h):
+            hh = L.apply_norm(cfg.norm, p["ln1"], h)
+            if cfg.use_mla:
+                a, (c_kv, k_r, kpos) = attn.mla_forward(
+                    p["attn"], hh, cfg, dist, positions=positions, return_kv=True
+                )
+                entry = _latent_to_cache(c_kv, k_r, kpos, slots)
+            else:
+                a, (k, v, kpos) = attn.gqa_forward(
+                    p["attn"], hh, cfg, dist, positions=positions,
+                    causal=True, return_kv=True,
+                )
+                entry = _kv_to_cache(k, v, kpos, slots)
+            return h + a, entry
+
+        if cfg.first_dense_layers:
+
+            def dbody(carry, p):
+                h, entry = attn_and_cache(p, carry)
+                hh = L.apply_norm(cfg.norm, p["ln2"], h)
+                h = h + L.mlp(p["mlp"], hh, cfg.act, dist.constrain)
+                return dist.constrain(h, "batch", "act_seq", None), entry
+
+            x, dkv = jax.lax.scan(
+                _maybe_remat(dbody, dist), x, params["dense_blocks"]
+            )
+            cache["dense_kv"] = dkv
+
+        def mbody(carry, p):
+            h, entry = attn_and_cache(p, carry)
+            hh = L.apply_norm(cfg.norm, p["ln2"], h)
+            y, _ = moe_lib.moe_forward(p["moe"], hh, cfg, dist)
+            if cfg.n_shared_experts:
+                y = y + L.mlp(p["shared"], hh, cfg.act, dist.constrain)
+            h = h + y
+            return dist.constrain(h, "batch", "act_seq", None), entry
+
+        x, mkv = jax.lax.scan(_maybe_remat(mbody, dist), x, params["moe_blocks"])
+        cache["moe_kv"] = mkv
+    elif fam == "ssm":
+
+        def body(carry, p):
+            h = carry
+            hh = L.apply_norm(cfg.norm, p["ln"], h)
+            out, st = ssm_lib.mamba_forward(p["mamba"], hh, cfg, dist,
+                                            return_state=True)
+            h = dist.constrain(h + out, "batch", "act_seq", None)
+            return h, st
+
+        x, st = jax.lax.scan(_maybe_remat(body, dist), x, params["blocks"])
+        cache = {"state": st}
+    elif fam == "hybrid":
+        slots = _local_slots(cfg, max_len)
+
+        def sub(p, h, kind):
+            hh = L.apply_norm(cfg.norm, p["ln1"], h)
+            if kind == "rglru":
+                m, st = rglru_lib.rglru_forward(p["mix"], hh, cfg, dist,
+                                                return_state=True)
+                entry = st
+            else:
+                m, (k, v, kpos) = attn.gqa_forward(
+                    p["mix"], hh, cfg, dist, causal=True,
+                    window=cfg.local_window, return_kv=True,
+                )
+                entry = _kv_to_cache(k, v, kpos, slots)
+            h = h + m
+            hh = L.apply_norm(cfg.norm, p["ln2"], h)
+            h = h + L.mlp(p["mlp"], hh, cfg.act, dist.constrain)
+            return dist.constrain(h, "batch", "act_seq", None), entry
+
+        def body(carry, p):
+            h = carry
+            h, s1 = sub(p["r1"], h, "rglru")
+            h, s2 = sub(p["r2"], h, "rglru")
+            h, sa = sub(p["a"], h, "attn")
+            return h, {"r1": s1, "r2": s2, "a": sa}
+
+        x, sup = jax.lax.scan(_maybe_remat(body, dist), x, params["superblocks"])
+        cache = {"super": sup}
+        if "tail" in params:
+
+            def tbody(carry, p):
+                h, st = sub(p, carry, "rglru")
+                return h, st
+
+            x, tail = jax.lax.scan(_maybe_remat(tbody, dist), x, params["tail"])
+            cache["tail"] = tail
+    elif fam == "audio":
+        enc = _whisper_encode(params, cfg, dist, batch["frames"])
+        x = L.embed(params["embed"], tokens)
+        x = x + _sinusoidal(S, cfg.d_model, jnp.float32)[None].astype(x.dtype)
+        x = dist.constrain(x, "batch", "seq", None)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        F = enc.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+
+        def body(carry, p):
+            h = carry
+            hh = L.apply_norm(cfg.norm, p["ln1"], h)
+            a, (k, v, kpos) = attn.gqa_forward(
+                p["self"], hh, cfg, dist, positions=positions, causal=True,
+                use_rope=False, return_kv=True,
+            )
+            h = h + a
+            hh = L.apply_norm(cfg.norm, p["lnx"], h)
+            kx = jnp.einsum("bsd,dke->bske", enc, p["cross"]["wk"])
+            vx = jnp.einsum("bsd,dke->bske", enc, p["cross"]["wv"])
+            if cfg.qkv_bias:
+                kx = kx + p["cross"]["bk"].astype(kx.dtype)
+                vx = vx + p["cross"]["bv"].astype(vx.dtype)
+            h = h + attn.gqa_forward(
+                p["cross"], hh, cfg, dist, causal=False, use_rope=False,
+                kv_override=(kx, vx, enc_pos),
+            )
+            hh = L.apply_norm(cfg.norm, p["ln2"], h)
+            h = h + L.mlp(p["mlp"], hh, cfg.act, dist.constrain)
+            h = dist.constrain(h, "batch", "act_seq", None)
+            return h, (_kv_to_cache(k, v, kpos, max_len), kx, vx)
+
+        x, (skv, ck, cv) = jax.lax.scan(
+            _maybe_remat(body, dist), x, params["dec_blocks"]
+        )
+        cache = {"self": skv, "cross_k": ck, "cross_v": cv}
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    last = x[:, -1]
+    logits = last @ _head_matrix(params, cfg)
+    return logits, cache
+
+
+def _commit_kv(kv_cache, k_new, v_new, cur_index):
+    """Deferred cache commit: one stacked scatter for all layers.
+
+    Keeping the cache read-only through the layer scan lets XLA alias the
+    donated cache buffers instead of double-buffering scan ys (§Perf).
+    k_new/v_new: (L, B, KV, hd)."""
+    Lyr, B = k_new.shape[0], k_new.shape[1]
+    slots = kv_cache["k"].shape[2]
+    write_idx = (cur_index % slots)[None, :].astype(jnp.int32)  # (1, B)
+    lidx = jnp.arange(Lyr, dtype=jnp.int32)[:, None]
+    bidx = jnp.arange(B, dtype=jnp.int32)[None, :]
+    return {
+        "k": kv_cache["k"].at[lidx, bidx, write_idx].set(k_new, mode="drop"),
+        "v": kv_cache["v"].at[lidx, bidx, write_idx].set(v_new, mode="drop"),
+        "pos": kv_cache["pos"].at[lidx, bidx, write_idx].set(
+            jnp.broadcast_to(cur_index[None, :], (Lyr, B)).astype(jnp.int32),
+            mode="drop",
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# One-token decode per family
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ModelConfig, dist: DistContext, cache,
+                tokens, cur_index):
+    """tokens (B,1) int32, cur_index (B,) int32 -> (logits (B,V), cache')."""
+    fam = cfg.family
+    x = L.embed(params["embed"], tokens)  # (B,1,d)
+    B = tokens.shape[0]
+    mrope_pos = None
+    if fam == "vlm":
+        t = (cur_index - cfg.n_patches + 1)[None, :, None]  # (1,B,1)
+        mrope_pos = jnp.broadcast_to(t, (3, B, 1)).astype(jnp.int32)
+    if fam == "audio":
+        x = x + jnp.take(
+            _sinusoidal(cache["self"]["k"].shape[2], cfg.d_model, jnp.float32),
+            cur_index, axis=0, mode="clip",
+        )[:, None].astype(x.dtype)
+    x = dist.constrain(x, "batch", None, None)
+
+    if fam in ("dense", "vlm"):
+
+        def body(h, pc):
+            p, c = pc
+            hh = L.apply_norm(cfg.norm, p["ln1"], h)
+            a, kv_new = attn.gqa_decode(
+                p["attn"], hh, c, cur_index, cfg, dist,
+                window=cfg.sliding_window, mrope_pos=mrope_pos,
+                defer_write=True,
+            )
+            h = h + a
+            hh = L.apply_norm(cfg.norm, p["ln2"], h)
+            h = h + L.mlp(p["mlp"], hh, cfg.act, dist.constrain)
+            return h, kv_new
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["kv"])
+        )
+        new_cache = {"kv": _commit_kv(cache["kv"], k_new, v_new, cur_index)}
+    elif fam == "moe":
+        new_cache = {}
+
+        defer = not cfg.use_mla  # GQA MoE caches are huge; MLA latent is small
+
+        def attn_dec(p, h, c):
+            hh = L.apply_norm(cfg.norm, p["ln1"], h)
+            if cfg.use_mla:
+                a, c_new = attn.mla_decode(p["attn"], hh, c, cur_index, cfg, dist)
+            else:
+                a, c_new = attn.gqa_decode(p["attn"], hh, c, cur_index, cfg, dist,
+                                           defer_write=defer)
+            return h + a, c_new
+
+        if cfg.first_dense_layers:
+
+            def dbody(h, pc):
+                p, c = pc
+                h, c_new = attn_dec(p, h, c)
+                hh = L.apply_norm(cfg.norm, p["ln2"], h)
+                h = h + L.mlp(p["mlp"], hh, cfg.act, dist.constrain)
+                return h, c_new
+
+            x, dkv = jax.lax.scan(
+                dbody, x, (params["dense_blocks"], cache["dense_kv"])
+            )
+            if defer:
+                dkv = _commit_kv(cache["dense_kv"], dkv[0], dkv[1], cur_index)
+            new_cache["dense_kv"] = dkv
+
+        def mbody(h, pc):
+            p, c = pc
+            h, c_new = attn_dec(p, h, c)
+            hh = L.apply_norm(cfg.norm, p["ln2"], h)
+            y, _ = moe_lib.moe_forward(p["moe"], hh, cfg, dist)
+            if cfg.n_shared_experts:
+                y = y + L.mlp(p["shared"], hh, cfg.act, dist.constrain)
+            return h + y, c_new
+
+        x, mkv = jax.lax.scan(mbody, x, (params["moe_blocks"], cache["moe_kv"]))
+        if defer:
+            mkv = _commit_kv(cache["moe_kv"], mkv[0], mkv[1], cur_index)
+        new_cache["moe_kv"] = mkv
+    elif fam == "ssm":
+
+        def body(h, pc):
+            p, c = pc
+            hh = L.apply_norm(cfg.norm, p["ln"], h)
+            out, c_new = ssm_lib.mamba_decode(p["mamba"], hh, c, cfg, dist)
+            return h + out, c_new
+
+        x, st = jax.lax.scan(body, x, (params["blocks"], cache["state"]))
+        new_cache = {"state": st}
+    elif fam == "hybrid":
+
+        def sub_dec(p, h, c, kind):
+            hh = L.apply_norm(cfg.norm, p["ln1"], h)
+            if kind == "rglru":
+                m, c_new = rglru_lib.rglru_decode(p["mix"], hh, c, cfg, dist)
+            else:
+                m, c_new = attn.gqa_decode(
+                    p["mix"], hh, c, cur_index, cfg, dist, window=cfg.local_window
+                )
+            h = h + m
+            hh = L.apply_norm(cfg.norm, p["ln2"], h)
+            h = h + L.mlp(p["mlp"], hh, cfg.act, dist.constrain)
+            return h, c_new
+
+        def body(h, pc):
+            p, c = pc
+            h, s1 = sub_dec(p["r1"], h, c["r1"], "rglru")
+            h, s2 = sub_dec(p["r2"], h, c["r2"], "rglru")
+            h, sa = sub_dec(p["a"], h, c["a"], "attn")
+            return h, {"r1": s1, "r2": s2, "a": sa}
+
+        x, sup = jax.lax.scan(body, x, (params["superblocks"], cache["super"]))
+        new_cache = {"super": sup}
+        if "tail" in params:
+
+            def tbody(h, pc):
+                p, c = pc
+                return sub_dec(p, h, c, "rglru")
+
+            x, tail = jax.lax.scan(tbody, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = tail
+    elif fam == "audio":
+        F = cache["cross_k"].shape[2]
+        enc_pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+        far = jnp.full((B,), INT_SENTINEL - 1, jnp.int32)
+
+        def body(h, pc):
+            p, sc, ck, cv = pc
+            hh = L.apply_norm(cfg.norm, p["ln1"], h)
+            a, sc_new = attn.gqa_decode(
+                p["self"], hh, sc, cur_index, cfg, dist, use_rope=False
+            )
+            h = h + a
+            hh = L.apply_norm(cfg.norm, p["lnx"], h)
+            q = jnp.einsum("bsd,dhe->bshe", hh, p["cross"]["wq"])
+            if cfg.qkv_bias:
+                q = q + p["cross"]["bq"].astype(q.dtype)
+            KV, hd, H = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+            out = attn.decode_attention(
+                q.reshape(B, 1, KV, H // KV, hd), ck, cv, enc_pos, far
+            ).reshape(B, 1, H, hd)
+            h = h + jnp.einsum("bshe,hed->bsd", out, p["cross"]["wo"])
+            hh = L.apply_norm(cfg.norm, p["ln2"], h)
+            h = h + L.mlp(p["mlp"], hh, cfg.act, dist.constrain)
+            return h, sc_new
+
+        x, skv = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["self"],
+                      cache["cross_k"], cache["cross_v"]),
+        )
+        new_cache = {
+            "self": skv,
+            "cross_k": cache["cross_k"],
+            "cross_v": cache["cross_v"],
+        }
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = x[:, 0] @ _head_matrix(params, cfg)
+    return logits, new_cache

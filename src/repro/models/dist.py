@@ -1,0 +1,82 @@
+"""Distribution context threaded through model code.
+
+Holds the mesh + rules + implementation toggles.  ``mesh=None`` gives the
+single-device path used by smoke tests and the paper-scale experiments; the
+same model code then contains no collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.sharding import ShardingRules, get_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Optional[Mesh] = None
+    rules: ShardingRules = dataclasses.field(default_factory=lambda: get_rules("tp"))
+    fsdp: bool = False
+    moe_impl: str = "auto"  # auto | dense | ep_psum
+    attention_impl: str = "xla"  # xla | pallas | pallas_interpret
+    scan_impl: str = "xla"  # xla | pallas | pallas_interpret (SSM/LRU scans)
+    remat: str = "block"  # none | block
+    # long-context decode: shard the KV window over the data axis and combine
+    # partial attention with an LSE-weighted psum (beyond-paper optimization).
+    shard_cache_seq: bool = False
+    # host-offload the ASO-Fed decay slots (h, v) -- beyond-paper memory fix.
+    offload_fed_state: bool = False
+
+    @property
+    def model_axis(self) -> Optional[str]:
+        if self.mesh is not None and "model" in self.mesh.axis_names:
+            return "model"
+        return None
+
+    @property
+    def model_axis_size(self) -> int:
+        if self.mesh is None or "model" not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape["model"]
+
+    @property
+    def data_axis_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in ("pod", "data"):
+            if a in self.mesh.axis_names:
+                n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def data_axes(self):
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    def resolve_moe_impl(self) -> str:
+        if self.moe_impl != "auto":
+            return self.moe_impl
+        return "ep_psum" if self.model_axis_size > 1 else "dense"
+
+    def constrain(self, x, *logical_axes):
+        """with_sharding_constraint via logical axis names (no-op off-mesh).
+        Shape-aware: drops mesh axes the dim can't divide (batch=1 decode)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self.rules.sharding_for_shape(x.shape, logical_axes, self.mesh)
+        )
+
+    def pspec(self, *logical_axes) -> P:
+        if self.mesh is None:
+            return P()
+        return self.rules.pspec(logical_axes, self.mesh)
+
+
+# Convenience: the no-mesh context for smoke tests / paper models.
+LOCAL = DistContext(mesh=None, remat="none")

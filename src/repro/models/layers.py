@@ -1,0 +1,234 @@
+"""Core layer library: norms, activations, MLPs, embeddings, RoPE / M-RoPE.
+
+Everything is a pure function over explicit parameter dicts; parameter specs
+(shape + logical axes) are declared by the ``*_spec`` companions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamDef
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int, prefix: Tuple[str, ...] = ()):
+    return {"scale": ParamDef((d,), ("d_model",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_spec(d: int):
+    return {
+        "scale": ParamDef((d,), ("d_model",), init="ones"),
+        "bias": ParamDef((d,), ("d_model",), init="zeros"),
+    }
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def norm_spec(kind: str, d: int):
+    return rmsnorm_spec(d) if kind == "rmsnorm" else layernorm_spec(d)
+
+
+def apply_norm(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU gated / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(d: int, f: int, act: str, ffn_axis: str = "d_ff"):
+    """Gated (swiglu) or plain (gelu) MLP. Logical axes: fsdp rows x ffn cols."""
+    if act == "swiglu":
+        return {
+            "w_gate": ParamDef((d, f), ("fsdp", ffn_axis), init="fan_in"),
+            "w_up": ParamDef((d, f), ("fsdp", ffn_axis), init="fan_in"),
+            "w_down": ParamDef((f, d), (ffn_axis, "fsdp"), init="fan_in"),
+        }
+    return {
+        "w_up": ParamDef((d, f), ("fsdp", ffn_axis), init="fan_in"),
+        "b_up": ParamDef((f,), (ffn_axis,), init="zeros"),
+        "w_down": ParamDef((f, d), (ffn_axis, "fsdp"), init="fan_in"),
+        "b_down": ParamDef((d,), (None,), init="zeros"),
+    }
+
+
+def mlp(params, x, act: str, constrain=None):
+    def pin(h):
+        # TP: d_ff-sharded (seq gathered); seqp: seq-sharded, d_ff local
+        return constrain(h, "batch", "seq", "d_ff") if constrain else h
+
+    if act == "swiglu":
+        g = pin(x @ params["w_gate"])
+        u = pin(x @ params["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return h @ params["w_down"]
+    h = pin(x @ params["w_up"]) + params["b_up"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_down"] + params["b_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(vocab: int, d: int):
+    return {"table": ParamDef((vocab, d), ("vocab", "fsdp"), init="normal")}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def lm_head_spec(d: int, vocab: int):
+    return {"w": ParamDef((d, vocab), ("fsdp", "vocab"), init="fan_in")}
+
+
+def lm_head(params, x, tied_table=None):
+    if tied_table is not None:
+        return x @ tied_table.T
+    return x @ params["w"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Apply rotary embedding.
+
+    x: (..., S, H, hd) ; positions: broadcastable to (..., S) int32.
+    Rotates pairs (x[..., :half], x[..., half:]) -- llama convention.
+    """
+    head_dim = x.shape[-1]
+    freqs = _rope_freqs(head_dim, theta)  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope(x, positions_thw, sections: Tuple[int, int, int], theta: float):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (..., S, H, hd); positions_thw: (3, ..., S) int32 -- temporal, height,
+    width position ids.  ``sections`` partitions the hd/2 frequency channels
+    into (t, h, w) groups; each group rotates by its own position stream.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = _rope_freqs(head_dim, theta)  # (half,)
+    # Build per-channel angle by selecting the position stream per section.
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )  # (half,) in {0,1,2}
+    pos = jnp.stack(
+        [positions_thw[i] for i in range(3)], axis=0
+    )  # (3, ..., S)
+    # angle[..., S, half] = pos[sec_id[c]][..., S] * freqs[c]
+    pos_per_chan = jnp.take(pos, sec_id, axis=0)  # (half, ..., S)
+    pos_per_chan = jnp.moveaxis(pos_per_chan, 0, -1)  # (..., S, half)
+    ang = pos_per_chan.astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_positions(n_patches: int, grid_hw: int, seq_len: int, batch: int):
+    """Static Qwen2-VL position layout: one image prefix of ``n_patches``
+    (grid_hw x grid_hw), then text.  Returns (3, B, S) int32."""
+    idx = jnp.arange(seq_len)
+    is_img = idx < n_patches
+    t = jnp.where(is_img, 0, idx - n_patches + 1)
+    h = jnp.where(is_img, idx // grid_hw, t)
+    w = jnp.where(is_img, idx % grid_hw, t)
+    pos = jnp.stack([t, h, w], axis=0)  # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq_len)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Loss: chunked softmax cross-entropy (avoids materializing (B,S,V) fp32)
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Plain fp32 CE. logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_softmax_xent(x, head_w, labels, n_chunks: int = 8, mask=None,
+                         constrain=None):
+    """CE over seq chunks: logits for each chunk are formed and reduced
+    before the next chunk, bounding live logits memory by S/n_chunks.
+
+    ``constrain(x, *logical_axes)`` re-pins the sharding after the chunking
+    reshape (a bare reshape of a seq-sharded tensor would otherwise gather
+    the sequence axis and blow live memory up by the seq-parallel factor).
+    """
+    B, S, D = x.shape
+    if S % n_chunks:
+        n_chunks = 1
+    xc = x.reshape(B, n_chunks, S // n_chunks, D).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+    if constrain is not None:
+        xc = constrain(xc, None, "batch", "ce_seq", None)
+        lc = constrain(lc, None, "batch", "ce_seq")
+    if mask is not None:
+        mc = mask.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+    else:
+        mc = jnp.ones_like(lc, jnp.float32)
+
+    def body(carry, inp):
+        xi, li, mi = inp
+        logits = (xi @ head_w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mi
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mi)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xc, lc, mc)
+    )
+    return tot / jnp.maximum(cnt, 1.0)

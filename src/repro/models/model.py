@@ -1,0 +1,261 @@
+"""Public model facade: build any assigned architecture as a functional
+``Model`` (init / loss / logits / prefill / decode), plus the abstract
+batch / param / cache trees used by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import ShardingRules, get_rules
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import decode as dec
+from repro.models import paper_nets as pn
+from repro.models import transformer as tf
+from repro.models.dist import DistContext, LOCAL
+from repro.models.spec import (
+    abstract_params,
+    init_params,
+    logical_axes,
+    param_shardings,
+    validate_divisibility,
+)
+
+
+# ---------------------------------------------------------------------------
+# Per-arch sharding rules
+# ---------------------------------------------------------------------------
+
+
+def rules_for(cfg: ModelConfig, mesh, *, fsdp: bool = True,
+              seq_parallel: bool = True,
+              fsdp_axes=("data",),
+              cache_seq_axis: str = "default",
+              shard_cache_seq_over_data: bool = False) -> ShardingRules:
+    """Derive the arch-appropriate rule table (DESIGN.md §5)."""
+    base = get_rules("seqp" if cfg.parallel_strategy == "seqp" else "tp")
+    rules = dict(base.rules)
+    if fsdp:
+        rules["fsdp"] = tuple(fsdp_axes) if len(fsdp_axes) > 1 else fsdp_axes[0]
+    if not seq_parallel and cfg.parallel_strategy == "tp":
+        rules["act_seq"] = None  # naive baseline: replicated residual stream
+    if cache_seq_axis != "default":
+        rules["cache_seq"] = None if cache_seq_axis == "none" else cache_seq_axis
+    if mesh is not None and "model" in mesh.axis_names:
+        m = mesh.shape["model"]
+        # GQA archs with kv_heads < TP width: replicate KV heads (Megatron
+        # convention); MLA ignores kv_heads anyway.
+        if cfg.n_kv_heads and cfg.n_kv_heads % m:
+            rules["kv_heads"] = None
+        if cfg.n_heads and cfg.n_heads % m and cfg.parallel_strategy == "tp":
+            rules["heads"] = None
+        if cfg.vocab_size and cfg.vocab_size % m:
+            rules["vocab"] = None
+    if shard_cache_seq_over_data:
+        rules["cache_seq"] = "data"
+    return ShardingRules(rules=rules, name=f"{cfg.name}:{base.name}")
+
+
+def make_dist(cfg: ModelConfig, mesh=None, *, fsdp: bool = True,
+              seq_parallel: bool = True, fsdp_axes=("data",),
+              cache_seq_axis: str = "default", **overrides) -> DistContext:
+    shard_cs = overrides.pop("shard_cache_seq", False)
+    rules = overrides.pop(
+        "rules",
+        rules_for(cfg, mesh, fsdp=fsdp, seq_parallel=seq_parallel,
+                  fsdp_axes=fsdp_axes, cache_seq_axis=cache_seq_axis,
+                  shard_cache_seq_over_data=shard_cs),
+    )
+    return DistContext(
+        mesh=mesh, rules=rules, fsdp=fsdp, shard_cache_seq=shard_cs, **overrides
+    )
+
+
+# ---------------------------------------------------------------------------
+# Model facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    dist: DistContext
+    spec: Dict[str, Any]
+
+    # -- parameters -----------------------------------------------------
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.spec, key, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        if self.dist.mesh is not None:
+            return abstract_params(
+                self.spec, dtype, rules=self.dist.rules, mesh=self.dist.mesh
+            )
+        return abstract_params(self.spec, dtype)
+
+    def param_axes(self):
+        return logical_axes(self.spec)
+
+    def param_shardings(self):
+        return param_shardings(self.spec, self.dist.rules, self.dist.mesh)
+
+    def validate(self):
+        if self.dist.mesh is not None:
+            validate_divisibility(self.spec, self.dist.rules, self.dist.mesh)
+
+    # -- training -------------------------------------------------------
+    def loss(self, params, batch):
+        if self.cfg.family == "lstm":
+            pred = pn.lstm_forward(params, batch["x"])
+            if batch.get("task", "regression") == "classification":
+                l = pn.classification_loss(pred, batch["y"])
+            else:
+                l = pn.regression_loss(pred, batch["y"])
+            return l, {"loss": l}
+        if self.cfg.family == "cnn":
+            logits = pn.cnn_forward(params, batch["x"])
+            l = pn.classification_loss(logits, batch["y"])
+            return l, {"loss": l}
+        return tf.loss_fn(params, self.cfg, self.dist, batch)
+
+    def predict(self, params, batch):
+        if self.cfg.family == "lstm":
+            return pn.lstm_forward(params, batch["x"])
+        if self.cfg.family == "cnn":
+            return pn.cnn_forward(params, batch["x"])
+        return tf.logits_fn(params, self.cfg, self.dist, batch)
+
+    # -- serving ----------------------------------------------------------
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        return dec.prefill(params, self.cfg, self.dist, batch, max_len)
+
+    def decode_step(self, params, cache, tokens, cur_index):
+        return dec.decode_step(
+            params, self.cfg, self.dist, cache, tokens, cur_index
+        )
+
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        return dec.init_cache(self.cfg, batch_size, max_len, dtype)
+
+    def cache_axes(self):
+        return dec.cache_axes(self.cfg)
+
+    def abstract_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        shapes = jax.eval_shape(
+            lambda: dec.init_cache(self.cfg, batch_size, max_len, dtype)
+        )
+        axes = self.cache_axes()
+        if self.dist.mesh is None:
+            return shapes
+
+        def attach(sds, ax):
+            return jax.ShapeDtypeStruct(
+                sds.shape, sds.dtype,
+                sharding=self.dist.rules.sharding_for_shape(
+                    sds.shape, ax, self.dist.mesh
+                ),
+            )
+
+        return jax.tree.map(
+            attach, shapes, axes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+
+def build_spec(cfg: ModelConfig):
+    if cfg.family == "lstm":
+        return pn.lstm_spec(cfg)
+    if cfg.family == "cnn":
+        return pn.cnn_spec(cfg)
+    return tf.build_spec(cfg)
+
+
+def build_model(cfg: ModelConfig, dist: DistContext = LOCAL) -> Model:
+    m = Model(cfg=cfg, dist=dist, spec=build_spec(cfg))
+    m.validate()
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Batch construction: concrete (tests) and abstract (dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(cfg: ModelConfig):
+    ax = {
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+    }
+    if cfg.family == "vlm":
+        ax["patches"] = ("batch", None, None)
+    if cfg.family == "audio":
+        ax["frames"] = ("batch", "seq", None)
+    return ax
+
+
+def make_batch(cfg: ModelConfig, B: int, S: int, key, dtype=jnp.float32):
+    """Concrete random batch for tests / examples."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size, jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            k3, (B, cfg.n_patches, cfg.d_model), dtype
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            k3, (B, cfg.encoder_frames, cfg.d_model), dtype
+        )
+    return batch
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig, dist: DistContext,
+                   dtype=jnp.bfloat16):
+    """ShapeDtypeStruct batch for the dry-run (train / prefill kinds)."""
+    B, S = shape.global_batch, shape.seq_len
+    axes = _batch_axes(cfg)
+
+    def sds(shp, dt, ax):
+        if dist.mesh is not None:
+            return jax.ShapeDtypeStruct(
+                shp, dt, sharding=dist.rules.sharding_for_shape(shp, ax, dist.mesh)
+            )
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    batch = {
+        "tokens": sds((B, S), jnp.int32, axes["tokens"]),
+        "labels": sds((B, S), jnp.int32, axes["labels"]),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = sds(
+            (B, cfg.n_patches, cfg.d_model), dtype, axes["patches"]
+        )
+    if cfg.family == "audio":
+        batch["frames"] = sds(
+            (B, cfg.encoder_frames, cfg.d_model), dtype, axes["frames"]
+        )
+    if shape.kind == "prefill":
+        del batch["labels"]
+    return batch
+
+
+def abstract_decode_inputs(cfg: ModelConfig, shape: ShapeConfig,
+                           dist: DistContext):
+    B = shape.global_batch
+
+    def sds(shp, dt, ax):
+        if dist.mesh is not None:
+            return jax.ShapeDtypeStruct(
+                shp, dt, sharding=dist.rules.sharding_for_shape(shp, ax, dist.mesh)
+            )
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    return {
+        "tokens": sds((B, 1), jnp.int32, ("batch", None)),
+        "cur_index": sds((B,), jnp.int32, ("batch",)),
+    }

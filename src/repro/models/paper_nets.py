@@ -1,0 +1,125 @@
+"""The paper's model architectures (ASO-Fed §5.3, Appendix B).
+
+* LSTM: single-layer LSTM + one fully-connected head — FitRec / Air Quality
+  (regression) and ExtraSensory (multi-label-ish classification, modeled as
+  single-label CE here).
+* CNN: two conv layers + max-pool + FC — Fashion-MNIST.
+
+These are the substrates for the Table 5.1 / 6.1 and Fig 3-6 reproduction.
+The *first layer after the input* of each (LSTM kernel W_x / first conv) is
+the layer the ASO-Fed server applies Eq.(5)-(6) feature learning to.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.spec import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# LSTM
+# ---------------------------------------------------------------------------
+
+
+def lstm_spec(cfg: ModelConfig):
+    F, H, O = cfg.in_features, cfg.hidden, cfg.out_features
+    return {
+        # W_x is the paper's "first layer after the input" (feature learning).
+        "w_x": ParamDef((F, 4 * H), (None, None), init="fan_in"),
+        "w_h": ParamDef((H, 4 * H), (None, None), init="fan_in"),
+        "b": ParamDef((4 * H,), (None,), init="zeros"),
+        "fc_w": ParamDef((H, O), (None, None), init="fan_in"),
+        "fc_b": ParamDef((O,), (None,), init="zeros"),
+    }
+
+
+def lstm_forward(params, x):
+    """x: (B, T, F) -> (B, O) prediction from the last hidden state."""
+    B, T, F = x.shape
+    H = params["w_h"].shape[0]
+
+    def cell(carry, xt):
+        h, c = carry
+        z = xt @ params["w_x"] + h @ params["w_h"] + params["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    h0 = jnp.zeros((B, H), x.dtype)
+    (h, _), _ = jax.lax.scan(cell, (h0, h0), jnp.moveaxis(x, 1, 0))
+    return h @ params["fc_w"] + params["fc_b"]
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+
+
+def cnn_spec(cfg: ModelConfig):
+    C = cfg.hidden  # conv channels
+    O = cfg.out_features
+    return {
+        # first conv == the server feature-learning layer (flattened rows)
+        "conv1_w": ParamDef((3, 3, 1, C), (None, None, None, None), init="fan_in"),
+        "conv1_b": ParamDef((C,), (None,), init="zeros"),
+        "conv2_w": ParamDef((3, 3, C, C), (None, None, None, None), init="fan_in"),
+        "conv2_b": ParamDef((C,), (None,), init="zeros"),
+        "fc_w": ParamDef((14 * 14 * C, O), (None, None), init="fan_in"),
+        "fc_b": ParamDef((O,), (None,), init="zeros"),
+    }
+
+
+def cnn_forward(params, x):
+    """x: (B, 28, 28, 1) -> (B, O) logits."""
+
+    def conv(x, w, b):
+        y = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return jax.nn.relu(y + b)
+
+    x = conv(x, params["conv1_w"], params["conv1_b"])
+    x = conv(x, params["conv2_w"], params["conv2_b"])
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )  # 28 -> 14 max-pool
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc_w"] + params["fc_b"]
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics for the paper's tasks
+# ---------------------------------------------------------------------------
+
+
+def regression_loss(pred, target):
+    return jnp.mean(jnp.square(pred - target))
+
+
+def mae(pred, target):
+    return jnp.mean(jnp.abs(pred - target))
+
+
+def smape(pred, target, eps: float = 1e-8):
+    return jnp.mean(
+        jnp.abs(pred - target)
+        / (jnp.abs(pred) + jnp.abs(target) + eps)
+        * 2.0
+    ) / 2.0  # paper reports values in [0,1]
+
+
+def classification_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+def first_layer_key(cfg: ModelConfig) -> str:
+    """The parameter the server's Eq.(5)-(6) feature pass applies to."""
+    return "w_x" if cfg.family == "lstm" else "conv1_w"

@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence:  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t)),  c = 8.
+
+Block structure (RecurrentGemma temporal-mixing block): two parallel linear
+branches d_model -> lru_width; the gate branch passes through GeLU, the
+recurrent branch through a short causal conv then the RG-LRU; outputs are
+multiplied and projected back.  ``lru_width`` shards over the model axis —
+the recurrence is elementwise per channel, so the scan has no collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.dist import DistContext
+from repro.models.scan_utils import chunked_linear_scan, linear_scan_step
+from repro.models.spec import ParamDef
+from repro.models.ssm import _causal_conv
+
+_C = 8.0
+_CONV_K = 4
+
+
+def rglru_spec(cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "w_x": ParamDef((d, w), ("fsdp", "d_inner"), init="fan_in"),
+        "w_gate": ParamDef((d, w), ("fsdp", "d_inner"), init="fan_in"),
+        "conv_w": ParamDef((_CONV_K, w), (None, "d_inner"), init="fan_in"),
+        "conv_b": ParamDef((w,), ("d_inner",), init="zeros"),
+        "w_a": ParamDef((w, w), ("d_inner", None), init="fan_in"),
+        "w_i": ParamDef((w, w), ("d_inner", None), init="fan_in"),
+        "lam": ParamDef((w,), ("d_inner",), init="uniform_scaled", scale=1.0),
+        "w_out": ParamDef((w, d), ("d_inner", "fsdp"), init="fan_in"),
+    }
+
+
+def _gates(params, xc):
+    """xc: (B, S, w) conv output -> (a, gated input) in fp32."""
+    ra = jax.nn.sigmoid((xc @ params["w_a"]).astype(jnp.float32))
+    ri = jax.nn.sigmoid((xc @ params["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * ra
+    a = jnp.exp(log_a)
+    gated = ri * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * gated
+    return a, b
+
+
+def rglru_forward(params, x, cfg: ModelConfig, dist: DistContext,
+                  return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d)."""
+    xr = x @ params["w_x"]  # (B,S,w)
+    g = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32))
+    xr = dist.constrain(xr, "batch", "seq", "d_inner")
+    xc = _causal_conv(xr, params["conv_w"], params["conv_b"])
+    a, b = _gates(params, xc)
+    if dist.scan_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.linear_scan import ops as scan_ops
+
+        h, h_last = scan_ops.linear_scan(
+            a, b, interpret=(dist.scan_impl == "pallas_interpret")
+        )
+    else:
+        h, h_last = chunked_linear_scan(a, b)  # (B,S,w)
+    y = (h.astype(jnp.float32) * g).astype(x.dtype)
+    out = y @ params["w_out"]
+    out = dist.constrain(out, "batch", "act_seq", None)
+    if return_state:
+        state = {"h": h_last.astype(jnp.float32), "conv": xr[:, -(_CONV_K - 1):]}
+        return out, state
+    return out
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_decode(params, x, state, cfg: ModelConfig, dist: DistContext):
+    xr = x @ params["w_x"]  # (B,1,w)
+    g = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32))
+    xc = _causal_conv(xr, params["conv_w"], params["conv_b"], prev=state["conv"])
+    a, b = _gates(params, xc)
+    h_new = linear_scan_step(a[:, 0], b[:, 0], state["h"])  # (B,w)
+    h_new = dist.constrain(h_new, "batch", "d_inner")
+    y = (h_new.astype(jnp.float32)[:, None] * g).astype(x.dtype)
+    out = y @ params["w_out"]
+    conv_new = jnp.concatenate([state["conv"][:, 1:], xr], axis=1)
+    return (
+        dist.constrain(out, "batch", None, None),
+        {"h": h_new, "conv": conv_new},
+    )

@@ -1,0 +1,62 @@
+"""Chunked linear-recurrence scan shared by the SSM (Mamba-1) and RG-LRU.
+
+Computes  h_t = a_t * h_{t-1} + b_t  over the sequence axis.
+
+TPU-idiomatic structure (mirrored by ``repro.kernels.linear_scan``): the
+sequence is cut into chunks; within a chunk the recurrence is solved with an
+associative scan held in VMEM-sized tiles; across chunks a sequential carry
+propagates.  This replaces the GPU warp-parallel scan of the original Mamba
+CUDA kernel (DESIGN.md §2) and bounds live memory to one chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def chunked_linear_scan(a, b, h0=None, chunk: int = 256):
+    """a, b: (B, S, ...) recurrence coefficients; h0: (B, ...) initial state.
+
+    Returns (h: (B, S, ...) all states, h_last: (B, ...)).
+    Computation runs in fp32 regardless of input dtype.
+    """
+    orig_dtype = b.dtype
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    B, S = a.shape[:2]
+    tail = a.shape[2:]
+    if h0 is None:
+        h0 = jnp.zeros((B,) + tail, jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    n = S // c
+    ac = jnp.moveaxis(a.reshape((B, n, c) + tail), 1, 0)  # (n, B, c, ...)
+    bc = jnp.moveaxis(b.reshape((B, n, c) + tail), 1, 0)
+
+    def chunk_body(h, inp):
+        ai, bi = inp  # (B, c, ...)
+        # intra-chunk associative scan
+        a_cum, b_loc = jax.lax.associative_scan(_combine, (ai, bi), axis=1)
+        h_all = b_loc + a_cum * h[:, None]
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(chunk_body, h0, (ac, bc))
+    h = jnp.moveaxis(h_chunks, 0, 1).reshape((B, S) + tail)
+    return h.astype(orig_dtype), h_last.astype(orig_dtype)
+
+
+def linear_scan_step(a_t, b_t, h):
+    """Single decode step of the same recurrence (fp32 internally)."""
+    h32 = h.astype(jnp.float32)
+    out = a_t.astype(jnp.float32) * h32 + b_t.astype(jnp.float32)
+    return out.astype(h.dtype)

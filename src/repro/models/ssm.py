@@ -1,0 +1,175 @@
+"""Mamba-1 selective-SSM block (Falcon-Mamba architecture).
+
+Tensor-parallel layout: the expanded channel dim ``d_inner`` shards over the
+``model`` axis; the scan is elementwise in d_inner so no collectives appear
+inside the recurrence — only the in/out projections reduce (standard
+column/row-parallel pattern).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.dist import DistContext
+from repro.models.scan_utils import chunked_linear_scan, linear_scan_step
+from repro.models.spec import ParamDef
+
+
+def mamba_spec(cfg: ModelConfig):
+    d, di, N, R, K = (
+        cfg.d_model,
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.ssm_dt_rank,
+        cfg.ssm_conv,
+    )
+    return {
+        "w_in_x": ParamDef((d, di), ("fsdp", "d_inner"), init="fan_in"),
+        "w_in_z": ParamDef((d, di), ("fsdp", "d_inner"), init="fan_in"),
+        "conv_w": ParamDef((K, di), (None, "d_inner"), init="fan_in"),
+        "conv_b": ParamDef((di,), ("d_inner",), init="zeros"),
+        "w_x_dt": ParamDef((di, R), ("d_inner", None), init="fan_in"),
+        "w_x_bc": ParamDef((di, 2 * N), ("d_inner", None), init="fan_in"),
+        "w_dt": ParamDef((R, di), (None, "d_inner"), init="fan_in"),
+        "b_dt": ParamDef((di,), ("d_inner",), init="uniform_scaled", scale=4.0),
+        "A_log": ParamDef((di, N), ("d_inner", None), init="uniform_scaled", scale=1.0),
+        "D": ParamDef((di,), ("d_inner",), init="ones"),
+        "w_out": ParamDef((di, d), ("d_inner", "fsdp"), init="fan_in"),
+    }
+
+
+def _causal_conv(x, conv_w, conv_b, prev=None):
+    """Depthwise causal conv over S via K shifted adds (K is tiny).
+
+    x: (B, S, di); prev: (B, K-1, di) decode context or None (zero-pad).
+    """
+    K = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, S+K-1, di)
+    S = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(K):
+        out = out + xp[:, j : j + S].astype(jnp.float32) * conv_w[j].astype(
+            jnp.float32
+        )
+    out = out + conv_b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _ssm_coeffs(params, xh):
+    """xh: (B, S, di) post-conv activations -> (dA, dBx, C, base dt units)."""
+    N = params["A_log"].shape[1]
+    dt_r = xh @ params["w_x_dt"]  # (B,S,R)
+    bc = xh @ params["w_x_bc"]  # (B,S,2N)
+    Bc, Cc = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus(
+        (dt_r @ params["w_dt"]).astype(jnp.float32)
+        + params["b_dt"].astype(jnp.float32)
+    )  # (B,S,di)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (di,N)
+    dA = jnp.exp(dt[..., None] * A)  # (B,S,di,N)
+    dBx = (
+        dt[..., None]
+        * Bc[..., None, :].astype(jnp.float32)
+        * xh[..., None].astype(jnp.float32)
+    )  # (B,S,di,N)
+    return dA, dBx, Cc
+
+
+def _fused_chunk_scan(params, xh, chunk: int = 256):
+    """Chunk-fused selective scan: discretization coefficients (dA, dBx) are
+    formed *per chunk inside the scan body* and consumed immediately by the
+    intra-chunk associative scan + the C-projection, so the (B, S, di, N)
+    fp32 tensors never materialize (the naive layout costs S/chunk x more
+    live memory — §Perf 'mamba scan fusion').  Returns (y (B,S,di), h_last).
+    """
+    B, S, di = xh.shape
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    n = S // c
+    xh_c = jnp.moveaxis(xh.reshape(B, n, c, di), 1, 0)  # (n, B, c, di)
+    N = params["A_log"].shape[1]
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    @jax.checkpoint
+    def body(h, xi):
+        # per-chunk remat: backward re-derives (dA, dBx) from the chunk's xh
+        # instead of holding every chunk's scan residuals live at once
+        dA, dBx, Cc = _ssm_coeffs(params, xi)  # (B, c, di, N)
+        a_cum, b_loc = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        h_all = b_loc + a_cum * h[:, None]  # (B, c, di, N)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, Cc.astype(jnp.float32))
+        return h_all[:, -1], y
+
+    h_last, y_c = jax.lax.scan(body, h0, xh_c)
+    y = jnp.moveaxis(y_c, 0, 1).reshape(B, S, di)
+    return y, h_last
+
+
+def mamba_forward(params, x, cfg: ModelConfig, dist: DistContext,
+                  return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d)."""
+    xa = x @ params["w_in_x"]  # (B,S,di)
+    z = x @ params["w_in_z"]
+    xa = dist.constrain(xa, "batch", "seq", "d_inner")
+    xc = _causal_conv(xa, params["conv_w"], params["conv_b"])
+    xh = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    if dist.scan_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.linear_scan import ops as scan_ops
+
+        dA, dBx, Cc = _ssm_coeffs(params, xh)
+        h, h_last = scan_ops.linear_scan(
+            dA, dBx, interpret=(dist.scan_impl == "pallas_interpret")
+        )
+        y = jnp.einsum("bsdn,bsn->bsd", h.astype(jnp.float32),
+                       Cc.astype(jnp.float32))
+    elif dist.scan_impl == "naive":
+        # un-fused baseline (materializes (B,S,di,N) fp32) — §Perf reference
+        dA, dBx, Cc = _ssm_coeffs(params, xh)
+        h, h_last = chunked_linear_scan(dA, dBx)
+        y = jnp.einsum("bsdn,bsn->bsd", h.astype(jnp.float32),
+                       Cc.astype(jnp.float32))
+    else:
+        y, h_last = _fused_chunk_scan(params, xh)
+    y = y + params["D"].astype(jnp.float32) * xh.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["w_out"]
+    out = dist.constrain(out, "batch", "act_seq", None)
+    if return_state:
+        K = cfg.ssm_conv
+        state = {"h": h_last.astype(jnp.float32), "conv": xa[:, -(K - 1):]}
+        return out, state
+    return out
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype):
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, di), dtype),
+    }
+
+
+def mamba_decode(params, x, state, cfg: ModelConfig, dist: DistContext):
+    """x: (B, 1, d); state carries (h, conv window)."""
+    xa = x @ params["w_in_x"]  # (B,1,di)
+    z = x @ params["w_in_z"]
+    xc = _causal_conv(xa, params["conv_w"], params["conv_b"], prev=state["conv"])
+    xh = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)  # (B,1,di)
+    dA, dBx, Cc = _ssm_coeffs(params, xh)
+    h_new = linear_scan_step(dA[:, 0], dBx[:, 0], state["h"])  # (B,di,N)
+    h_new = dist.constrain(h_new, "batch", "d_inner", None)
+    y = jnp.einsum("bdn,bn->bd", h_new.astype(jnp.float32), Cc[:, 0].astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32) * xh[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = (y @ params["w_out"])[:, None]
+    conv_new = jnp.concatenate([state["conv"][:, 1:], xa], axis=1)
+    return dist.constrain(out, "batch", None, None), {"h": h_new, "conv": conv_new}

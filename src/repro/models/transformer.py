@@ -1,0 +1,380 @@
+"""Model assembly: scan-over-layers transformer stacks for every assigned
+family (dense / VLM / MoE+MLA / SSM / hybrid / audio enc-dec).
+
+All stacks scan over stacked per-layer parameters, keeping HLO size O(1) in
+depth (an 80-layer model lowers on one CPU core).  The returned ``Model``
+exposes train loss, prefill and one-token decode, plus abstract (zero
+allocation) parameter/cache/batch trees for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.dist import DistContext
+from repro.models.spec import ParamDef, is_def
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Spec helpers
+# ---------------------------------------------------------------------------
+
+
+def stack_spec(spec, n: int):
+    """Prepend a scanned 'layers' axis to every ParamDef in a spec tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        spec,
+        is_leaf=is_def,
+    )
+
+
+def _attn_spec(cfg: ModelConfig):
+    return attn.mla_spec(cfg) if cfg.use_mla else attn.gqa_spec(cfg)
+
+
+def dense_block_spec(cfg: ModelConfig):
+    return {
+        "ln1": L.norm_spec(cfg.norm, cfg.d_model),
+        "attn": _attn_spec(cfg),
+        "ln2": L.norm_spec(cfg.norm, cfg.d_model),
+        "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def moe_block_spec(cfg: ModelConfig):
+    s = {
+        "ln1": L.norm_spec(cfg.norm, cfg.d_model),
+        "attn": _attn_spec(cfg),
+        "ln2": L.norm_spec(cfg.norm, cfg.d_model),
+        "moe": moe_lib.moe_spec(cfg),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = L.mlp_spec(
+            cfg.d_model, cfg.n_shared_experts * cfg.d_ff_expert, cfg.act
+        )
+    return s
+
+
+def ssm_block_spec(cfg: ModelConfig):
+    return {"ln": L.norm_spec(cfg.norm, cfg.d_model), "mamba": ssm_lib.mamba_spec(cfg)}
+
+
+def _mix_mlp_spec(cfg: ModelConfig, mix_spec):
+    return {
+        "ln1": L.norm_spec(cfg.norm, cfg.d_model),
+        "mix": mix_spec,
+        "ln2": L.norm_spec(cfg.norm, cfg.d_model),
+        "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def hybrid_superblock_spec(cfg: ModelConfig):
+    return {
+        "r1": _mix_mlp_spec(cfg, rglru_lib.rglru_spec(cfg)),
+        "r2": _mix_mlp_spec(cfg, rglru_lib.rglru_spec(cfg)),
+        "a": _mix_mlp_spec(cfg, attn.gqa_spec(cfg)),
+    }
+
+
+def enc_block_spec(cfg: ModelConfig):
+    return dense_block_spec(cfg)
+
+
+def dec_block_spec(cfg: ModelConfig):
+    return {
+        "ln1": L.norm_spec(cfg.norm, cfg.d_model),
+        "self": attn.gqa_spec(cfg),
+        "lnx": L.norm_spec(cfg.norm, cfg.d_model),
+        "cross": attn.gqa_spec(cfg),
+        "ln2": L.norm_spec(cfg.norm, cfg.d_model),
+        "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def build_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    V, d = cfg.vocab_size, cfg.d_model
+    spec: Dict[str, Any] = {
+        "embed": L.embedding_spec(V, d),
+        "final_norm": L.norm_spec(cfg.norm, d),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = L.lm_head_spec(d, V)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        spec["blocks"] = stack_spec(dense_block_spec(cfg), cfg.n_layers)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            spec["dense_blocks"] = stack_spec(dense_block_spec(cfg), nd)
+        spec["moe_blocks"] = stack_spec(moe_block_spec(cfg), cfg.n_layers - nd)
+    elif fam == "ssm":
+        spec["blocks"] = stack_spec(ssm_block_spec(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        n_super, rem = divmod(cfg.n_layers, 3)
+        spec["superblocks"] = stack_spec(hybrid_superblock_spec(cfg), n_super)
+        if rem:
+            spec["tail"] = stack_spec(
+                _mix_mlp_spec(cfg, rglru_lib.rglru_spec(cfg)), rem
+            )
+    elif fam == "audio":
+        spec["enc_blocks"] = stack_spec(enc_block_spec(cfg), cfg.encoder_layers)
+        spec["enc_norm"] = L.norm_spec(cfg.norm, d)
+        spec["dec_blocks"] = stack_spec(dec_block_spec(cfg), cfg.n_layers)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, dist: DistContext):
+    return jax.checkpoint(fn) if dist.remat == "block" else fn
+
+
+def _scan_blocks(body, x, stacked, dist: DistContext, init_aux=None):
+    """Scan body(carry=(x, aux), layer_params) over stacked layer params."""
+    aux0 = jnp.zeros((), jnp.float32) if init_aux is None else init_aux
+    body = _maybe_remat(body, dist)
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), stacked)
+    return x, aux
+
+
+def _sinusoidal(seq: int, d: int, dtype):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d)
+    )
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+def _dense_block(p, x, cfg, dist, *, positions=None, mrope_pos=None, window=0):
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    if cfg.use_mla:
+        a = attn.mla_forward(
+            p["attn"], h, cfg, dist, positions=positions, window=window
+        )
+    else:
+        a = attn.gqa_forward(
+            p["attn"], h, cfg, dist, positions=positions, mrope_pos=mrope_pos,
+            causal=True, window=window,
+        )
+    x = x + a
+    h = L.apply_norm(cfg.norm, p["ln2"], x)
+    x = x + L.mlp(p["mlp"], h, cfg.act, dist.constrain)
+    return dist.constrain(x, "batch", "act_seq", None)
+
+
+def _moe_block(p, x, cfg, dist, *, positions=None):
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    if cfg.use_mla:
+        a = attn.mla_forward(p["attn"], h, cfg, dist, positions=positions)
+    else:
+        a = attn.gqa_forward(p["attn"], h, cfg, dist, positions=positions)
+    x = x + a
+    h = L.apply_norm(cfg.norm, p["ln2"], x)
+    y, aux = moe_lib.moe_forward(p["moe"], h, cfg, dist)
+    if cfg.n_shared_experts:
+        y = y + L.mlp(p["shared"], h, cfg.act, dist.constrain)
+    x = x + y
+    return dist.constrain(x, "batch", "act_seq", None), aux
+
+
+def _hybrid_sub(p, x, cfg, dist, kind: str):
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    if kind == "rglru":
+        m = rglru_lib.rglru_forward(p["mix"], h, cfg, dist)
+    else:
+        m = attn.gqa_forward(
+            p["mix"], h, cfg, dist, causal=True, window=cfg.local_window
+        )
+    x = x + m
+    h = L.apply_norm(cfg.norm, p["ln2"], x)
+    x = x + L.mlp(p["mlp"], h, cfg.act, dist.constrain)
+    return dist.constrain(x, "batch", "act_seq", None)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch, dist: DistContext):
+    """tokens (+patch/frame stubs) -> (x, positions, mrope_pos)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    mrope_pos = None
+    if cfg.family == "vlm":
+        P_ = cfg.n_patches
+        patches = batch["patches"].astype(x.dtype)  # (B, P, d)
+        x = jnp.concatenate([patches, x[:, P_:]], axis=1)
+        grid = int(P_**0.5)
+        mrope_pos = L.mrope_positions(P_, grid, S, B)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = dist.constrain(x, "batch", "act_seq", None)
+    return x, positions, mrope_pos
+
+
+def forward_hidden(params, cfg: ModelConfig, dist: DistContext, batch):
+    """Token/stub inputs -> final hidden states (B, S, d) and aux loss."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    if fam == "audio":
+        return _whisper_hidden(params, cfg, dist, batch)
+    x, positions, mrope_pos = _embed_inputs(params, cfg, batch, dist)
+
+    if fam in ("dense", "vlm"):
+
+        def body(carry, p):
+            h, a = carry
+            h = _dense_block(
+                p, h, cfg, dist, positions=positions, mrope_pos=mrope_pos,
+                window=cfg.sliding_window,
+            )
+            return (h, a), None
+
+        x, aux = _scan_blocks(body, x, params["blocks"], dist)
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+
+            def dbody(carry, p):
+                h, a = carry
+                return (
+                    (_dense_block(p, h, cfg, dist, positions=positions), a),
+                    None,
+                )
+
+            x, aux = _scan_blocks(dbody, x, params["dense_blocks"], dist)
+
+        def mbody(carry, p):
+            h, a = carry
+            h, block_aux = _moe_block(p, h, cfg, dist, positions=positions)
+            return (h, a + block_aux), None
+
+        x, aux = _scan_blocks(mbody, x, params["moe_blocks"], dist, init_aux=aux)
+    elif fam == "ssm":
+
+        def body(carry, p):
+            h, a = carry
+            hh = L.apply_norm(cfg.norm, p["ln"], h)
+            h = h + ssm_lib.mamba_forward(p["mamba"], hh, cfg, dist)
+            return (dist.constrain(h, "batch", "act_seq", None), a), None
+
+        x, aux = _scan_blocks(body, x, params["blocks"], dist)
+    elif fam == "hybrid":
+
+        def body(carry, p):
+            h, a = carry
+            h = _hybrid_sub(p["r1"], h, cfg, dist, "rglru")
+            h = _hybrid_sub(p["r2"], h, cfg, dist, "rglru")
+            h = _hybrid_sub(p["a"], h, cfg, dist, "attn")
+            return (h, a), None
+
+        x, aux = _scan_blocks(body, x, params["superblocks"], dist)
+        if "tail" in params:
+
+            def tbody(carry, p):
+                h, a = carry
+                return ((_hybrid_sub(p, h, cfg, dist, "rglru"), a), None)
+
+            x, aux = _scan_blocks(tbody, x, params["tail"], dist, init_aux=aux)
+    else:
+        raise ValueError(fam)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    return x, aux
+
+
+def _whisper_encode(params, cfg: ModelConfig, dist: DistContext, frames):
+    """frames: (B, F, d) stub embeddings -> encoder states."""
+    B, F, d = frames.shape
+    x = frames + _sinusoidal(F, d, frames.dtype)[None]
+    x = dist.constrain(x, "batch", "act_seq", None)
+
+    def body(carry, p):
+        h, a = carry
+        hh = L.apply_norm(cfg.norm, p["ln1"], h)
+        h = h + attn.gqa_forward(
+            p["attn"], hh, cfg, dist, causal=False, use_rope=False
+        )
+        hh = L.apply_norm(cfg.norm, p["ln2"], h)
+        h = h + L.mlp(p["mlp"], hh, cfg.act, dist.constrain)
+        return (dist.constrain(h, "batch", "act_seq", None), a), None
+
+    x, _ = _scan_blocks(body, x, params["enc_blocks"], dist)
+    return L.apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _whisper_hidden(params, cfg: ModelConfig, dist: DistContext, batch):
+    enc = _whisper_encode(params, cfg, dist, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens) + _sinusoidal(
+        S, cfg.d_model, jnp.float32
+    )[None].astype(L.embed(params["embed"], tokens).dtype)
+    x = dist.constrain(x, "batch", "act_seq", None)
+    F = enc.shape[1]
+    enc_pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+
+    def body(carry, p):
+        h, a = carry
+        hh = L.apply_norm(cfg.norm, p["ln1"], h)
+        h = h + attn.gqa_forward(
+            p["self"], hh, cfg, dist, causal=True, use_rope=False
+        )
+        hh = L.apply_norm(cfg.norm, p["lnx"], h)
+        kx = jnp.einsum("bsd,dke->bske", enc, p["cross"]["wk"])
+        vx = jnp.einsum("bsd,dke->bske", enc, p["cross"]["wv"])
+        if cfg.qkv_bias:
+            kx = kx + p["cross"]["bk"].astype(kx.dtype)
+            vx = vx + p["cross"]["bv"].astype(vx.dtype)
+        h = h + attn.gqa_forward(
+            p["cross"], hh, cfg, dist, causal=False, use_rope=False,
+            kv_override=(kx, vx, enc_pos),
+        )
+        hh = L.apply_norm(cfg.norm, p["ln2"], h)
+        h = h + L.mlp(p["mlp"], hh, cfg.act, dist.constrain)
+        return (dist.constrain(h, "batch", "act_seq", None), a), None
+
+    x, aux = _scan_blocks(body, x, params["dec_blocks"], dist)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Heads / losses
+# ---------------------------------------------------------------------------
+
+
+def _head_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def loss_fn(params, cfg: ModelConfig, dist: DistContext, batch):
+    x, aux = forward_hidden(params, cfg, dist, batch)
+    head = _head_matrix(params, cfg)
+    mask = batch.get("mask")
+    ce = L.chunked_softmax_xent(
+        x, head, batch["labels"], mask=mask, constrain=dist.constrain
+    )
+    return ce + AUX_LOSS_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+def logits_fn(params, cfg: ModelConfig, dist: DistContext, batch):
+    x, _ = forward_hidden(params, cfg, dist, batch)
+    return x @ _head_matrix(params, cfg)

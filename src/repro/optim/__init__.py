@@ -1,0 +1,18 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    clip_by_global_norm,
+    cosine_schedule,
+    sgd,
+)
+from repro.optim.asofed import asofed_transform, AsoFedSlots
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "sgd",
+    "asofed_transform",
+    "AsoFedSlots",
+]

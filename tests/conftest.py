@@ -1,0 +1,9 @@
+import os
+
+# Keep the default single CPU device for unit tests (the dry-run sets its own
+# 512-device flag in its own process).  Cap compile threads for the 1-core box.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

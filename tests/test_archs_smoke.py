@@ -1,0 +1,73 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family (<=2 layers, d_model<=256, <=4 experts) runs one forward and
+one train step on CPU; output shapes + finiteness asserted."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_arch
+from repro.models import LOCAL, build_model, make_batch
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_arch(arch).reduced()
+            m = build_model(cfg, LOCAL)
+            cache[arch] = (cfg, m, m.init(KEY))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_loss_finite(arch, built):
+    cfg, m, params = built(arch)
+    batch = make_batch(cfg, B, S, KEY)
+    loss, metrics = m.loss(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch} loss not finite"
+    logits = m.predict(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_updates_and_finite(arch, built):
+    cfg, m, params = built(arch)
+    batch = make_batch(cfg, B, S, KEY)
+
+    def loss_of(p):
+        return m.loss(p, batch)[0]
+
+    loss, grads = jax.value_and_grad(loss_of)(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gnorm > 0, f"{arch}: zero gradient"
+    for g in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(g).all()), f"{arch}: non-finite grad"
+    new_params = jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+    loss2 = loss_of(new_params)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_shapes(arch, built):
+    cfg, m, params = built(arch)
+    batch = make_batch(cfg, B, S, KEY)
+    logits, cache = m.prefill(params, batch, max_len=S + 4)
+    assert logits.shape == (B, cfg.vocab_size)
+    tok = batch["tokens"][:, :1]
+    idx = jnp.full((B,), S, jnp.int32)
+    logits2, cache2 = m.decode_step(params, cache, tok, idx)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all()), f"{arch}: decode NaN"
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)

@@ -1,0 +1,197 @@
+"""Unit tests for the ASO-Fed core (Eq. 4-11) + checkpointing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (
+    OnlineStream,
+    aggregate,
+    apply_feature_learning,
+    dynamic_multiplier,
+    init_client_state,
+    init_server,
+    receive_server_model,
+)
+from repro.core.client import client_step
+from repro.models import LOCAL, build_model
+from repro.optim.asofed import asofed_transform, init_slots
+
+CFG = dataclasses.replace(
+    get_arch("paper-lstm"), in_features=4, out_features=1, hidden=8
+)
+MODEL = build_model(CFG, LOCAL)
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "x": jnp.asarray(rng.normal(size=(n, 6, 4)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(size=(n,)).astype(np.float32)),
+        "task": "regression",
+    }
+
+
+# ---------------------------------------------------------------------------
+# Eq. (4): server aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_eq4_aggregation_matches_closed_form():
+    w0 = MODEL.init(KEY)
+    srv = init_server(w0, [0, 1], {0: 10.0, 1: 30.0})
+    upload = jax.tree.map(lambda x: x + 0.5, w0)  # client 0 moved by -0.5 delta
+    srv2 = aggregate(srv, 0, upload, 10.0, CFG, feature_learning=False)
+    # w' = w - (10/40) * (w0 - upload) = w + 0.25*0.5
+    expect = jax.tree.map(lambda x: x + 0.25 * 0.5, w0)
+    for a, b in zip(jax.tree.leaves(srv2.w), jax.tree.leaves(expect)):
+        assert jnp.allclose(a, b, atol=1e-6)
+    assert srv2.t == 1
+
+
+def test_eq4_delta_mode_equivalent():
+    w0 = MODEL.init(KEY)
+    srv_a = init_server(w0, [0, 1], {0: 10.0, 1: 30.0})
+    srv_b = init_server(w0, [0, 1], {0: 10.0, 1: 30.0}, keep_copies=False)
+    upload = jax.tree.map(lambda x: x * 1.1, w0)
+    delta = jax.tree.map(lambda a, b: a - b, w0, upload)
+    ra = aggregate(srv_a, 0, upload, 10.0, CFG, feature_learning=False)
+    rb = aggregate(srv_b, 0, delta, 10.0, CFG, upload_is_delta=True,
+                   feature_learning=False)
+    for a, b in zip(jax.tree.leaves(ra.w), jax.tree.leaves(rb.w)):
+        assert jnp.allclose(a, b, atol=1e-6)
+
+
+def test_weight_uses_online_sample_counts():
+    w0 = MODEL.init(KEY)
+    srv = init_server(w0, [0, 1], {0: 10.0, 1: 10.0})
+    up = jax.tree.map(lambda x: x + 1.0, w0)
+    # client 0 grew to 90 samples -> weight 90/100
+    out = aggregate(srv, 0, up, 90.0, CFG, feature_learning=False)
+    expect = jax.tree.map(lambda x: x + 0.9, w0)
+    for a, b in zip(jax.tree.leaves(out.w), jax.tree.leaves(expect)):
+        assert jnp.allclose(a, b, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (5)-(6): feature learning
+# ---------------------------------------------------------------------------
+
+
+def test_feature_learning_targets_first_layer_only():
+    w0 = MODEL.init(KEY)
+    w1 = apply_feature_learning(w0, CFG)
+    changed = {
+        k: not bool(jnp.allclose(w0[k], w1[k])) for k in w0
+    }
+    assert changed["w_x"] is True
+    assert changed["w_h"] is False and changed["fc_w"] is False
+
+
+# ---------------------------------------------------------------------------
+# Eq. (7)-(11): client update
+# ---------------------------------------------------------------------------
+
+
+def test_first_round_equals_prox_sgd():
+    """With h=v=0 the first ASO-Fed round is plain prox-SGD (Eq. 8 -> grad_s)."""
+    w0 = MODEL.init(KEY)
+    st = init_client_state(w0, 8)
+    batch = _batch()
+    lam, eta = 0.5, 0.01
+    st2, _ = client_step(MODEL.loss, st, batch, lam=lam, beta=0.5, eta=eta,
+                         delay=1.0, use_dynamic_lr=False)
+
+    def s(p):
+        l, _ = MODEL.loss(p, batch)
+        reg = sum(
+            jnp.sum(jnp.square(a - b))
+            for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(w0))
+        )
+        return l + lam / 2 * reg
+
+    g = jax.grad(s)(w0)
+    expect = jax.tree.map(lambda w, gi: w - eta * gi, w0, g)
+    for a, b in zip(jax.tree.leaves(st2.params), jax.tree.leaves(expect)):
+        assert jnp.allclose(a, b, atol=1e-5)
+
+
+def test_decay_recursion_order():
+    """h_{t+1} = beta*h_t + (1-beta)*v_t with v_t the PREVIOUS grad (line 15-16)."""
+    w0 = MODEL.init(KEY)
+    st = init_client_state(w0, 8)
+    beta = 0.25
+    st1, _ = client_step(MODEL.loss, st, _batch(seed=1), lam=0.0, beta=beta,
+                         eta=0.01, delay=1.0, use_dynamic_lr=False)
+    # after round 1: h = beta*0 + (1-beta)*0 = 0 ; v = g1
+    for h in jax.tree.leaves(st1.h):
+        assert jnp.allclose(h, 0.0)
+    g1 = jax.tree.leaves(st1.v)
+    assert any(float(jnp.sum(jnp.abs(g))) > 0 for g in g1)
+    st2, _ = client_step(MODEL.loss, st1, _batch(seed=2), lam=0.0, beta=beta,
+                         eta=0.01, delay=1.0, use_dynamic_lr=False)
+    # after round 2: h = (1-beta) * g1
+    for h, g in zip(jax.tree.leaves(st2.h), jax.tree.leaves(st1.v)):
+        assert jnp.allclose(h, (1 - beta) * g, atol=1e-6)
+
+
+def test_dynamic_multiplier_properties():
+    r = dynamic_multiplier(jnp.float32(0.0), jnp.float32(0.0), jnp.float32(1.0))
+    assert float(r) == 1.0  # log(1) = 0 -> clamp to 1
+    r_slow = dynamic_multiplier(jnp.float32(0.0), jnp.float32(0.0),
+                                jnp.float32(100.0))
+    r_fast = dynamic_multiplier(jnp.float32(0.0), jnp.float32(0.0),
+                                jnp.float32(10.0))
+    assert float(r_slow) > float(r_fast) >= 1.0  # stragglers step larger
+
+
+def test_receive_server_model_resets_local_copy():
+    w0 = MODEL.init(KEY)
+    st = init_client_state(w0, 8)
+    w_new = jax.tree.map(lambda x: x + 1.0, w0)
+    st2 = receive_server_model(st, w_new)
+    for a, b in zip(jax.tree.leaves(st2.params), jax.tree.leaves(w_new)):
+        assert jnp.allclose(a, b)
+
+
+# ---------------------------------------------------------------------------
+# asofed_transform (LLM-scale packaging) == client_step math
+# ---------------------------------------------------------------------------
+
+
+def test_transform_matches_client_step():
+    w0 = MODEL.init(KEY)
+    batch = _batch()
+    lam, beta, eta = 0.3, 0.1, 0.02
+
+    st = init_client_state(w0, 8)
+    st1, _ = client_step(MODEL.loss, st, batch, lam=lam, beta=beta, eta=eta,
+                         delay=5.0, use_dynamic_lr=True)
+
+    slots = init_slots(w0)
+    grads = jax.grad(lambda p: MODEL.loss(p, batch)[0])(w0)
+    updates, slots1 = asofed_transform(
+        grads, slots, w0, w0, lam=lam, beta=beta, eta=eta, delay=5.0
+    )
+    w1 = jax.tree.map(lambda p, u: p + u, w0, updates)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(w1)):
+        assert jnp.allclose(a, b, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+
+def test_online_stream_growth():
+    x = np.arange(1000, dtype=np.float32)[:, None]
+    s = OnlineStream(x, x[:, 0], start_frac=0.3, growth=0.001)
+    assert s.visible(0) == 300
+    assert s.visible(100) == 400
+    assert s.visible(10**6) == 1000  # capped
+    xs, ys = s.batch(0, 32)
+    assert xs.max() < 300  # only visible window sampled

@@ -1,0 +1,115 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.feature_attention.ops import feature_attention
+from repro.kernels.feature_attention.ref import feature_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.linear_scan.ops import linear_scan
+from repro.kernels.linear_scan.ref import linear_scan_ref
+from repro.models.scan_utils import chunked_linear_scan
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# feature_attention (ASO-Fed Eq. 5-6)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(8, 32), (100, 33), (9, 129), (257, 64),
+                                   (3, 3, 1, 16), (2, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("normalize", [True, False])
+def test_feature_attention_matches_ref(shape, dtype, normalize):
+    w = jax.random.normal(KEY, shape, jnp.float32).astype(dtype)
+    got = feature_attention(w, use_kernel=True, interpret=True,
+                            normalize=normalize)
+    want = feature_attention_ref(
+        w.reshape(-1, shape[-1]), normalize=normalize
+    ).reshape(shape)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    assert got.dtype == w.dtype
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32)))) < tol
+
+
+def test_feature_attention_preserves_row_norm():
+    w = jax.random.normal(KEY, (64, 256), jnp.float32)
+    out = feature_attention(w, use_kernel=True, interpret=True, normalize=True)
+    n_in = jnp.linalg.norm(w, axis=-1)
+    n_out = jnp.linalg.norm(out, axis=-1)
+    assert float(jnp.max(jnp.abs(n_in - n_out))) < 1e-4
+
+
+def test_feature_attention_literal_shrinks():
+    """The literal Eq.(5)-(6) contracts rows (documented repro finding)."""
+    w = jax.random.normal(KEY, (32, 128), jnp.float32)
+    out = feature_attention(w, normalize=False)
+    assert float(jnp.linalg.norm(out)) < float(jnp.linalg.norm(w))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+CASES = [
+    # B, Sq, Skv, KV, G, hd, causal, window
+    (2, 128, 128, 2, 2, 64, True, 0),
+    (1, 256, 256, 1, 4, 32, True, 64),
+    (2, 64, 64, 4, 1, 64, False, 0),
+    (1, 128, 128, 2, 4, 128, True, 32),
+    (1, 512, 512, 1, 1, 64, True, 128),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Sq, Skv, KV, G, hd, causal, window = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, KV, G, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd), jnp.float32).astype(dtype)
+    qp = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32), (B, Skv))
+    got = flash_attention(q, k, v, q_positions=qp, k_positions=kp,
+                          causal=causal, window=window, interpret=True)
+    want = flash_attention(q, k, v, q_positions=qp, k_positions=kp,
+                           causal=causal, window=window, use_kernel=False)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32)))) < tol
+
+
+# ---------------------------------------------------------------------------
+# linear_scan (Mamba / RG-LRU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(2, 64, 32), (1, 128, 16), (2, 100, 8),
+                                   (1, 256, 128), (2, 32, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_linear_scan_matches_ref(shape, dtype):
+    B, S, C = shape
+    k1, k2 = jax.random.split(KEY)
+    a = jax.random.uniform(k1, shape, jnp.float32, 0.5, 0.999).astype(dtype)
+    b = jax.random.normal(k2, shape, jnp.float32).astype(dtype)
+    h_k, hl_k = linear_scan(a, b, use_kernel=True, interpret=True)
+    h_r, hl_r = linear_scan_ref(a, b)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    assert float(jnp.max(jnp.abs(h_k.astype(jnp.float32)
+                                 - h_r.astype(jnp.float32)))) < tol
+    assert float(jnp.max(jnp.abs(hl_k.astype(jnp.float32)
+                                 - hl_r.astype(jnp.float32)))) < tol
+
+
+def test_linear_scan_4d_mamba_layout():
+    a = jax.random.uniform(KEY, (2, 64, 16, 4), jnp.float32, 0.5, 0.99)
+    b = jax.random.normal(KEY, (2, 64, 16, 4))
+    h, hl = linear_scan(a, b, use_kernel=True, interpret=True)
+    assert h.shape == (2, 64, 16, 4) and hl.shape == (2, 16, 4)
+    h2, hl2 = chunked_linear_scan(a, b, chunk=16)
+    assert float(jnp.max(jnp.abs(h - h2))) < 1e-5

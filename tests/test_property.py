@@ -1,0 +1,193 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.client import dynamic_multiplier
+from repro.core.streaming import OnlineStream
+from repro.data.partition import dirichlet_partition, label_sorted_partition
+from repro.kernels.feature_attention.ref import feature_attention_ref
+from repro.kernels.linear_scan.ref import linear_scan_ref
+from repro.models.scan_utils import chunked_linear_scan
+from repro.optim.asofed import asofed_transform, init_slots
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# Eq. (5)-(6) feature attention invariants
+# ---------------------------------------------------------------------------
+
+
+@given(
+    rows=st.integers(1, 32),
+    cols=st.integers(2, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_feature_attention_invariants(rows, cols, seed):
+    w = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * 3.0
+    )
+    out = np.asarray(feature_attention_ref(jnp.asarray(w), normalize=True))
+    assert np.isfinite(out).all()
+    # sign pattern preserved (alpha > 0, norm scale > 0)
+    assert np.all(np.sign(out) == np.sign(w))
+    # per-row L2 norm preserved
+    np.testing.assert_allclose(
+        np.linalg.norm(out, axis=-1), np.linalg.norm(w, axis=-1),
+        rtol=1e-4, atol=1e-5,
+    )
+    # the literal variant contracts every row (softmax weights < 1)
+    lit = np.asarray(feature_attention_ref(jnp.asarray(w), normalize=False))
+    assert np.all(
+        np.linalg.norm(lit, axis=-1) <= np.linalg.norm(w, axis=-1) + 1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# linear scan: chunked == sequential for any chunking
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 3),
+    s=st.integers(1, 65),
+    c=st.integers(1, 9),
+    chunk=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_scan_equals_sequential(b, s, c, chunk, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.uniform(k1, (b, s, c), jnp.float32, -1.0, 1.0)
+    bb = jax.random.normal(k2, (b, s, c), jnp.float32)
+    h1, hl1 = chunked_linear_scan(a, bb, chunk=chunk)
+    h2, hl2 = linear_scan_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hl1), np.asarray(hl2),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# dynamic step size (Eq. 11)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    dsum=st.floats(0.0, 1e5),
+    rounds=st.floats(0.0, 1e4),
+    d1=st.floats(0.01, 1e4),
+    d2=st.floats(0.01, 1e4),
+)
+def test_dynamic_multiplier_bounds_and_monotone(dsum, rounds, d1, d2):
+    r1 = float(dynamic_multiplier(jnp.float32(dsum), jnp.float32(rounds),
+                                  jnp.float32(d1)))
+    r2 = float(dynamic_multiplier(jnp.float32(dsum), jnp.float32(rounds),
+                                  jnp.float32(d2)))
+    assert r1 >= 1.0 and r2 >= 1.0  # never below the base step
+    if d1 < d2:
+        assert r1 <= r2 + 1e-6  # longer delays never shrink the step
+
+
+# ---------------------------------------------------------------------------
+# ASO-Fed transform: descent on a strongly-convex quadratic (Thm 4.4 regime)
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1), lam=st.floats(0.0, 1.0))
+@settings(max_examples=10)
+def test_asofed_descends_on_quadratic(seed, lam):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    target = jax.random.normal(k1, (8,))
+    w = {"w": jax.random.normal(k2, (8,))}
+
+    def f(p):
+        return 0.5 * jnp.sum(jnp.square(p["w"] - target))
+
+    slots = init_slots(w)
+    server = jax.tree.map(jnp.copy, w)
+    f0 = float(f(w))
+    for _ in range(50):
+        g = jax.grad(f)(w)
+        upd, slots = asofed_transform(
+            g, slots, w, server, lam=lam, beta=0.01, eta=0.05, delay=1.0,
+            dynamic_lr=False,
+        )
+        w = jax.tree.map(lambda p, u: p + u, w, upd)
+    assert float(f(w)) < f0  # converging toward the optimum
+
+
+# ---------------------------------------------------------------------------
+# server aggregation weights
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.lists(st.floats(1.0, 1e4), min_size=2, max_size=6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aggregation_is_convex_interpolation(n, seed):
+    """Eq. (4) with upload = w* moves w toward w* by exactly n_k/N."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(5,)).astype(np.float32))
+    w_star = jnp.asarray(rng.normal(size=(5,)).astype(np.float32))
+    nk = n[0]
+    N = sum(n)
+    delta = w - w_star
+    w_new = w - (nk / N) * delta
+    # stays on the segment [w, w*]
+    t = nk / N
+    np.testing.assert_allclose(
+        np.asarray(w_new), (1 - t) * np.asarray(w) + t * np.asarray(w_star),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# streaming growth / partitions
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(10, 500),
+    start=st.floats(0.05, 0.9),
+    growth=st.floats(0.0, 0.01),
+    t1=st.integers(0, 1000),
+    t2=st.integers(0, 1000),
+)
+def test_stream_visible_monotone_and_bounded(n, start, growth, t1, t2):
+    x = np.zeros((n, 2), np.float32)
+    s = OnlineStream(x, x[:, 0], start_frac=start, growth=growth)
+    v1, v2 = s.visible(min(t1, t2)), s.visible(max(t1, t2))
+    assert 1 <= v1 <= v2 <= n
+
+
+@given(
+    n_clients=st.integers(2, 10),
+    n_per_class=st.integers(5, 40),
+    alpha=st.floats(0.05, 10.0),
+    seed=st.integers(0, 1000),
+)
+def test_dirichlet_partition_is_exact_cover(n_clients, n_per_class, alpha, seed):
+    labels = np.repeat(np.arange(5), n_per_class)
+    parts = dirichlet_partition(labels, n_clients, alpha=alpha, seed=seed)
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(len(labels)))
+
+
+@given(n_clients=st.integers(2, 10), seed=st.integers(0, 1000))
+def test_label_sorted_partition_is_exact_cover(n_clients, seed):
+    labels = np.random.default_rng(seed).integers(0, 10, size=200)
+    parts = label_sorted_partition(labels, n_clients, seed=seed)
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(len(labels)))

@@ -1,0 +1,202 @@
+"""Substrate tests: data generators, sharding rules, optimizers, checkpoint,
+HLO analyzer."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.common.sharding import ShardingRules, get_rules
+from repro.configs import ASSIGNED_ARCHS, SHAPES, applicable, get_arch
+from repro.data import (
+    airquality_like,
+    extrasensory_like,
+    fitrec_like,
+    fmnist_like,
+    federated_token_clients,
+)
+from repro.launch import hlo
+from repro.optim import adam, sgd
+from repro.optim.optimizers import apply_updates
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_fitrec_shapes_and_nontrivial_targets():
+    data = fitrec_like(n_clients=3, n_per=50)
+    assert len(data) == 3
+    xtr, ytr, xte, yte = data[0]
+    assert xtr.shape[1:] == (48, 10) and ytr.ndim == 1
+    assert np.std(ytr) > 0.1
+
+
+def test_extrasensory_label_skew():
+    """Each client must see a strict subset of activities (non-IID)."""
+    data = extrasensory_like(n_clients=6, n_per=60, n_classes=6)
+    subsets = [set(np.unique(d[1])) for d in data]
+    assert all(len(s) < 6 for s in subsets)
+    assert len(set.union(*subsets)) >= 5  # but collectively near-full
+
+
+def test_fmnist_partition_recipe():
+    data = fmnist_like(n_clients=20, scale=0.02)
+    assert len(data) == 20
+    # each client holds exactly 2 labels (paper's 2-shard deal)
+    for xtr, ytr, xte, yte in data:
+        labels = set(np.unique(np.concatenate([ytr, yte])))
+        assert len(labels) <= 2
+
+
+def test_token_clients_domain_skew():
+    streams = federated_token_clients(4, vocab=256, tokens_per_client=2000,
+                                      n_domains=2)
+    # clients sharing a domain have more similar bigram stats than across
+    def big(s):
+        h = np.zeros((16, 16))
+        a, b = s[:-1] % 16, s[1:] % 16
+        np.add.at(h, (a, b), 1)
+        return h / h.sum()
+
+    h0, h1, h2 = big(streams[0]), big(streams[1]), big(streams[2])
+    same = np.abs(h0 - h2).sum()  # 0 and 2 share domain 0
+    diff = np.abs(h0 - h1).sum()
+    assert same < diff
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_pspec_dedups_reused_axes():
+    rules = get_rules("tp")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = rules.pspec(("act_seq", "heads"), mesh)  # both -> model
+    flat = [a for a in spec if a is not None]
+    assert len(flat) <= 1  # second use dropped, not duplicated
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_pspec_for_shape_drops_indivisible():
+    rules = get_rules("tp")
+    mesh = _FakeMesh({"data": 2, "model": 2})
+    spec = rules.pspec_for_shape((3, 8), ("batch", "d_ff"), mesh)
+    assert spec[0] is None  # 3 % 2 != 0 -> replicated
+    assert spec[1] == "model"
+
+
+def test_all_arch_specs_divide_production_mesh():
+    """Every (arch, rules) parameter layout must divide the 16x16 mesh."""
+    from repro.models.model import build_spec, rules_for
+    from repro.models.spec import validate_divisibility
+
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_arch(arch)
+        rules = rules_for(cfg, mesh)
+        spec = build_spec(cfg)
+        validate_divisibility(spec, rules, mesh)  # raises on failure
+
+
+def test_applicability_table():
+    skips = [
+        (a, s)
+        for a in ASSIGNED_ARCHS
+        for s in SHAPES
+        if not applicable(get_arch(a), SHAPES[s])
+    ]
+    # DESIGN.md: only whisper long_500k is skipped
+    assert skips == [("whisper-small", "long_500k")]
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adam"])
+def test_optimizers_minimize_quadratic(opt_name):
+    opt = sgd(0.1) if opt_name == "sgd" else adam(0.1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(100):
+        g = jax.grad(lambda p: jnp.sum(jnp.square(p["w"])))(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip():
+    params = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones((4,))}}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, params, step=7)
+        restored, step = load_checkpoint(d, params)
+        assert step == 7
+        for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_structure_mismatch_raises():
+    params = {"a": jnp.ones((2,))}
+    other = {"zzz": jnp.ones((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, params)
+        with pytest.raises(ValueError):
+            load_checkpoint(d, other)
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_analyzer_scales_while_trip_counts():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jnp.ones((64, 64)); w = jnp.ones((64, 64))
+    c = jax.jit(f).lower(x, w).compile()
+    res = hlo.analyze(c.as_text())
+    one = 2 * 64**3
+    # XLA cost_analysis reports ~1 matmul; the analyzer must report ~10
+    assert 9 * one <= res["flops"] <= 11 * one, res["flops"]
+
+
+def test_hlo_collective_formulas():
+    text = """
+HloModule test, is_scheduled=true
+
+ENTRY %main (a: f32[16,128]) -> f32[16,128] {
+  %a = f32[16,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%a), replica_groups=[16,4]<=[64], dimensions={0}
+  %ar = f32[16,128]{1,0} all-reduce(%a), replica_groups=[8,8]<=[64], to_apply=%add
+  ROOT %copy = f32[16,128]{1,0} copy(%ar)
+}
+"""
+    res = hlo.analyze(text)
+    ag_result = 64 * 128 * 4
+    ar = 16 * 128 * 4
+    assert abs(res["per_kind"]["all-gather"] - ag_result / 4) < 1
+    assert abs(res["per_kind"]["all-reduce"] - ar) < 1
+    # wire: AG (G-1)/G * result + AR 2*(G-1)/G * result
+    expect_wire = ag_result * 3 / 4 + 2 * ar * 7 / 8
+    assert abs(res["wire_bytes"] - expect_wire) < 1
