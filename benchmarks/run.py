@@ -6,6 +6,8 @@ full JSON artifacts under results/paper/.
     PYTHONPATH=src python -m benchmarks.run            # default (quick)
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale budgets
     PYTHONPATH=src python -m benchmarks.run --only table5
+    PYTHONPATH=src python -m benchmarks.run --smoke    # cohort-engine sweep
+                                                       # -> BENCH_sim.json
 """
 from __future__ import annotations
 
@@ -22,15 +24,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="substring filter: table5|fig4|fig5|roofline|kernel")
+                    help="substring filter: "
+                         "table5|fig4|fig5|roofline|kernel|sim")
     ap.add_argument("--recompute", action="store_true",
                     help="ignore cached results/paper artifacts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="cohort-engine clients-vs-throughput sweep at "
+                         "{8, 64, 256} clients; writes BENCH_sim.json")
     args = ap.parse_args()
     quick = not args.full
     want = lambda s: args.only is None or args.only in s  # noqa: E731
 
     rows = []
     print("name,us_per_call,derived")
+
+    if args.smoke or (args.only and want("sim")):
+        from benchmarks.sim_bench import bench_sim
+
+        for r in bench_sim():
+            rows.append(r)
+            print(_fmt(*r), flush=True)
+        if args.smoke:  # smoke mode runs only the sim sweep
+            return
 
     if want("kernel"):
         from benchmarks.kernel_bench import bench

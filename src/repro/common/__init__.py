@@ -1,4 +1,6 @@
-"""Shared low-level utilities: pytrees, dtypes, sharding rules, registry."""
+"""Shared low-level utilities: pytrees, dtypes, sharding rules, registry,
+JAX version-compat shims."""
+from repro.common.compat import shard_map
 from repro.common.pytree import (
     tree_add,
     tree_sub,
@@ -25,4 +27,5 @@ __all__ = [
     "param_bytes",
     "tree_any_nan",
     "Registry",
+    "shard_map",
 ]

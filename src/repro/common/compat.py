@@ -1,0 +1,41 @@
+"""Version-compat shims over moving JAX APIs.
+
+``shard_map`` migrated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace (and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma``) across JAX releases.  This module resolves
+whichever spelling the installed JAX provides and normalizes the kwarg so
+call sites can uniformly write ``shard_map(f, mesh=..., in_specs=...,
+out_specs=..., check_vma=False)``.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # newer JAX: top-level export (either the fn or a submodule)
+    from jax import shard_map as _impl  # type: ignore[attr-defined]
+
+    if not callable(_impl):  # a module: grab the function
+        _impl = _impl.shard_map
+except ImportError:  # older JAX: experimental home
+    from jax.experimental.shard_map import shard_map as _impl
+
+_PARAMS = frozenset(inspect.signature(_impl).parameters)
+
+
+def shard_map(f, **kwargs):
+    """``shard_map`` with the replication-check kwarg spelled either way."""
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _impl(f, **kwargs)
+
+
+# ``jax.tree.flatten_with_path`` appeared after the ``jax.tree_util``
+# spelling; resolve whichever the installed JAX has (the ``jax.tree``
+# submodule itself is absent on older versions).
+import jax  # noqa: E402
+
+tree_flatten_with_path = getattr(
+    getattr(jax, "tree", None), "flatten_with_path", None
+) or jax.tree_util.tree_flatten_with_path

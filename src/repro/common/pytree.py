@@ -59,3 +59,39 @@ def tree_any_nan(a):
     """Traceable: True if any leaf contains a NaN/Inf."""
     flags = jax.tree.map(lambda x: jnp.any(~jnp.isfinite(x.astype(jnp.float32))), a)
     return jax.tree.reduce(jnp.logical_or, flags, jnp.zeros((), jnp.bool_))
+
+
+# ---------------------------------------------------------------------------
+# Stacking helpers (repro.sim cohort engine): per-client pytrees live as ONE
+# pytree with a leading client axis so local rounds vmap over clients.
+# ---------------------------------------------------------------------------
+
+
+def tree_stack(trees):
+    """Stack a sequence of same-structure pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_unstack(tree):
+    """Inverse of :func:`tree_stack`: list of per-slice pytrees."""
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    return [treedef.unflatten([leaf[i] for leaf in leaves]) for i in range(n)]
+
+
+def tree_take(tree, idx):
+    """Gather rows ``idx`` (int array) along each leaf's leading axis."""
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
+
+
+def tree_scatter(tree, idx, values):
+    """Write ``values`` (stacked, leading axis == len(idx)) back at rows
+    ``idx``.  Duplicate indices write in undefined order — callers reserve a
+    scratch row for padded cohort slots so real rows are written at most
+    once per call."""
+    return jax.tree.map(lambda x, v: x.at[idx].set(v), tree, values)
+
+
+def tree_where(pred, a, b):
+    """Leaf-wise ``where`` with a scalar (or broadcastable) predicate."""
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)

@@ -1,5 +1,9 @@
 """ASO-Fed core: async server (Eq.4), feature learning (Eq.5-6), online
-client update (Eq.7-11), event-driven federation simulator + baselines."""
+client update (Eq.7-11), and the algorithm strategies
+(``repro.core.algorithms``) that plug into the vectorized cohort
+simulation engine in ``repro.sim`` (tick semantics: every client arriving
+in a tick runs its local round in one vmapped jit; the server folds the
+cohort's uploads in arrival order with ``lax.scan``)."""
 from repro.core.client import (
     ClientState,
     client_step,
@@ -11,6 +15,7 @@ from repro.core.client import (
 from repro.core.feature_learning import apply_feature_learning, first_layer_path
 from repro.core.federated import (
     ALGORITHMS,
+    DeviceProfile,
     HistoryPoint,
     RunConfig,
     SimClient,
@@ -30,6 +35,7 @@ __all__ = [
     "apply_feature_learning",
     "first_layer_path",
     "ALGORITHMS",
+    "DeviceProfile",
     "HistoryPoint",
     "RunConfig",
     "SimClient",

@@ -1,0 +1,41 @@
+"""Algorithm strategy objects for the cohort simulation engine.
+
+Each strategy supplies only the local-update and aggregation rules of one
+algorithm; the shared heap/dropout/eval/history plumbing lives in
+``repro.sim.engine``.  Register new algorithms here.
+"""
+from __future__ import annotations
+
+from typing import Dict, Type
+
+from repro.core.algorithms.asofed import AsoFedStrategy
+from repro.core.algorithms.fedasync import FedAsyncStrategy
+from repro.core.algorithms.fedavg import FedAvgStrategy, FedProxStrategy
+from repro.core.algorithms.local_global import GlobalStrategy, LocalStrategy
+from repro.sim.engine import Strategy
+
+STRATEGIES: Dict[str, Type[Strategy]] = {
+    "asofed": AsoFedStrategy,
+    "fedavg": FedAvgStrategy,
+    "fedprox": FedProxStrategy,
+    "fedasync": FedAsyncStrategy,
+    "local": LocalStrategy,
+    "global": GlobalStrategy,
+}
+
+
+def get_strategy(name: str) -> Strategy:
+    return STRATEGIES[name]()
+
+
+__all__ = [
+    "Strategy",
+    "STRATEGIES",
+    "get_strategy",
+    "AsoFedStrategy",
+    "FedAvgStrategy",
+    "FedProxStrategy",
+    "FedAsyncStrategy",
+    "LocalStrategy",
+    "GlobalStrategy",
+]

@@ -1,0 +1,87 @@
+"""ASO-Fed as a cohort-engine strategy (the paper's algorithm, Eq. 4-11).
+
+Local rule: the Eq. (7)-(11) online update (surrogate grad averaged over E
+minibatches, decay-corrected direction, dynamic step multiplier).  Fold
+rule: the Eq. (4) sequential server recurrence followed by the Eq. (5)-(6)
+feature pass; each client downloads the central model as of its own fold.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_axpy, tree_sub
+from repro.core import client as client_lib
+from repro.core.algorithms.common import avg_surrogate_grad
+from repro.core.feature_learning import apply_feature_learning
+from repro.sim.engine import Strategy
+
+
+class AsoFedStrategy(Strategy):
+    name = "asofed"
+    schedule = "async"
+
+    def init_client(self, model, cfg, w0, client):
+        n0 = float(client.stream.visible(0)) if client is not None else 0.0
+        return client_lib.init_client_state(w0, n0)
+
+    def init_server(self, model, cfg_model, cfg, w0, clients, active):
+        # per-client online sample counts n'_k, indexed by cid; one extra
+        # scratch slot absorbs padded-slot writes.  Dropped clients hold 0
+        # so N' sums over responsive clients only (matches init_server).
+        n = np.zeros(len(clients) + 1, np.float32)
+        for c in active:
+            n[c.cid] = c.stream.visible(0)
+        return {"w": w0, "n": jnp.asarray(n)}
+
+    def build_local(self, model, cfg):
+        grad_fn = avg_surrogate_grad(model, cfg)
+
+        def local(st, bcast, xs, ys, delay, n_vis, t_arr):
+            g, loss = grad_fn(st.params, st.server_params, xs, ys)
+            # Eq. (8): variance-corrected direction
+            zeta = jax.tree.map(lambda gs, vp, hp: gs - vp + hp,
+                                g, st.v, st.h)
+            if cfg.dynamic_lr:
+                r = client_lib.dynamic_multiplier(st.delay_sum, st.rounds,
+                                                  delay)
+            else:
+                r = jnp.ones(())
+            new_params = tree_axpy(-r * cfg.eta, zeta, st.params)
+            # Eq. (9) / Alg. 2 line 15: slot update with the previous v
+            new_h = jax.tree.map(
+                lambda hp, vp: cfg.beta * hp + (1 - cfg.beta) * vp, st.h, st.v
+            )
+            n_new = jnp.maximum(n_vis - st.n_samples, 0.0)
+            st2 = client_lib.ClientState(
+                params=new_params, server_params=st.server_params,
+                h=new_h, v=g,
+                delay_sum=st.delay_sum + delay, rounds=st.rounds + 1.0,
+                n_samples=st.n_samples + n_new,
+            )
+            return st2, tree_sub(st.params, new_params)  # upload: the delta
+
+        return local
+
+    def build_fold(self, model, cfg_model, cfg):
+        def fold(server, delta, idx, n_vis, t_arr):
+            n = server["n"].at[idx].set(n_vis)
+            weight = n_vis / jnp.maximum(jnp.sum(n), 1e-9)  # n'_k / N'
+            w = tree_axpy(-weight, delta, server["w"])  # Eq. (4)
+            if cfg.feature_learning:
+                w = apply_feature_learning(w, cfg_model)  # Eq. (5)-(6)
+            return {"w": w, "n": n}, w
+
+        return fold
+
+    def build_merge(self, model, cfg):
+        def merge(st, w_received):
+            # the client pulls the fresh central model for its next round
+            return dataclasses.replace(
+                st, params=w_received, server_params=w_received
+            )
+
+        return merge

@@ -1,0 +1,56 @@
+"""Shared traceable local-work primitives for the algorithm strategies.
+
+These are plain functions of pytrees — the cohort engine vmaps them over
+the stacked client axis and jits the whole tick, so no ``jax.jit`` here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_add, tree_axpy, tree_scale
+from repro.core import client as client_lib
+
+
+def avg_surrogate_grad(model, cfg):
+    """Average grad of s_k over E minibatches (the per-round grad_s_k)."""
+
+    def fn(params, server_params, xs, ys):
+        def one(carry, xy):
+            g_acc, loss_acc = carry
+            x, y = xy
+            g, loss, _ = client_lib.surrogate_grad(
+                model.loss, params, server_params,
+                {"x": x, "y": y, "task": cfg.task}, cfg.lam,
+            )
+            return (tree_add(g_acc, g), loss_acc + loss), None
+
+        z = jax.tree.map(jnp.zeros_like, params)
+        (g, loss), _ = jax.lax.scan(one, (z, jnp.zeros(())), (xs, ys))
+        E = xs.shape[0]
+        return tree_scale(g, 1.0 / E), loss / E
+
+    return fn
+
+
+def sgd_epochs(model, cfg, mu: float = 0.0):
+    """E minibatch prox-SGD steps (FedAvg mu=0 / FedProx mu>0 / Local)."""
+
+    def fn(params, anchor, xs, ys):
+        def one(p, xy):
+            x, y = xy
+
+            def loss(pp):
+                l, _ = model.loss(pp, {"x": x, "y": y, "task": cfg.task})
+                return l
+
+            g = jax.grad(loss)(p)
+            if mu > 0.0:
+                g = jax.tree.map(lambda gi, pi, ai: gi + mu * (pi - ai),
+                                 g, p, anchor)
+            return tree_axpy(-cfg.eta, g, p), None
+
+        p, _ = jax.lax.scan(one, params, (xs, ys))
+        return p
+
+    return fn

@@ -1,0 +1,68 @@
+"""FedAvg / FedProx as cohort-engine strategies (synchronous baselines).
+
+Local rule: E (prox-)SGD epochs from the broadcast central model.  Fold
+rule: accumulate sample-weighted sums; the tick finalize applies the
+synchronous weighted average (order-free, so arrival order is irrelevant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_zeros_like
+from repro.core.algorithms.common import sgd_epochs
+from repro.sim.engine import Strategy
+
+
+class FedAvgStrategy(Strategy):
+    name = "fedavg"
+    schedule = "sync"
+
+    def mu(self, cfg) -> float:
+        return 0.0
+
+    def init_client(self, model, cfg, w0, client):
+        return {}  # stateless: clients restart from the broadcast model
+
+    def init_server(self, model, cfg_model, cfg, w0, clients, active):
+        return {"w": w0, "acc": tree_zeros_like(w0),
+                "tot": jnp.zeros((), jnp.float32)}
+
+    def server_broadcast(self, server):
+        return server["w"]
+
+    def build_local(self, model, cfg):
+        sgd = sgd_epochs(model, cfg, mu=self.mu(cfg))
+
+        def local(c, w_bcast, xs, ys, delay, n_vis, t_arr):
+            return c, sgd(w_bcast, w_bcast, xs, ys)
+
+        return local
+
+    def build_fold(self, model, cfg_model, cfg):
+        def fold(server, wk, idx, n_vis, t_arr):
+            acc = jax.tree.map(lambda a, b: a + n_vis * b, server["acc"], wk)
+            return ({"w": server["w"], "acc": acc,
+                     "tot": server["tot"] + n_vis}, jnp.zeros(()))
+
+        return fold
+
+    def build_finalize(self, model, cfg):
+        def finalize(server):
+            tot = server["tot"]
+            has = tot > 0  # all participants skipped: keep the old model
+            w = jax.tree.map(
+                lambda a, wp: jnp.where(has, a / jnp.maximum(tot, 1e-9), wp),
+                server["acc"], server["w"],
+            )
+            return {"w": w, "acc": tree_zeros_like(w),
+                    "tot": jnp.zeros((), jnp.float32)}
+
+        return finalize
+
+
+class FedProxStrategy(FedAvgStrategy):
+    name = "fedprox"
+
+    def mu(self, cfg) -> float:
+        return cfg.prox_mu or 0.01

@@ -1,0 +1,73 @@
+"""Local-S and Global baselines as cohort-engine strategies.
+
+Local-S: every client trains its own model, no server — the sweep
+schedule runs all clients each round in one vmapped call and evaluation
+uses the stacked per-client parameters.  Global: all data pooled on one
+machine (upper-bound-ish baseline) — a single virtual member whose batch
+is drawn across every client's stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms.common import sgd_epochs
+from repro.sim.engine import Strategy, pad_batch
+
+
+class LocalStrategy(Strategy):
+    name = "local"
+    schedule = "sweep"
+    uses_dropout = False
+    eval_per_client = True
+
+    def init_client(self, model, cfg, w0, client):
+        cid = client.cid if client is not None else 0
+        return {"w": model.init(jax.random.PRNGKey(cfg.seed + cid))}
+
+    def build_local(self, model, cfg):
+        sgd = sgd_epochs(model, cfg)
+
+        def local(c, bcast, xs, ys, delay, n_vis, t_arr):
+            return {"w": sgd(c["w"], c["w"], xs, ys)}, jnp.zeros(())
+
+        return local
+
+    def eval_params(self, server, stacked_clients):
+        return stacked_clients["w"]
+
+
+class GlobalStrategy(Strategy):
+    name = "global"
+    schedule = "sweep"
+    uses_dropout = False
+    pooled = True
+
+    def init_client(self, model, cfg, w0, client):
+        return {"w": w0}
+
+    def build_local(self, model, cfg):
+        sgd = sgd_epochs(model, cfg)
+
+        def local(c, bcast, xs, ys, delay, n_vis, t_arr):
+            return {"w": sgd(c["w"], c["w"], xs, ys)}, jnp.zeros(())
+
+        return local
+
+    def pooled_batches(self, clients, t, cfg):
+        """Fixed-size global minibatches drawn across every client."""
+        B = cfg.batch_size
+        xs_all, ys_all = [], []
+        for c in clients:
+            x, y = c.stream.batch(t, B)
+            xs_all.append(x)
+            ys_all.append(y)
+        c0 = clients[0].stream
+        x, y = pad_batch(np.concatenate(xs_all), np.concatenate(ys_all),
+                         B * 4, c0.x, c0.y)
+        return (x.reshape(4, B, *x.shape[1:]),
+                y.reshape(4, B, *y.shape[1:]))
+
+    def eval_params(self, server, stacked_clients):
+        return jax.tree.map(lambda x: x[0], stacked_clients)["w"]

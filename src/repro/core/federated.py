@@ -1,467 +1,63 @@
-"""Federated training runners: ASO-Fed + every baseline the paper compares
-against (FedAvg, FedProx, FedAsync, Local-S, Global).
+"""Federated training entry points: ASO-Fed + every baseline the paper
+compares against (FedAvg, FedProx, FedAsync, Local-S, Global).
 
-Asynchrony is *event-driven simulated time*: each client has a network
-offset (the paper's 10-100 s random delay) and a compute model; a priority
-queue of completion events drives the arrival order at the server, which is
-exactly the sequential recurrence Eq. (4) runs over.  All numerical work is
-real jitted JAX compute (DESIGN.md §2).
+This module is a thin façade.  The event-driven simulation lives in the
+``repro.sim`` subsystem (scheduler / device profiles / vectorized cohort
+engine) and each algorithm is a small strategy object under
+``repro.core.algorithms`` supplying only its local-update and aggregation
+rules.  Asynchrony is *event-driven simulated time*: each client's device
+profile yields a network offset (the paper's 10-100 s random delay) plus a
+compute model; a priority queue of completion events drives the arrival
+order at the server, which is exactly the sequential recurrence Eq. (4)
+runs over.  All numerical work is real jitted JAX compute, batched across
+every client arriving in a tick (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.algorithms import STRATEGIES, get_strategy
+from repro.sim.engine import HistoryPoint, RunConfig, run_strategy
+from repro.sim.profiles import DeviceProfile, SimClient, make_sim_clients
 
-from repro.common.pytree import tree_axpy, tree_scale, tree_sub, tree_add
-from repro.configs.base import ModelConfig
-from repro.core import client as client_lib
-from repro.core import metrics as M
-from repro.core.feature_learning import apply_feature_learning
-from repro.core.server import ServerState, aggregate, init_server
-from repro.core.streaming import OnlineStream
-
-Array = np.ndarray
-
-
-# ---------------------------------------------------------------------------
-# Simulation setup
-# ---------------------------------------------------------------------------
+__all__ = [
+    "ALGORITHMS",
+    "DeviceProfile",
+    "HistoryPoint",
+    "RunConfig",
+    "SimClient",
+    "make_sim_clients",
+    "run",
+    "run_asofed",
+    "run_fedavg",
+    "run_fedprox",
+    "run_fedasync",
+    "run_local",
+    "run_global",
+]
 
 
-@dataclasses.dataclass
-class SimClient:
-    cid: int
-    stream: OnlineStream
-    test_x: Array
-    test_y: Array
-    base_delay: float  # network offset (paper: U[10, 100] seconds)
-    compute_rate: float = 2000.0  # samples / simulated second
-    dropped: bool = False  # permanently non-responsive (Fig. 4)
+def run(name: str, model, cfg_model, clients, cfg: RunConfig,
+        **engine_kwargs) -> List[HistoryPoint]:
+    """Run one algorithm through the shared cohort engine."""
+    return run_strategy(get_strategy(name), model, cfg_model, clients, cfg,
+                        **engine_kwargs)
 
 
-def make_sim_clients(
-    datasets: Sequence[Tuple[Array, Array, Array, Array]],
-    *,
-    seed: int = 0,
-    delay_range: Tuple[float, float] = (10.0, 100.0),
-    start_frac: float = 0.3,
-    growth: float = 0.00075,
-) -> List[SimClient]:
-    rng = np.random.default_rng(seed)
-    out = []
-    for i, (xtr, ytr, xte, yte) in enumerate(datasets):
-        out.append(
-            SimClient(
-                cid=i,
-                stream=OnlineStream(
-                    xtr, ytr, start_frac=start_frac, growth=growth, seed=seed + i
-                ),
-                test_x=xte,
-                test_y=yte,
-                base_delay=float(rng.uniform(*delay_range)),
-            )
-        )
-    return out
+def _runner(name: str) -> Callable:
+    def fn(model, cfg_model, clients, cfg: RunConfig, **kw):
+        return run(name, model, cfg_model, clients, cfg, **kw)
 
-
-@dataclasses.dataclass
-class RunConfig:
-    T: int = 200  # global iterations (async) / rounds (sync)
-    sim_time_budget: Optional[float] = None  # stop on simulated seconds
-    batch_size: int = 32
-    local_epochs: int = 2  # E
-    eta: float = 0.01  # eta_bar (paper used 0.001 with many more iters)
-    lam: float = 1.0  # prox coefficient lambda
-    beta: float = 0.001  # decay coefficient
-    task: str = "regression"  # or "classification"
-    eval_every: int = 10
-    seed: int = 0
-    # ablations / robustness knobs
-    feature_learning: bool = True  # ASO-Fed(-F) when False
-    dynamic_lr: bool = True  # ASO-Fed(-D) when False
-    dropout_frac: float = 0.0  # Fig. 4: fraction permanently dropped
-    periodic_dropout: float = 0.0  # Fig. 5: per-iteration skip probability
-    # FedAvg / FedProx
-    participation: float = 0.2  # C
-    prox_mu: float = 0.0  # FedProx mu
-    # FedAsync
-    fedasync_alpha: float = 0.6
-    fedasync_staleness_exp: float = 0.5
-
-
-@dataclasses.dataclass
-class HistoryPoint:
-    global_iter: int
-    sim_time: float
-    wall_time: float
-    metrics: Dict[str, float]
-
-
-def _client_delay(c: SimClient, n_work: int, rng: np.random.Generator) -> float:
-    compute = n_work / c.compute_rate
-    network = c.base_delay * float(rng.uniform(0.8, 1.2))
-    return compute + network
-
-
-def _eval_all(model, params, clients: Sequence[SimClient], task: str):
-    preds, targets = [], []
-    for c in clients:
-        p = np.asarray(model.predict(params, {"x": jnp.asarray(c.test_x)}))
-        preds.append(p)
-        targets.append(c.test_y)
-    pred = np.concatenate(preds)
-    tgt = np.concatenate(targets)
-    if task == "classification":
-        return M.classification_report(pred, tgt)
-    return M.regression_report(pred[..., 0] if pred.ndim > 1 else pred, tgt)
-
-
-def _mark_dropouts(clients: List[SimClient], frac: float, rng) -> None:
-    k = int(len(clients) * frac)
-    for c in clients:
-        c.dropped = False
-    for i in rng.choice(len(clients), size=k, replace=False):
-        clients[int(i)].dropped = True
-
-
-# ---------------------------------------------------------------------------
-# Shared jitted local-work primitives
-# ---------------------------------------------------------------------------
-
-
-def _avg_surrogate_grad(model, cfg: RunConfig):
-    """Average grad of s_k over E minibatches (the per-round grad_s_k)."""
-
-    @jax.jit
-    def fn(params, server_params, xs, ys):
-        def one(carry, xy):
-            g_acc, loss_acc = carry
-            x, y = xy
-            g, loss, _ = client_lib.surrogate_grad(
-                model.loss, params, server_params,
-                {"x": x, "y": y, "task": cfg.task}, cfg.lam,
-            )
-            return (tree_add(g_acc, g), loss_acc + loss), None
-
-        z = jax.tree.map(jnp.zeros_like, params)
-        (g, loss), _ = jax.lax.scan(one, (z, jnp.zeros(())), (xs, ys))
-        E = xs.shape[0]
-        return tree_scale(g, 1.0 / E), loss / E
-
+    fn.__name__ = f"run_{name}"
+    fn.__doc__ = f"``run('{name}', ...)`` through the cohort engine."
     return fn
 
 
-def _sgd_epochs(model, cfg: RunConfig, mu: float = 0.0):
-    """E minibatch prox-SGD steps (FedAvg mu=0 / FedProx mu>0 / Local)."""
+run_asofed = _runner("asofed")
+run_fedavg = _runner("fedavg")
+run_fedprox = _runner("fedprox")  # mu defaults to 0.01 in FedProxStrategy
+run_fedasync = _runner("fedasync")
+run_local = _runner("local")
+run_global = _runner("global")
 
-    @jax.jit
-    def fn(params, anchor, xs, ys):
-        def one(p, xy):
-            x, y = xy
-
-            def loss(pp):
-                l, _ = model.loss(pp, {"x": x, "y": y, "task": cfg.task})
-                return l
-
-            g = jax.grad(loss)(p)
-            if mu > 0.0:
-                g = jax.tree.map(lambda gi, pi, ai: gi + mu * (pi - ai),
-                                 g, p, anchor)
-            return tree_axpy(-cfg.eta, g, p), None
-
-        p, _ = jax.lax.scan(one, params, (xs, ys))
-        return p
-
-    return fn
-
-
-def _stack_batches(c: SimClient, t: int, cfg: RunConfig, n_steps: int):
-    xs, ys = [], []
-    for _ in range(n_steps):
-        x, y = c.stream.batch(t, cfg.batch_size)
-        if len(x) < cfg.batch_size:  # pad by resampling (keeps shapes static)
-            reps = int(np.ceil(cfg.batch_size / len(x)))
-            x = np.concatenate([x] * reps)[: cfg.batch_size]
-            y = np.concatenate([y] * reps)[: cfg.batch_size]
-        xs.append(x)
-        ys.append(y)
-    return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
-
-
-# ---------------------------------------------------------------------------
-# ASO-Fed (the paper's algorithm)
-# ---------------------------------------------------------------------------
-
-
-def run_asofed(model, cfg_model: ModelConfig, clients: List[SimClient],
-               cfg: RunConfig) -> List[HistoryPoint]:
-    rng = np.random.default_rng(cfg.seed)
-    if cfg.dropout_frac:
-        _mark_dropouts(clients, cfg.dropout_frac, rng)
-    w0 = model.init(jax.random.PRNGKey(cfg.seed))
-    active = [c for c in clients if not c.dropped]
-    server = init_server(w0, [c.cid for c in active],
-                         {c.cid: c.stream.visible(0) for c in active})
-    cstate = {
-        c.cid: client_lib.init_client_state(w0, c.stream.visible(0))
-        for c in active
-    }
-    grad_fn = _avg_surrogate_grad(model, cfg)
-    by_id = {c.cid: c for c in active}
-
-    # jitted ASO-Fed local round (Eq. 7-11)
-    @jax.jit
-    def local_round(state: client_lib.ClientState, xs, ys, delay, n_new):
-        def loss_fn(p, b):
-            return model.loss(p, b)
-
-        g, loss = grad_fn(state.params, state.server_params, xs, ys)
-        zeta = jax.tree.map(lambda gs, vp, hp: gs - vp + hp, g, state.v, state.h)
-        if cfg.dynamic_lr:
-            r = client_lib.dynamic_multiplier(state.delay_sum, state.rounds, delay)
-        else:
-            r = jnp.ones(())
-        new_params = tree_axpy(-r * cfg.eta, zeta, state.params)
-        new_h = jax.tree.map(lambda hp, vp: cfg.beta * hp + (1 - cfg.beta) * vp,
-                             state.h, state.v)
-        new_state = client_lib.ClientState(
-            params=new_params, server_params=state.server_params, h=new_h, v=g,
-            delay_sum=state.delay_sum + delay, rounds=state.rounds + 1.0,
-            n_samples=state.n_samples + n_new,
-        )
-        return new_state, loss
-
-    t0 = time.perf_counter()
-    history: List[HistoryPoint] = []
-    # seed the event queue: every active client starts on w^0
-    heap: List[Tuple[float, int]] = []
-    for c in active:
-        heapq.heappush(heap, (_client_delay(c, cfg.batch_size, rng), c.cid))
-
-    t = 0
-    while t < cfg.T and heap:
-        now, cid = heapq.heappop(heap)
-        if cfg.sim_time_budget and now > cfg.sim_time_budget:
-            break
-        c = by_id[cid]
-        if cfg.periodic_dropout and rng.uniform() < cfg.periodic_dropout:
-            # client silently skips this round (Fig. 5); re-queue
-            heapq.heappush(
-                heap, (now + _client_delay(c, cfg.batch_size, rng), cid)
-            )
-            continue
-        st = cstate[cid]
-        n_vis = c.stream.visible(t)
-        n_new = n_vis - float(st.n_samples)
-        xs, ys = _stack_batches(c, t, cfg, cfg.local_epochs)
-        delay = _client_delay(c, cfg.local_epochs * cfg.batch_size, rng)
-        st_before = st.params
-        st, loss = local_round(st, xs, ys, jnp.float32(delay),
-                               jnp.float32(max(n_new, 0.0)))
-        # upload: server folds the delta in (Eq. 4) + feature pass (Eq. 5-6)
-        server = aggregate(
-            server, cid, tree_sub(st_before, st.params), n_vis, cfg_model,
-            upload_is_delta=True, feature_learning=cfg.feature_learning,
-        )
-        t = server.t
-        # client receives the fresh central model for its next round
-        cstate[cid] = client_lib.receive_server_model(st, server.w)
-        heapq.heappush(heap, (now + delay, cid))
-        if t % cfg.eval_every == 0 or t == cfg.T:
-            history.append(HistoryPoint(
-                t, now, time.perf_counter() - t0,
-                _eval_all(model, server.w, clients, cfg.task),
-            ))
-    return history
-
-
-# ---------------------------------------------------------------------------
-# FedAvg / FedProx (synchronous)
-# ---------------------------------------------------------------------------
-
-
-def run_fedavg(model, cfg_model: ModelConfig, clients: List[SimClient],
-               cfg: RunConfig, prox_mu: float = 0.0) -> List[HistoryPoint]:
-    rng = np.random.default_rng(cfg.seed)
-    if cfg.dropout_frac:
-        _mark_dropouts(clients, cfg.dropout_frac, rng)
-    active = [c for c in clients if not c.dropped]
-    w = model.init(jax.random.PRNGKey(cfg.seed))
-    sgd = _sgd_epochs(model, cfg, mu=prox_mu)
-    t0 = time.perf_counter()
-    sim_time = 0.0
-    history: List[HistoryPoint] = []
-    m = max(1, int(cfg.participation * len(active)))
-    for t in range(1, cfg.T + 1):
-        if cfg.sim_time_budget and sim_time > cfg.sim_time_budget:
-            break
-        sel = rng.choice(len(active), size=m, replace=False)
-        new_ws, weights, delays = [], [], []
-        for i in sel:
-            c = active[int(i)]
-            if cfg.periodic_dropout and rng.uniform() < cfg.periodic_dropout:
-                continue
-            xs, ys = _stack_batches(c, t, cfg, cfg.local_epochs)
-            wk = sgd(w, w, xs, ys)
-            new_ws.append(wk)
-            weights.append(c.stream.visible(t))
-            delays.append(_client_delay(c, cfg.local_epochs * cfg.batch_size, rng))
-        if not new_ws:
-            continue
-        # synchronous barrier: the round costs the *slowest* client
-        sim_time += max(delays)
-        tot = sum(weights)
-        w = jax.tree.map(
-            lambda *xs_: sum(wi / tot * x for wi, x in zip(weights, xs_)),
-            *new_ws,
-        )
-        if t % cfg.eval_every == 0 or t == cfg.T:
-            history.append(HistoryPoint(
-                t, sim_time, time.perf_counter() - t0,
-                _eval_all(model, w, clients, cfg.task),
-            ))
-    return history
-
-
-def run_fedprox(model, cfg_model, clients, cfg: RunConfig):
-    return run_fedavg(model, cfg_model, clients, cfg,
-                      prox_mu=cfg.prox_mu or 0.01)
-
-
-# ---------------------------------------------------------------------------
-# FedAsync (Xie et al. 2019)
-# ---------------------------------------------------------------------------
-
-
-def run_fedasync(model, cfg_model: ModelConfig, clients: List[SimClient],
-                 cfg: RunConfig) -> List[HistoryPoint]:
-    rng = np.random.default_rng(cfg.seed)
-    if cfg.dropout_frac:
-        _mark_dropouts(clients, cfg.dropout_frac, rng)
-    active = [c for c in clients if not c.dropped]
-    w = model.init(jax.random.PRNGKey(cfg.seed))
-    sgd = _sgd_epochs(model, cfg, mu=0.005)  # FedAsync regularized local step
-    by_id = {c.cid: c for c in active}
-    version = {c.cid: 0 for c in active}  # model version each client holds
-    local_w = {c.cid: w for c in active}
-    t0 = time.perf_counter()
-    history: List[HistoryPoint] = []
-    heap: List[Tuple[float, int]] = []
-    for c in active:
-        heapq.heappush(heap, (_client_delay(c, cfg.batch_size, rng), c.cid))
-    t = 0
-    while t < cfg.T and heap:
-        now, cid = heapq.heappop(heap)
-        if cfg.sim_time_budget and now > cfg.sim_time_budget:
-            break
-        c = by_id[cid]
-        if cfg.periodic_dropout and rng.uniform() < cfg.periodic_dropout:
-            heapq.heappush(heap, (now + _client_delay(c, cfg.batch_size, rng), cid))
-            continue
-        xs, ys = _stack_batches(c, t, cfg, cfg.local_epochs)
-        wk = sgd(local_w[cid], local_w[cid], xs, ys)
-        staleness = t - version[cid]
-        alpha_t = cfg.fedasync_alpha * (1.0 + staleness) ** (
-            -cfg.fedasync_staleness_exp
-        )
-        w = jax.tree.map(lambda a, b: (1 - alpha_t) * a + alpha_t * b, w, wk)
-        t += 1
-        version[cid] = t
-        local_w[cid] = w
-        delay = _client_delay(c, cfg.local_epochs * cfg.batch_size, rng)
-        heapq.heappush(heap, (now + delay, cid))
-        if t % cfg.eval_every == 0 or t == cfg.T:
-            history.append(HistoryPoint(
-                t, now, time.perf_counter() - t0,
-                _eval_all(model, w, clients, cfg.task),
-            ))
-    return history
-
-
-# ---------------------------------------------------------------------------
-# Local-S and Global baselines
-# ---------------------------------------------------------------------------
-
-
-def run_local(model, cfg_model, clients: List[SimClient],
-              cfg: RunConfig) -> List[HistoryPoint]:
-    rng = np.random.default_rng(cfg.seed)
-    sgd = _sgd_epochs(model, cfg)
-    params = {
-        c.cid: model.init(jax.random.PRNGKey(cfg.seed + c.cid)) for c in clients
-    }
-    t0 = time.perf_counter()
-    history: List[HistoryPoint] = []
-    for t in range(1, cfg.T + 1):
-        for c in clients:
-            xs, ys = _stack_batches(c, t, cfg, cfg.local_epochs)
-            params[c.cid] = sgd(params[c.cid], params[c.cid], xs, ys)
-        if t % cfg.eval_every == 0 or t == cfg.T:
-            preds, tgts = [], []
-            for c in clients:
-                p = np.asarray(
-                    model.predict(params[c.cid], {"x": jnp.asarray(c.test_x)})
-                )
-                preds.append(p)
-                tgts.append(c.test_y)
-            pred, tgt = np.concatenate(preds), np.concatenate(tgts)
-            mets = (
-                M.classification_report(pred, tgt)
-                if cfg.task == "classification"
-                else M.regression_report(
-                    pred[..., 0] if pred.ndim > 1 else pred, tgt
-                )
-            )
-            history.append(HistoryPoint(t, float(t), time.perf_counter() - t0, mets))
-    return history
-
-
-def run_global(model, cfg_model, clients: List[SimClient],
-               cfg: RunConfig) -> List[HistoryPoint]:
-    """All data pooled on one machine (upper-bound-ish baseline)."""
-    rng = np.random.default_rng(cfg.seed)
-    sgd = _sgd_epochs(model, cfg)
-    w = model.init(jax.random.PRNGKey(cfg.seed))
-    t0 = time.perf_counter()
-    history: List[HistoryPoint] = []
-    for t in range(1, cfg.T + 1):
-        xs_all, ys_all = [], []
-        for c in clients:
-            x, y = c.stream.batch(t, cfg.batch_size)
-            xs_all.append(x)
-            ys_all.append(y)
-        x = np.concatenate(xs_all)[: cfg.batch_size * 4]
-        y = np.concatenate(ys_all)[: cfg.batch_size * 4]
-        # fixed-size global minibatches
-        reps = int(np.ceil(cfg.batch_size * 4 / len(x)))
-        x = np.concatenate([x] * reps)[: cfg.batch_size * 4]
-        y = np.concatenate([y] * reps)[: cfg.batch_size * 4]
-        xs = jnp.asarray(x).reshape(4, cfg.batch_size, *x.shape[1:])
-        ys = jnp.asarray(y).reshape(4, cfg.batch_size, *y.shape[1:])
-        w = sgd(w, w, xs, ys)
-        if t % cfg.eval_every == 0 or t == cfg.T:
-            history.append(HistoryPoint(
-                t, float(t), time.perf_counter() - t0,
-                _eval_all(model, w, clients, cfg.task),
-            ))
-    return history
-
-
-ALGORITHMS: Dict[str, Callable] = {
-    "asofed": run_asofed,
-    "fedavg": run_fedavg,
-    "fedprox": run_fedprox,
-    "fedasync": run_fedasync,
-    "local": run_local,
-    "global": run_global,
-}
-
-
-def run(name: str, model, cfg_model, clients, cfg: RunConfig):
-    return ALGORITHMS[name](model, cfg_model, clients, cfg)
+ALGORITHMS: Dict[str, Callable] = {name: _runner(name) for name in STRATEGIES}

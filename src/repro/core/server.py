@@ -62,16 +62,24 @@ def aggregate(
     feature_learning: bool = True,
     use_kernel: bool = False,
 ) -> ServerState:
-    """One asynchronous global iteration (Eq. 4 + Eq. 5-6)."""
-    state.n[client_id] = float(n_k)
-    N = sum(state.n.values())
+    """One asynchronous global iteration (Eq. 4 + Eq. 5-6).
+
+    Fully non-mutating: the input ``state`` (including its ``n`` and
+    ``copies`` dicts) is left untouched so callers can keep old states for
+    resumable / replayable simulation.
+    """
+    n = dict(state.n)
+    n[client_id] = float(n_k)
+    N = sum(n.values())
     weight = jnp.asarray(n_k / max(N, 1e-9), jnp.float32)
+    copies = state.copies
     if upload_is_delta:
         delta = upload
     else:
         delta = tree_sub(state.copies[client_id], upload)
-        state.copies[client_id] = upload
+        copies = dict(state.copies)
+        copies[client_id] = upload
     w = _fold(state.w, delta, weight)
     if feature_learning:
         w = apply_feature_learning(w, cfg, use_kernel=use_kernel)
-    return dataclasses.replace(state, w=w, t=state.t + 1)
+    return dataclasses.replace(state, w=w, n=n, copies=copies, t=state.t + 1)

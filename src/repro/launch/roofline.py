@@ -13,6 +13,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.common.compat import tree_flatten_with_path
+
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models.model import build_spec
 from repro.models.spec import is_def
@@ -56,7 +58,7 @@ def param_counts(cfg: ModelConfig) -> Dict[str, float]:
     spec = build_spec(cfg)
     total = 0
     routed = 0
-    for path, d in jax.tree.flatten_with_path(spec, is_leaf=is_def)[0]:
+    for path, d in tree_flatten_with_path(spec, is_leaf=is_def)[0]:
         n = int(np.prod(d.shape))
         total += n
         keys = [str(getattr(p, "key", "")) for p in path]

@@ -26,7 +26,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.common.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models.dist import DistContext

@@ -1,0 +1,49 @@
+"""Event-driven federated simulation subsystem.
+
+Tick semantics: the engine pops a maximal cohort of pending arrivals with
+pairwise-distinct clients from the scheduler, runs every local round in one
+``jax.vmap``-ed jit over the stacked client-state pytree, folds uploads
+into the server in arrival order with ``jax.lax.scan`` (Eq. 4 + Eq. 5-6
+preserved exactly), then scatters the per-client downloads back.  See
+``repro.sim.engine`` for the full contract and ``repro.core.algorithms``
+for the algorithm plug-ins.
+"""
+from repro.sim.engine import (
+    HistoryPoint,
+    RunConfig,
+    Strategy,
+    run_strategy,
+    stack_batches,
+)
+from repro.sim.profiles import (
+    DeviceProfile,
+    SimClient,
+    make_profiles,
+    make_sim_clients,
+)
+from repro.sim.scheduler import (
+    Arrival,
+    AsyncScheduler,
+    SweepScheduler,
+    SyncScheduler,
+    mark_dropouts,
+)
+from repro.sim.streaming import OnlineStream
+
+__all__ = [
+    "HistoryPoint",
+    "RunConfig",
+    "Strategy",
+    "run_strategy",
+    "stack_batches",
+    "DeviceProfile",
+    "SimClient",
+    "make_profiles",
+    "make_sim_clients",
+    "Arrival",
+    "AsyncScheduler",
+    "SweepScheduler",
+    "SyncScheduler",
+    "mark_dropouts",
+    "OnlineStream",
+]

@@ -1,0 +1,476 @@
+"""Vectorized cohort executor for event-driven federated simulation.
+
+The engine drains a scheduler in **ticks**.  A tick is a maximal run of
+pending arrivals with pairwise-distinct clients (capped at ``max_cohort``):
+
+1. every client arriving in the tick runs its local round in ONE
+   ``jax.vmap``-ed jit call over the stacked per-client state pytree
+   (leading client axis, scratch row for padded slots);
+2. the server folds the cohort's uploads **in arrival order** with
+   ``jax.lax.scan`` — the sequential recurrence of the paper's Eq. (4)
+   and the Eq. (5)-(6) feature pass are preserved exactly (each client
+   receives the central model as of its own fold, bit-for-bit the state
+   it would have seen in a per-arrival loop, up to fp reassociation);
+3. evaluation is one batched/padded predict over all clients instead of
+   K separate device round-trips.
+
+Because the scheduler draws every delay/skip at pop time, the arrival
+stream is invariant to how it is chunked into ticks: the engine at any
+``max_cohort`` (including 1) replays the same trajectory within fp32
+tolerance — the property the equivalence tests pin down.
+
+Algorithms plug in as :class:`Strategy` objects (see
+``repro.core.algorithms``) supplying only the local-update and
+aggregation rules; all heap/dropout/eval/history plumbing lives here,
+compiled once per (model, config) rather than once per runner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import weakref
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_stack, tree_take, tree_scatter, tree_where
+from repro.sim.profiles import SimClient
+from repro.sim.scheduler import AsyncScheduler, SyncScheduler, SweepScheduler
+from repro.sim.streaming import OnlineStream
+
+Array = np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Run configuration / history (public API, re-exported by repro.core)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunConfig:
+    T: int = 200  # global iterations (async) / rounds (sync)
+    sim_time_budget: Optional[float] = None  # stop on simulated seconds
+    batch_size: int = 32
+    local_epochs: int = 2  # E
+    eta: float = 0.01  # eta_bar (paper used 0.001 with many more iters)
+    lam: float = 1.0  # prox coefficient lambda
+    beta: float = 0.001  # decay coefficient
+    task: str = "regression"  # or "classification"
+    eval_every: int = 10
+    seed: int = 0
+    # ablations / robustness knobs
+    feature_learning: bool = True  # ASO-Fed(-F) when False
+    dynamic_lr: bool = True  # ASO-Fed(-D) when False
+    dropout_frac: float = 0.0  # Fig. 4: fraction permanently dropped
+    periodic_dropout: float = 0.0  # Fig. 5: per-iteration skip probability
+    # FedAvg / FedProx
+    participation: float = 0.2  # C
+    prox_mu: float = 0.0  # FedProx mu
+    # FedAsync
+    fedasync_alpha: float = 0.6
+    fedasync_staleness_exp: float = 0.5
+    # engine
+    max_cohort: Optional[int] = None  # cap on clients per tick (None: all)
+
+
+@dataclasses.dataclass
+class HistoryPoint:
+    global_iter: int
+    sim_time: float
+    wall_time: float
+    metrics: Dict[str, float]
+
+
+# ---------------------------------------------------------------------------
+# Strategy protocol
+# ---------------------------------------------------------------------------
+
+
+class Strategy:
+    """Algorithm plug-in: local-update + aggregation rules, nothing else.
+
+    ``build_*`` methods return *traceable* functions (no ``jax.jit`` — the
+    engine jits the whole tick).  Per-member signatures:
+
+    * local(carry, bcast, xs, ys, delay, n_vis, t_arr) -> (carry', upload)
+    * fold(server, upload, idx, n_vis, t_arr) -> (server', received)
+    * merge(carry, received) -> carry   (post-fold download to the client)
+    * finalize(server) -> server        (sync barrier, e.g. FedAvg average)
+    """
+
+    name: str = "base"
+    schedule: str = "async"  # "async" | "sync" | "sweep"
+    uses_dropout: bool = True
+    pooled: bool = False  # Global baseline: one virtual member, pooled data
+    eval_per_client: bool = False  # Local baseline: per-client eval params
+
+    # -- state construction ---------------------------------------------
+    def init_client(self, model, cfg: RunConfig, w0,
+                    client: Optional[SimClient]):
+        raise NotImplementedError
+
+    def init_server(self, model, cfg_model, cfg: RunConfig, w0,
+                    clients: Sequence[SimClient],
+                    active: Sequence[SimClient]):
+        return {}
+
+    # -- traceable pieces ------------------------------------------------
+    def build_local(self, model, cfg: RunConfig):
+        raise NotImplementedError
+
+    def build_fold(self, model, cfg_model, cfg: RunConfig):
+        return None  # no server (Local baseline)
+
+    def build_merge(self, model, cfg: RunConfig):
+        return lambda carry, received: carry
+
+    def build_finalize(self, model, cfg: RunConfig):
+        return None
+
+    def server_broadcast(self, server):
+        return server
+
+    # -- evaluation ------------------------------------------------------
+    def eval_params(self, server, stacked_clients):
+        """Params to evaluate: central model, or stacked per-client params
+        when ``eval_per_client``."""
+        return server["w"]
+
+    # -- pooled-data hook (Global baseline only) -------------------------
+    def pooled_batches(self, clients, t: int, cfg: RunConfig):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Host-side batch construction
+# ---------------------------------------------------------------------------
+
+
+def pad_batch(x: Array, y: Array, size: int, template_x: Array,
+              template_y: Array) -> Tuple[Array, Array]:
+    """Force (x, y) to exactly ``size`` rows (keeps jit shapes static).
+
+    Short draws are padded by resampling; an *empty* draw (a client whose
+    visible window is empty) yields all-zero rows instead of the
+    historical division-by-zero crash.  ``template_*`` supply the row
+    shape/dtype for the empty case.
+    """
+    if len(x) == 0:
+        return (np.zeros((size,) + template_x.shape[1:], template_x.dtype),
+                np.zeros((size,) + template_y.shape[1:], template_y.dtype))
+    if len(x) < size:
+        reps = int(np.ceil(size / len(x)))
+        x = np.concatenate([x] * reps)
+        y = np.concatenate([y] * reps)
+    return x[:size], y[:size]
+
+
+def stack_batches(stream: OnlineStream, t: int, batch_size: int,
+                  n_steps: int) -> Tuple[Array, Array]:
+    """(n_steps, batch_size, ...) minibatches from one client's stream."""
+    xs, ys = [], []
+    for _ in range(n_steps):
+        x, y = pad_batch(*stream.batch(t, batch_size), batch_size,
+                         stream.x, stream.y)
+        xs.append(x)
+        ys.append(y)
+    return np.stack(xs), np.stack(ys)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-tick cache: one compilation per (model, strategy, config, shapes)
+# — shared across runs, NOT rebuilt per runner invocation.
+# ---------------------------------------------------------------------------
+
+_TICK_CACHE: Dict[Any, Tuple[Any, Any]] = {}
+_PREDICT_CACHE: Dict[Any, Tuple[Any, Any]] = {}
+
+
+def _mask_select(mask, new, old):
+    """Per-member select: mask (P,) broadcast against stacked leaves."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(mask.reshape(mask.shape + (1,) * (n.ndim - 1)),
+                               n, o),
+        new, old,
+    )
+
+
+def _build_tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig):
+    local = strategy.build_local(model, cfg)
+    fold = strategy.build_fold(model, cfg_model, cfg)
+    merge = strategy.build_merge(model, cfg)
+    finalize = strategy.build_finalize(model, cfg)
+
+    def tick(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
+        cohort0 = tree_take(stacked, idx)
+        bcast = strategy.server_broadcast(server)
+        cohort, uploads = jax.vmap(
+            local, in_axes=(0, None, 0, 0, 0, 0, 0)
+        )(cohort0, bcast, xs, ys, delays, n_vis, t_arr)
+        if fold is not None:
+            def step(sv, inp):
+                up, ix, nv, ta, mk = inp
+                sv2, received = fold(sv, up, ix, nv, ta)
+                # padded slots leave the server untouched
+                return tree_where(mk, sv2, sv), received
+            server, received = jax.lax.scan(
+                step, server, (uploads, idx, n_vis, t_arr, mask)
+            )
+            cohort = jax.vmap(merge)(cohort, received)
+        if finalize is not None:
+            server = finalize(server)
+        # masked write-back: padded slots target the scratch row and revert
+        # to their pre-tick values, so real rows are written exactly once
+        stacked = tree_scatter(stacked, idx, _mask_select(mask, cohort, cohort0))
+        return stacked, server
+
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    return jax.jit(tick, donate_argnums=donate)
+
+
+def _cache_get(cache, key, anchors):
+    hit = cache.get(key)
+    if hit is not None and all(r() is a for r, a in zip(hit[0], anchors)):
+        return hit[1]
+    return None
+
+
+def _cache_put(cache, key, anchors, value):
+    if len(cache) > 64:  # unbounded model churn guard
+        cache.clear()
+    cache[key] = (tuple(weakref.ref(a) for a in anchors), value)
+
+
+def _tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig, K: int):
+    # runtime-only fields don't affect the traced computation: normalize
+    # them out so e.g. benchmark sweeps over T reuse one compilation
+    cfg_key = dataclasses.replace(cfg, T=0, sim_time_budget=None,
+                                  eval_every=0, seed=0, max_cohort=None)
+    key = (id(model), id(cfg_model), type(strategy).__name__, strategy.name,
+           dataclasses.astuple(cfg_key), K)
+    fn = _cache_get(_TICK_CACHE, key, (model, cfg_model))
+    if fn is None:
+        fn = _build_tick_fn(strategy, model, cfg_model, cfg)
+        _cache_put(_TICK_CACHE, key, (model, cfg_model), fn)
+    return fn
+
+
+def _predict_fn(model, per_client: bool):
+    key = (id(model), per_client)
+    fn = _cache_get(_PREDICT_CACHE, key, (model,))
+    if fn is None:
+        one = lambda p, x: model.predict(p, {"x": x})  # noqa: E731
+        fn = jax.jit(jax.vmap(one, in_axes=(0, 0) if per_client else (None, 0)))
+        _cache_put(_PREDICT_CACHE, key, (model,), fn)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Batched evaluation: one padded predict over every client's test split
+# ---------------------------------------------------------------------------
+
+
+class _Evaluator:
+    def __init__(self, model, clients: Sequence[SimClient], task: str,
+                 per_client: bool):
+        self.task = task
+        self.per_client = per_client
+        self.predict = _predict_fn(model, per_client)
+        self.lens = [len(c.test_x) for c in clients]
+        n_max = max(self.lens)
+        K = len(clients)
+        x0 = clients[0].test_x
+        X = np.zeros((K, n_max) + x0.shape[1:], x0.dtype)
+        for k, c in enumerate(clients):
+            X[k, : self.lens[k]] = c.test_x
+        self.X = jnp.asarray(X)
+        self.targets = np.concatenate([c.test_y for c in clients])
+
+    def __call__(self, params) -> Dict[str, float]:
+        # deferred import: repro.core packages the algorithm layer above
+        # this engine; importing it at module scope would be circular
+        from repro.core import metrics as M
+
+        preds = np.asarray(self.predict(params, self.X))
+        pred = np.concatenate([preds[k, :n] for k, n in enumerate(self.lens)])
+        if self.task == "classification":
+            return M.classification_report(pred, self.targets)
+        return M.regression_report(
+            pred[..., 0] if pred.ndim > 1 else pred, self.targets
+        )
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+def run_strategy(
+    strategy: Strategy,
+    model,
+    cfg_model,
+    clients: Sequence[SimClient],
+    cfg: RunConfig,
+    *,
+    max_cohort: Optional[int] = None,
+    trace: Optional[List] = None,
+    stats: Optional[Dict] = None,
+) -> List[HistoryPoint]:
+    """Run one algorithm through the cohort engine.
+
+    ``max_cohort`` caps the clients per tick (1 reproduces the per-arrival
+    dispatch pattern; None batches every pending arrival).  ``trace``, when
+    a list, receives ``(t, eval-params-as-numpy)`` after every tick — the
+    hook the equivalence tests use.  ``stats``, when a dict, is filled with
+    ``{"ticks", "iters", "sim_time"}`` counters (benchmark hook).
+    """
+    clients = list(clients)
+    K = len(clients)
+    # client cids index rows of the stacked state pytree (and the server's
+    # per-client count arrays): require the dense 0..K-1 layout up front —
+    # JAX gather/scatter would clamp a stray cid silently, not raise
+    if [c.cid for c in clients] != list(range(K)):
+        raise ValueError(
+            "run_strategy requires clients with cid == position "
+            f"(0..{K - 1}); got {[c.cid for c in clients]}"
+        )
+    E, B = cfg.local_epochs, cfg.batch_size
+    max_cohort = max_cohort if max_cohort is not None else cfg.max_cohort
+    w0 = model.init(jax.random.PRNGKey(cfg.seed))
+    drop = cfg.dropout_frac if strategy.uses_dropout else 0.0
+    skip = cfg.periodic_dropout if strategy.uses_dropout else 0.0
+
+    if strategy.schedule == "async":
+        sched = AsyncScheduler(
+            clients, seed=cfg.seed, dropout_frac=drop, skip_prob=skip,
+            init_work=B, round_work=E * B, sim_time_budget=cfg.sim_time_budget,
+        )
+        active = sched.active
+        pad = max(1, min(max_cohort or len(active), max(len(active), 1)))
+    elif strategy.schedule == "sync":
+        sched = SyncScheduler(
+            clients, seed=cfg.seed, dropout_frac=drop, skip_prob=skip,
+            participation=cfg.participation, round_work=E * B,
+        )
+        active = sched.active
+        pad = sched.m
+    else:  # sweep
+        sched = SweepScheduler(clients)
+        active = sched.active
+        pad = 1 if strategy.pooled else K
+
+    n_members = 1 if strategy.pooled else K
+    members = [None] if strategy.pooled else clients
+    # stacked client states, + one scratch row targeted by padded slots
+    stacked = tree_stack(
+        [strategy.init_client(model, cfg, w0, c) for c in members]
+        + [strategy.init_client(model, cfg, w0, members[0])]
+    )
+    server = strategy.init_server(model, cfg_model, cfg, w0, clients, active)
+    tick_fn = _tick_fn(strategy, model, cfg_model, cfg, K)
+    evaluator = _Evaluator(model, clients, cfg.task, strategy.eval_per_client)
+    by_id = {c.cid: c for c in clients}
+    scratch = n_members  # index of the scratch row
+
+    history: List[HistoryPoint] = []
+    t0 = time.perf_counter()
+
+    def eval_params():
+        members_view = jax.tree.map(lambda x: x[:n_members], stacked)
+        return strategy.eval_params(server, members_view)
+
+    def record(t: int, sim_time: float):
+        history.append(HistoryPoint(
+            t, sim_time, time.perf_counter() - t0, evaluator(eval_params())
+        ))
+
+    def run_tick(arrivals, t_of, pooled_batch=None):
+        """Build padded host arrays for one tick and dispatch the jit.
+
+        Cohorts are padded to power-of-two buckets (capped at ``pad``) so a
+        handful of compiled shapes serve every tick without paying full-
+        cohort compute when few clients arrive.
+        """
+        nonlocal stacked, server
+        n_real = len(arrivals)
+        P = min(pad, 1 << max(n_real - 1, 0).bit_length())
+        idx = np.full(P, scratch, np.int32)
+        delays = np.zeros(P, np.float32)
+        n_vis = np.zeros(P, np.float32)
+        t_arr = np.zeros(P, np.float32)
+        mask = np.zeros(P, bool)
+        xs_l, ys_l = [], []
+        for i, a in enumerate(arrivals):
+            t_i = t_of(i)
+            idx[i] = 0 if strategy.pooled else a.cid
+            delays[i] = a.delay
+            t_arr[i] = t_i
+            mask[i] = True
+            if pooled_batch is not None:
+                x_i, y_i = pooled_batch
+            else:
+                c = by_id[a.cid]
+                n_vis[i] = c.stream.visible(t_i)
+                x_i, y_i = stack_batches(c.stream, t_i, B, E)
+            xs_l.append(x_i)
+            ys_l.append(y_i)
+        for _ in range(P - n_real):  # zero pads keep shapes static
+            xs_l.append(np.zeros_like(xs_l[0]))
+            ys_l.append(np.zeros_like(ys_l[0]))
+        stacked, server = tick_fn(
+            stacked, server,
+            jnp.asarray(idx), jnp.asarray(np.stack(xs_l)),
+            jnp.asarray(np.stack(ys_l)), jnp.asarray(delays),
+            jnp.asarray(n_vis), jnp.asarray(t_arr), jnp.asarray(mask),
+        )
+
+    n_ticks, t, sim_time = 0, 0, 0.0
+    if strategy.schedule == "async":
+        # a client with an empty local split (visible == 0 forever) can
+        # never train: its arrivals are dropped so fabricated zero batches
+        # are never folded in (FedAsync mixes at full weight, without the
+        # n_vis/N guard ASO-Fed has)
+        trainable = {c.cid for c in active if c.stream.n > 0}
+        next_eval = cfg.eval_every
+        while t < cfg.T and trainable:
+            arrivals = sched.next_tick(min(pad, cfg.T - t))
+            if not arrivals:
+                break  # drained or over the simulated-time budget
+            arrivals = [a for a in arrivals if a.cid in trainable]
+            if not arrivals:
+                continue  # tick held only empty-split clients
+            run_tick(arrivals, t_of=lambda i, t=t: t + i)
+            n_ticks += 1
+            t += len(arrivals)
+            sim_time = arrivals[-1].time
+            if trace is not None:
+                trace.append((t, jax.tree.map(np.asarray, eval_params())))
+            if t >= next_eval or t >= cfg.T:
+                record(t, sim_time)
+                while next_eval <= t:
+                    next_eval += cfg.eval_every
+    else:
+        for t in range(1, cfg.T + 1):
+            if (strategy.schedule == "sync" and cfg.sim_time_budget
+                    and sim_time > cfg.sim_time_budget):
+                break
+            arrivals, round_time = sched.next_round()
+            if not arrivals:
+                continue  # every participant skipped this round
+            pooled = (strategy.pooled_batches(clients, t, cfg)
+                      if strategy.pooled else None)
+            if strategy.pooled:
+                arrivals = arrivals[:1]
+            run_tick(arrivals, t_of=lambda i, t=t: t, pooled_batch=pooled)
+            n_ticks += 1
+            sim_time = sim_time + round_time if strategy.schedule == "sync" \
+                else float(t)
+            if trace is not None:
+                trace.append((t, jax.tree.map(np.asarray, eval_params())))
+            if t % cfg.eval_every == 0 or t == cfg.T:
+                record(t, sim_time)
+    if stats is not None:
+        stats.update(ticks=n_ticks, iters=t, sim_time=sim_time)
+    return history

@@ -1,0 +1,113 @@
+"""Device heterogeneity profiles for the cohort simulation engine.
+
+The paper models edge heterogeneity as a per-client network offset drawn
+from U[10, 100] seconds plus a compute model (samples / simulated second).
+``DeviceProfile`` packages those knobs (previously ad-hoc ``base_delay`` /
+``compute_rate`` fields on ``SimClient``) together with the delay-jitter
+distribution, so schedulers draw round delays through one seeded API and
+trace-driven availability can slot in later without touching the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sim.streaming import OnlineStream
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Compute + network model of one edge device.
+
+    ``delay(rng, n_work)`` is the simulated duration of a round processing
+    ``n_work`` samples: deterministic compute time plus the network offset
+    scaled by a uniform jitter draw (the paper's 10-100 s random delay).
+    """
+
+    base_delay: float  # mean network offset, seconds (paper: U[10, 100])
+    compute_rate: float = 2000.0  # samples / simulated second
+    jitter: Tuple[float, float] = (0.8, 1.2)  # multiplicative network jitter
+
+    def delay(self, rng: np.random.Generator, n_work: int) -> float:
+        compute = n_work / self.compute_rate
+        network = self.base_delay * float(rng.uniform(*self.jitter))
+        return compute + network
+
+
+def make_profiles(
+    n: int,
+    *,
+    seed: int = 0,
+    delay_range: Tuple[float, float] = (10.0, 100.0),
+    compute_rate: float = 2000.0,
+) -> List[DeviceProfile]:
+    """n independent profiles with network offsets drawn from delay_range."""
+    rng = np.random.default_rng(seed)
+    return [
+        DeviceProfile(base_delay=float(rng.uniform(*delay_range)),
+                      compute_rate=compute_rate)
+        for _ in range(n)
+    ]
+
+
+@dataclasses.dataclass
+class SimClient:
+    """One simulated edge client: its online data stream, held-out test
+    split, and device profile.  ``dropped`` marks Fig.-4 permanent
+    non-responsiveness (set by the scheduler's dropout policy)."""
+
+    cid: int
+    stream: OnlineStream
+    test_x: Array
+    test_y: Array
+    profile: DeviceProfile
+    dropped: bool = False
+
+    # -- backcompat shims for the pre-profile field layout ---------------
+    @property
+    def base_delay(self) -> float:
+        return self.profile.base_delay
+
+    @property
+    def compute_rate(self) -> float:
+        return self.profile.compute_rate
+
+
+def make_sim_clients(
+    datasets: Sequence[Tuple[Array, Array, Array, Array]],
+    *,
+    seed: int = 0,
+    delay_range: Tuple[float, float] = (10.0, 100.0),
+    start_frac: float = 0.3,
+    growth: float = 0.00075,
+    profiles: Optional[Sequence[DeviceProfile]] = None,
+) -> List[SimClient]:
+    """Build SimClients from (train_x, train_y, test_x, test_y) splits.
+
+    Matches the seed reproduction's rng layout: client i's profile offset is
+    the i-th U[delay_range] draw from ``default_rng(seed)`` and its stream is
+    seeded ``seed + i``.
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, (xtr, ytr, xte, yte) in enumerate(datasets):
+        if profiles is not None:
+            prof = profiles[i]
+        else:
+            prof = DeviceProfile(base_delay=float(rng.uniform(*delay_range)))
+        out.append(
+            SimClient(
+                cid=i,
+                stream=OnlineStream(
+                    xtr, ytr, start_frac=start_frac, growth=growth, seed=seed + i
+                ),
+                test_x=xte,
+                test_y=yte,
+                profile=prof,
+            )
+        )
+    return out

@@ -1,0 +1,201 @@
+"""Sequential per-arrival reference loops (the pre-engine oracle).
+
+Faithful ports of the seed reproduction's one-jit-dispatch-per-arrival
+runners, driven by the same :class:`~repro.sim.scheduler.AsyncScheduler`
+so the event stream matches the cohort engine exactly.  They keep the
+seed's dispatch pattern — a jitted local round, *eager* pytree delta ops,
+a second jitted server fold, and a blocking host read per arrival — which
+makes them both the numerical oracle for the engine's equivalence tests
+and the honest baseline for the clients-vs-throughput benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_axpy, tree_sub
+from repro.core import client as client_lib
+from repro.core.algorithms.common import avg_surrogate_grad, sgd_epochs
+from repro.core.server import aggregate, init_server
+from repro.sim.engine import RunConfig, stack_batches
+from repro.sim.scheduler import AsyncScheduler, SyncScheduler
+
+
+def _eval_all_per_client(model, params, clients, task: str):
+    """The seed's ``_eval_all``: K separate predict round-trips."""
+    from repro.core import metrics as M
+
+    preds, targets = [], []
+    for c in clients:
+        p = np.asarray(model.predict(params, {"x": jnp.asarray(c.test_x)}))
+        preds.append(p)
+        targets.append(c.test_y)
+    pred = np.concatenate(preds)
+    tgt = np.concatenate(targets)
+    if task == "classification":
+        return M.classification_report(pred, tgt)
+    return M.regression_report(pred[..., 0] if pred.ndim > 1 else pred, tgt)
+
+
+def _make_scheduler(clients, cfg: RunConfig) -> AsyncScheduler:
+    return AsyncScheduler(
+        clients, seed=cfg.seed, dropout_frac=cfg.dropout_frac,
+        skip_prob=cfg.periodic_dropout, init_work=cfg.batch_size,
+        round_work=cfg.local_epochs * cfg.batch_size,
+        sim_time_budget=cfg.sim_time_budget,
+    )
+
+
+def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
+                         collect_trace: bool = True,
+                         stats: Optional[Dict] = None) -> Dict[int, object]:
+    """ASO-Fed, one arrival at a time.  Returns {t: server w (numpy)}."""
+    w0 = model.init(jax.random.PRNGKey(cfg.seed))
+    sched = _make_scheduler(clients, cfg)
+    active = sched.active
+    server = init_server(w0, [c.cid for c in active],
+                         {c.cid: c.stream.visible(0) for c in active},
+                         keep_copies=False)
+    cstate = {c.cid: client_lib.init_client_state(w0, c.stream.visible(0))
+              for c in active}
+    grad_fn = avg_surrogate_grad(model, cfg)
+    n_evals = 0
+
+    @jax.jit
+    def local_round(st, xs, ys, delay, n_new):
+        g, _ = grad_fn(st.params, st.server_params, xs, ys)
+        zeta = jax.tree.map(lambda gs, vp, hp: gs - vp + hp, g, st.v, st.h)
+        r = (client_lib.dynamic_multiplier(st.delay_sum, st.rounds, delay)
+             if cfg.dynamic_lr else jnp.ones(()))
+        new_params = tree_axpy(-r * cfg.eta, zeta, st.params)
+        new_h = jax.tree.map(
+            lambda hp, vp: cfg.beta * hp + (1 - cfg.beta) * vp, st.h, st.v
+        )
+        return dataclasses.replace(
+            st, params=new_params, h=new_h, v=g,
+            delay_sum=st.delay_sum + delay, rounds=st.rounds + 1.0,
+            n_samples=st.n_samples + n_new,
+        )
+
+    trainable = {c.cid for c in active if c.stream.n > 0}
+    traj: Dict[int, object] = {}
+    t = 0
+    while t < cfg.T and trainable:
+        tick = sched.next_tick(1)
+        if not tick:
+            break
+        (a,) = tick
+        if a.cid not in trainable:  # empty split: engine drops it too
+            continue
+        c = sched.by_id[a.cid]
+        st = cstate[a.cid]
+        n_vis = c.stream.visible(t)
+        n_new = max(n_vis - float(st.n_samples), 0.0)  # blocking host read
+        xs, ys = stack_batches(c.stream, t, cfg.batch_size, cfg.local_epochs)
+        st_before = st.params
+        st = local_round(st, jnp.asarray(xs), jnp.asarray(ys),
+                         jnp.float32(a.delay), jnp.float32(n_new))
+        server = aggregate(  # eager delta + second dispatch, as in the seed
+            server, a.cid, tree_sub(st_before, st.params), n_vis, cfg_model,
+            upload_is_delta=True, feature_learning=cfg.feature_learning,
+        )
+        t = server.t
+        cstate[a.cid] = client_lib.receive_server_model(st, server.w)
+        if collect_trace:
+            traj[t] = jax.tree.map(np.asarray, server.w)
+        if t % cfg.eval_every == 0 or t == cfg.T:
+            n_evals += 1
+            _eval_all_per_client(model, server.w, clients, cfg.task)
+    if stats is not None:
+        stats.update(iters=t, ticks=t, evals=n_evals)
+    return traj
+
+
+def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
+                           collect_trace: bool = True,
+                           stats: Optional[Dict] = None) -> Dict[int, object]:
+    """FedAsync, one arrival at a time.  Returns {t: server w (numpy)}."""
+    w = model.init(jax.random.PRNGKey(cfg.seed))
+    sched = _make_scheduler(clients, cfg)
+    sgd = jax.jit(sgd_epochs(model, cfg, mu=0.005))
+    version = {c.cid: 0 for c in sched.active}
+    local_w = {c.cid: w for c in sched.active}
+    trainable = {c.cid for c in sched.active if c.stream.n > 0}
+    traj: Dict[int, object] = {}
+    t, n_evals = 0, 0
+    while t < cfg.T and trainable:
+        tick = sched.next_tick(1)
+        if not tick:
+            break
+        (a,) = tick
+        if a.cid not in trainable:  # empty split: engine drops it too
+            continue
+        c = sched.by_id[a.cid]
+        xs, ys = stack_batches(c.stream, t, cfg.batch_size, cfg.local_epochs)
+        wk = sgd(local_w[a.cid], local_w[a.cid],
+                 jnp.asarray(xs), jnp.asarray(ys))
+        staleness = t - version[a.cid]
+        alpha_t = cfg.fedasync_alpha * (1.0 + staleness) ** (
+            -cfg.fedasync_staleness_exp
+        )
+        w = jax.tree.map(lambda x, y: (1 - alpha_t) * x + alpha_t * y, w, wk)
+        t += 1
+        version[a.cid] = t
+        local_w[a.cid] = w
+        if collect_trace:
+            traj[t] = jax.tree.map(np.asarray, w)
+        if t % cfg.eval_every == 0 or t == cfg.T:
+            n_evals += 1
+            _eval_all_per_client(model, w, clients, cfg.task)
+    if stats is not None:
+        stats.update(iters=t, ticks=t, evals=n_evals)
+    return traj
+
+
+def run_fedavg_reference(model, cfg_model, clients, cfg: RunConfig, *,
+                         prox_mu: float = 0.0,
+                         collect_trace: bool = True,
+                         stats: Optional[Dict] = None) -> Dict[int, object]:
+    """FedAvg/FedProx, one jit dispatch per participant per round, with
+    the seed's direct weighted mean.  Returns {round t: server w}."""
+    w = model.init(jax.random.PRNGKey(cfg.seed))
+    sched = SyncScheduler(
+        clients, seed=cfg.seed, dropout_frac=cfg.dropout_frac,
+        skip_prob=cfg.periodic_dropout, participation=cfg.participation,
+        round_work=cfg.local_epochs * cfg.batch_size,
+    )
+    by_id = {c.cid: c for c in sched.active}
+    sgd = jax.jit(sgd_epochs(model, cfg, mu=prox_mu))
+    traj: Dict[int, object] = {}
+    sim_time, n_evals = 0.0, 0
+    for t in range(1, cfg.T + 1):
+        if cfg.sim_time_budget and sim_time > cfg.sim_time_budget:
+            break
+        arrivals, round_time = sched.next_round()
+        if not arrivals:
+            continue
+        new_ws, weights = [], []
+        for a in arrivals:
+            c = by_id[a.cid]
+            xs, ys = stack_batches(c.stream, t, cfg.batch_size,
+                                   cfg.local_epochs)
+            new_ws.append(sgd(w, w, jnp.asarray(xs), jnp.asarray(ys)))
+            weights.append(c.stream.visible(t))
+        sim_time += round_time
+        tot = sum(weights)
+        w = jax.tree.map(
+            lambda *xs_: sum(wi / tot * x for wi, x in zip(weights, xs_)),
+            *new_ws,
+        )
+        if collect_trace:
+            traj[t] = jax.tree.map(np.asarray, w)
+        if t % cfg.eval_every == 0 or t == cfg.T:
+            n_evals += 1
+            _eval_all_per_client(model, w, clients, cfg.task)
+    if stats is not None:
+        stats.update(iters=t, ticks=t, evals=n_evals)
+    return traj

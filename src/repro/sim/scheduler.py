@@ -1,0 +1,150 @@
+"""Event scheduling for the asynchronous cohort simulation engine.
+
+One seeded ``numpy`` Generator drives every stochastic decision — permanent
+dropout draws (Fig. 4), periodic skip draws (Fig. 5), and per-round delay
+jitter — in a fixed order tied to the event stream, so a given seed yields
+an identical arrival order regardless of how the engine chunks events into
+ticks (the cohort engine at any ``max_cohort`` replays the exact event
+sequence of the per-arrival reference loop).
+
+Three schedules:
+
+* ``AsyncScheduler``  — the paper's regime: a priority queue of completion
+  events; each pop immediately draws the client's next round delay and
+  re-queues it, so the global event order is fixed at pop time.
+* ``SyncScheduler``   — FedAvg/FedProx rounds: sample ``C*K`` participants,
+  the round costs the *slowest* participant (synchronous barrier).
+* ``SweepScheduler``  — Local/Global baselines: every client, every round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sim.profiles import SimClient
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One client update reaching the server.
+
+    ``time`` is the simulated arrival instant; ``delay`` the duration of
+    the local round that completes at ``time`` (feeds the paper's dynamic
+    learning-step multiplier, Eq. 11).
+    """
+
+    cid: int
+    time: float
+    delay: float
+
+
+def mark_dropouts(clients: Sequence[SimClient], frac: float,
+                  rng: np.random.Generator) -> None:
+    """Permanently drop ``frac`` of clients (Fig. 4).  One rng.choice draw."""
+    k = int(len(clients) * frac)
+    for c in clients:
+        c.dropped = False
+    for i in rng.choice(len(clients), size=k, replace=False):
+        clients[int(i)].dropped = True
+
+
+class AsyncScheduler:
+    """Priority-queue completion events with dropout / periodic-skip policies.
+
+    Delay draws happen *at pop time* (a round's duration does not depend on
+    its numerical result), which makes the full event stream deterministic
+    given the seed — the foundation of tick-equivalence.
+    """
+
+    def __init__(self, clients: Sequence[SimClient], *, seed: int = 0,
+                 dropout_frac: float = 0.0, skip_prob: float = 0.0,
+                 init_work: int = 32, round_work: int = 64,
+                 sim_time_budget: Optional[float] = None):
+        self.rng = np.random.default_rng(seed)
+        if dropout_frac:
+            mark_dropouts(clients, dropout_frac, self.rng)
+        self.active = [c for c in clients if not c.dropped]
+        self.by_id = {c.cid: c for c in self.active}
+        self.skip_prob = skip_prob
+        self.init_work = init_work
+        self.round_work = round_work
+        self.budget = sim_time_budget
+        self._heap: List[Tuple[float, int]] = []
+        for c in self.active:
+            heapq.heappush(
+                self._heap, (c.profile.delay(self.rng, init_work), c.cid)
+            )
+
+    def next_tick(self, limit: int) -> List[Arrival]:
+        """Pop up to ``limit`` arrivals with pairwise-distinct clients.
+
+        The distinct-client check runs against *every* heap top — including
+        tops surfaced mid-tick by a skipped event — and stops *before*
+        popping (a repeat client's local round depends on this tick's server
+        folds), so no rng draw is consumed out of order and the global event
+        stream is identical for every tick size.
+        """
+        tick: List[Arrival] = []
+        seen = set()
+        while len(tick) < limit and self._heap:
+            if self.budget is not None and self._heap[0][0] > self.budget:
+                break
+            if self._heap[0][1] in seen:
+                break
+            now, cid = heapq.heappop(self._heap)
+            c = self.by_id[cid]
+            if self.skip_prob and self.rng.uniform() < self.skip_prob:
+                # silent skip (Fig. 5): no global iteration consumed; the
+                # client re-queues after a fresh (cheap) delay draw
+                heapq.heappush(
+                    self._heap,
+                    (now + c.profile.delay(self.rng, self.init_work), cid),
+                )
+                continue
+            delay = c.profile.delay(self.rng, self.round_work)
+            heapq.heappush(self._heap, (now + delay, cid))
+            tick.append(Arrival(cid=cid, time=now, delay=delay))
+            seen.add(cid)
+        return tick
+
+
+class SyncScheduler:
+    """FedAvg/FedProx participant sampling with the synchronous barrier."""
+
+    def __init__(self, clients: Sequence[SimClient], *, seed: int = 0,
+                 dropout_frac: float = 0.0, skip_prob: float = 0.0,
+                 participation: float = 0.2, round_work: int = 64):
+        self.rng = np.random.default_rng(seed)
+        if dropout_frac:
+            mark_dropouts(clients, dropout_frac, self.rng)
+        self.active = [c for c in clients if not c.dropped]
+        self.skip_prob = skip_prob
+        self.m = max(1, int(participation * len(self.active)))
+        self.round_work = round_work
+
+    def next_round(self) -> Tuple[List[Arrival], float]:
+        """(participants, round_time).  round_time = slowest participant."""
+        sel = self.rng.choice(len(self.active), size=self.m, replace=False)
+        arrivals: List[Arrival] = []
+        for i in sel:
+            c = self.active[int(i)]
+            if self.skip_prob and self.rng.uniform() < self.skip_prob:
+                continue
+            delay = c.profile.delay(self.rng, self.round_work)
+            arrivals.append(Arrival(cid=c.cid, time=0.0, delay=delay))
+        round_time = max((a.delay for a in arrivals), default=0.0)
+        return arrivals, round_time
+
+
+class SweepScheduler:
+    """Local/Global baselines: every client participates every round."""
+
+    def __init__(self, clients: Sequence[SimClient]):
+        self.active = list(clients)
+
+    def next_round(self) -> Tuple[List[Arrival], float]:
+        return [Arrival(cid=c.cid, time=0.0, delay=0.0)
+                for c in self.active], 1.0

@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import dataclasses
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dep: skip if absent
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
