@@ -12,6 +12,7 @@ full JSON artifacts under results/paper/.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -31,9 +32,22 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="cohort-engine clients-vs-throughput sweep at "
                          "{8, 64, 256} clients; writes BENCH_sim.json")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="with --smoke: force N virtual host devices to "
+                         "exercise the sharded cohort path on CPU")
     args = ap.parse_args()
     quick = not args.full
     want = lambda s: args.only is None or args.only in s  # noqa: E731
+
+    if args.smoke and args.devices > 1 and "jax" not in sys.modules:
+        # partition the host into virtual devices so the engine's
+        # data-mesh shard_map path can be benchmarked on CPU.  Must be set
+        # before the first jax import; appended so an operator's existing
+        # XLA_FLAGS (and any device count they forced there) still apply.
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        existing = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in existing:
+            os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
 
     rows = []
     print("name,us_per_call,derived")

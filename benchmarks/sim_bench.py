@@ -1,15 +1,25 @@
 """Clients-vs-throughput sweep for the cohort simulation engine.
 
-Runs ASO-Fed at growing client counts, in two modes per count:
+Runs ASO-Fed at growing client counts, in three modes per count:
 
-* ``cohort``      — the vectorized engine (one vmapped jit per tick);
-* ``per_arrival`` — ``repro.sim.reference.run_asofed_reference``, the
+* ``cohort``          — the pipelined engine (prefetch thread building the
+  next tick's staging buffers while the device executes the current one);
+* ``cohort_serial``   — same engine, prefetch off: build -> execute ->
+  build, fully serialized (isolates what the overlap buys);
+* ``per_arrival``     — ``repro.sim.reference.run_asofed_reference``, the
   faithful port of the seed's one-jit-dispatch-per-arrival host loop
   (eager delta ops + a blocking host read per arrival), same scheduler.
 
+Each record carries the per-phase wall breakdown the engine measures —
+``host_build_s`` (batch draw + staging fill + device transfer, wherever it
+ran), ``device_s`` (tick dispatch-to-completion), ``eval_s`` (batched
+predict + deferred metric extraction) — plus the prefetch flag, device
+count, and compiled-tick cache size, so the speedup from each tentpole
+piece is attributable.  In the prefetched mode ``host_build_s`` overlaps
+``device_s``; their sum exceeding wall time is the measured overlap.
+
 Emits one ``name,us_per_call,derived`` row per (count, mode) and writes the
-full records — clients, ticks/s, iters/s, wall-time — to ``BENCH_sim.json``
-at the repo root for the perf trajectory.
+full records to ``BENCH_sim.json`` at the repo root for the perf trajectory.
 """
 from __future__ import annotations
 
@@ -43,9 +53,9 @@ def _run(model, cfg_model, clients, cfg, mode: str) -> Dict:
 
     stats: Dict = {}
     t0 = time.perf_counter()
-    if mode == "cohort":
+    if mode.startswith("cohort"):
         run_strategy(get_strategy("asofed"), model, cfg_model, clients, cfg,
-                     stats=stats)
+                     stats=stats, prefetch=(mode == "cohort"))
     else:  # the seed per-arrival loop
         run_asofed_reference(model, cfg_model, clients, cfg,
                              collect_trace=False, stats=stats)
@@ -55,12 +65,13 @@ def _run(model, cfg_model, clients, cfg, mode: str) -> Dict:
 
 def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
               baseline_iters: int = 256) -> List[Tuple[str, float, str]]:
-    """Smoke sweep: cohort engine vs per-arrival dispatch at each count."""
+    """Smoke sweep: pipelined/serialized engine vs per-arrival dispatch."""
     from repro.sim.engine import RunConfig
 
     rows: List[Tuple[str, float, str]] = []
     records: List[Dict] = []
     speedup_at = {}
+    overlap_at = {}
     for K in counts:
         cfg_model, model, mk = _build(K)
         base = RunConfig(
@@ -70,10 +81,11 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
         per_mode = {}
         for mode, T in (
             ("cohort", iters_per_client * K),
+            ("cohort_serial", iters_per_client * K),
             ("per_arrival", min(baseline_iters, iters_per_client * K)),
         ):
             cfg = dataclasses.replace(base, T=T)
-            if mode == "cohort":
+            if mode.startswith("cohort"):
                 # warmup populates the engine's shared compile cache (incl.
                 # the power-of-two tick buckets); the seed loop can't be
                 # warmed — it rebuilds its jits on every invocation, which
@@ -89,6 +101,10 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 "ticks_per_s": round(s["ticks"] / s["wall_time_s"], 2),
                 "iters_per_s": round(s["iters"] / s["wall_time_s"], 2),
             }
+            for k in ("host_build_s", "device_s", "eval_s",
+                      "prefetch", "devices", "tick_cache_size"):
+                if k in s:
+                    rec[k] = round(s[k], 4) if isinstance(s[k], float) else s[k]
             records.append(rec)
             per_mode[mode] = rec
             rows.append((
@@ -101,17 +117,31 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
             per_mode["cohort"]["iters_per_s"]
             / max(per_mode["per_arrival"]["iters_per_s"], 1e-9), 2
         )
+        # overlap: host build time hidden behind device execution in the
+        # prefetched run (phase sum minus wall, clamped at 0)
+        c = per_mode["cohort"]
+        overlap_at[K] = round(max(
+            0.0, c.get("host_build_s", 0.0) + c.get("device_s", 0.0)
+            + c.get("eval_s", 0.0) - c["wall_time_s"]), 4)
     payload = {
         "benchmark": "cohort simulation engine throughput (asofed)",
         "metric": ("iters = global iterations (client arrivals folded); "
                    "ticks = vmapped engine dispatches (== iters for the "
                    "per-arrival seed loop).  Both modes evaluate every 50 "
-                   "iterations: the engine as one batched/padded predict, "
+                   "iterations: the engine as one batched/padded predict "
+                   "with metric extraction deferred past the tick loop, "
                    "the seed loop as K per-client round-trips.  The seed "
                    "loop also re-jits per invocation — a cost the engine's "
-                   "shared compile cache removes."),
+                   "shared compile cache removes.  Phase columns: "
+                   "host_build_s = minibatch draw + staging fill + device "
+                   "transfer (overlapped with device_s when prefetch is "
+                   "on); device_s = tick dispatch-to-completion; eval_s = "
+                   "eval dispatch + deferred metric extraction.  "
+                   "prefetch_overlap_s = host work hidden behind device "
+                   "execution (phase sum - wall, per client count)."),
         "records": records,
         "speedup_cohort_vs_per_arrival": speedup_at,
+        "prefetch_overlap_s": overlap_at,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)

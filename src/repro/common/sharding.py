@@ -201,6 +201,21 @@ SEQP = _mk(
     },
 )
 
+# Cohort simulation engine: the stacked per-client state pytree and the
+# per-tick cohort arrays carry a leading "clients" axis that is pure data
+# parallelism — shard it over every data-like mesh axis, replicate the
+# server state and model parameters (each client holds a full copy, as in
+# the paper).  Resolution through pspec_for_shape keeps the engine correct
+# on any mesh: a bucket or row count the mesh extent cannot divide simply
+# replicates.
+COHORT = _mk(
+    "cohort",
+    {
+        "batch": ("pod", "data"),
+        "clients": ("pod", "data"),
+    },
+)
+
 # Decode-time rules: KV cache batch over data, heads over model; for B=1
 # long-context the sequence axis of the cache shards over data.
 DECODE = _mk(
@@ -223,7 +238,42 @@ PRESETS: Dict[str, ShardingRules] = {
     "tp_fsdp": TP_FSDP,
     "seqp": SEQP,
     "decode": DECODE,
+    "cohort": COHORT,
 }
+
+
+def data_mesh(min_devices: int = 2) -> Optional[Mesh]:
+    """1-D ``data`` mesh over every local device; None on a single device.
+
+    The cohort engine's auto-mesh: with one device the unsharded code path
+    is strictly cheaper than a degenerate mesh, so callers treat None as
+    "skip sharding entirely".
+    """
+    devices = jax.devices()
+    if len(devices) < min_devices:
+        return None
+    return jax.make_mesh((len(devices),), ("data",))
+
+
+def client_sharding(shape: Sequence[int], mesh: Optional[Mesh],
+                    rules: ShardingRules = COHORT) -> Optional[NamedSharding]:
+    """Sharding for an array whose axis 0 is the client/cohort axis.
+
+    None when no mesh is active.  Non-divisible leading dims replicate
+    (``pspec_for_shape``), so power-of-two tick buckets below the device
+    count still execute.
+    """
+    if mesh is None:
+        return None
+    axes = ("clients",) + (None,) * (len(shape) - 1)
+    return rules.sharding_for_shape(shape, axes, mesh)
+
+
+def replicated(mesh: Optional[Mesh]) -> Optional[NamedSharding]:
+    """Fully-replicated NamedSharding on ``mesh`` (None when no mesh)."""
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P())
 
 
 def get_rules(name: str) -> ShardingRules:

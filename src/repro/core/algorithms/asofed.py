@@ -28,6 +28,10 @@ class AsoFedStrategy(Strategy):
         n0 = float(client.stream.visible(0)) if client is not None else 0.0
         return client_lib.init_client_state(w0, n0)
 
+    def build_init_client(self, model, cfg):
+        # batched stacked init: one vmapped jit instead of K+1 eager calls
+        return lambda w0, n0: client_lib.init_client_state(w0, n0)
+
     def init_server(self, model, cfg_model, cfg, w0, clients, active):
         # per-client online sample counts n'_k, indexed by cid; one extra
         # scratch slot absorbs padded-slot writes.  Dropped clients hold 0
@@ -72,7 +76,12 @@ class AsoFedStrategy(Strategy):
             weight = n_vis / jnp.maximum(jnp.sum(n), 1e-9)  # n'_k / N'
             w = tree_axpy(-weight, delta, server["w"])  # Eq. (4)
             if cfg.feature_learning:
-                w = apply_feature_learning(w, cfg_model)  # Eq. (5)-(6)
+                # Eq. (5)-(6); use_kernel=None auto-selects the Pallas
+                # kernel above the ops.py size threshold (jnp below it)
+                w = apply_feature_learning(
+                    w, cfg_model, use_kernel=cfg.feature_kernel,
+                    interpret=cfg.feature_kernel_interpret,
+                )
             return {"w": w, "n": n}, w
 
         return fold

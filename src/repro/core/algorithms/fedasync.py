@@ -21,6 +21,10 @@ class FedAsyncStrategy(Strategy):
     def init_client(self, model, cfg, w0, client):
         return {"w": w0, "version": jnp.zeros((), jnp.float32)}
 
+    def build_init_client(self, model, cfg):
+        # batched stacked init: one vmapped jit instead of K+1 eager calls
+        return lambda w0, n0: {"w": w0, "version": jnp.zeros((), jnp.float32)}
+
     def init_server(self, model, cfg_model, cfg, w0, clients, active):
         return {"w": w0}
 

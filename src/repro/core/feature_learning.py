@@ -44,9 +44,16 @@ def _set(tree, path: Sequence[str], value):
     return out
 
 
-def apply_feature_learning(params, cfg: ModelConfig, *, use_kernel: bool = False,
+def apply_feature_learning(params, cfg: ModelConfig, *,
+                           use_kernel: Optional[bool] = False,
                            interpret: bool = False):
-    """Returns params with the Eq.(5)-(6) pass applied to the first layer."""
+    """Returns params with the Eq.(5)-(6) pass applied to the first layer.
+
+    ``use_kernel`` follows :func:`feature_attention`: True/False force the
+    Pallas/jnp lowering, None auto-selects by backend and first-layer size.
+    The default stays False so oracle paths (``repro.core.server`` and the
+    ``sim/reference`` loops) keep the pure-jnp reference lowering.
+    """
     path = first_layer_path(cfg)
     w1 = _get(params, path)
     w1 = feature_attention(w1, use_kernel=use_kernel, interpret=interpret)

@@ -1,7 +1,19 @@
-"""Public wrapper for the feature-attention kernel."""
+"""Public wrapper for the feature-attention kernel.
+
+``use_kernel=None`` (the default for the engine's server fold) auto-selects
+the lowering: the fused Pallas kernel on TPU once the matrix is large
+enough that the op is HBM-bandwidth-bound, the jnp reference below that
+(and always off-TPU, where the kernel would run interpreted).  The
+crossover is taken from ``benchmarks/kernel_bench.py``: the jnp lowering
+makes three HBM passes (abs+max, sum, scale) so the kernel's single pass
+wins once the matrix no longer fits in cache — LSTM-scale first layers
+(225x256 ≈ 57K elements) sit below the knee, embedding-scale tables
+(4096x1024 ≈ 4M elements) far above it.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -11,6 +23,12 @@ from repro.kernels.feature_attention.ref import feature_attention_ref
 
 _VMEM_STRIPE_BYTES = 2 * 1024 * 1024
 
+# Auto-dispatch threshold in elements (fp32): ~1 MB.  Below this the whole
+# matrix is cache/VMEM-resident and the extra passes of the jnp path are
+# free, while the pallas_call launch overhead is not; above it the fused
+# single HBM pass wins (see module docstring for the measured anchors).
+KERNEL_MIN_ELEMS = 1 << 18
+
 
 def _block_rows(cols: int) -> int:
     rows = max(8, _VMEM_STRIPE_BYTES // max(cols * 4, 1))
@@ -18,19 +36,28 @@ def _block_rows(cols: int) -> int:
     return max(8, (rows // 8) * 8)
 
 
+def use_kernel_default(n_elems: int) -> bool:
+    """The ``use_kernel=None`` auto rule (trace-time: shapes are static)."""
+    return jax.default_backend() == "tpu" and n_elems >= KERNEL_MIN_ELEMS
+
+
 @functools.partial(
     jax.jit, static_argnames=("use_kernel", "interpret", "normalize")
 )
-def feature_attention(w, *, use_kernel: bool = False, interpret: bool = False,
-                      normalize: bool = True):
+def feature_attention(w, *, use_kernel: Optional[bool] = None,
+                      interpret: bool = False, normalize: bool = True):
     """ASO-Fed Eq.(5)-(6): row-softmax of |w| times w (norm-preserving by
     default; ``normalize=False`` = the literal equation — see ref.py).
 
     Accepts any rank >= 1: trailing axis is the softmax ("column") axis,
     leading axes are flattened into rows (conv kernels, stacked layers...).
+    ``use_kernel``: True forces the Pallas kernel, False the jnp path,
+    None picks by backend and size (``use_kernel_default``).
     """
     shape = w.shape
     w2 = w.reshape(-1, shape[-1])
+    if use_kernel is None:
+        use_kernel = use_kernel_default(w2.size)
     if use_kernel:
         out = feature_attention_kernel(
             w2, block_rows=_block_rows(w2.shape[1]), normalize=normalize,

@@ -36,20 +36,27 @@ def lstm_spec(cfg: ModelConfig):
 
 
 def lstm_forward(params, x):
-    """x: (B, T, F) -> (B, O) prediction from the last hidden state."""
+    """x: (B, T, F) -> (B, O) prediction from the last hidden state.
+
+    The input projection ``x @ W_x`` has no recurrent dependence, so it is
+    hoisted out of the scan as one (B*T, F) GEMM — T tiny per-step matmuls
+    collapse into a single well-shaped one (the fwd AND bwd hot path of
+    every simulated local round); only ``h @ W_h`` stays in the recurrence.
+    """
     B, T, F = x.shape
     H = params["w_h"].shape[0]
+    zx = (x.reshape(B * T, F) @ params["w_x"] + params["b"]).reshape(B, T, -1)
 
-    def cell(carry, xt):
+    def cell(carry, zxt):
         h, c = carry
-        z = xt @ params["w_x"] + h @ params["w_h"] + params["b"]
+        z = zxt + h @ params["w_h"]
         i, f, g, o = jnp.split(z, 4, axis=-1)
         c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
         h = jax.nn.sigmoid(o) * jnp.tanh(c)
         return (h, c), None
 
     h0 = jnp.zeros((B, H), x.dtype)
-    (h, _), _ = jax.lax.scan(cell, (h0, h0), jnp.moveaxis(x, 1, 0))
+    (h, _), _ = jax.lax.scan(cell, (h0, h0), jnp.moveaxis(zx, 1, 0))
     return h @ params["fc_w"] + params["fc_b"]
 
 

@@ -15,6 +15,12 @@ from repro.sim.engine import (
     run_strategy,
     stack_batches,
 )
+from repro.sim.prefetch import (
+    PreparedTick,
+    TickBuilder,
+    TickPrefetcher,
+    bucket_size,
+)
 from repro.sim.profiles import (
     DeviceProfile,
     SimClient,
@@ -36,6 +42,10 @@ __all__ = [
     "Strategy",
     "run_strategy",
     "stack_batches",
+    "PreparedTick",
+    "TickBuilder",
+    "TickPrefetcher",
+    "bucket_size",
     "DeviceProfile",
     "SimClient",
     "make_profiles",

@@ -14,10 +14,21 @@ pending arrivals with pairwise-distinct clients (capped at ``max_cohort``):
 3. evaluation is one batched/padded predict over all clients instead of
    K separate device round-trips.
 
+The tick loop is **pipelined and device-resident**: host batch building
+runs on a prefetch thread (``repro.sim.prefetch``) that fills pre-allocated
+per-bucket staging buffers and transfers them while the previous tick
+executes, the stacked client state lives on device between ticks (donated
+on accelerators), and on a multi-device ``data`` mesh the client axis of
+the stacked state, the cohort inputs, and the batched eval are sharded
+with the ``repro.common.sharding`` cohort rules (single device degrades to
+the plain path).  Evaluation metric extraction is deferred to the end of
+the run so eval dispatches never serialize the tick loop.
+
 Because the scheduler draws every delay/skip at pop time, the arrival
-stream is invariant to how it is chunked into ticks: the engine at any
-``max_cohort`` (including 1) replays the same trajectory within fp32
-tolerance — the property the equivalence tests pin down.
+stream is invariant to how it is chunked into ticks AND to whether the
+next tick is built speculatively: the engine at any ``max_cohort``
+(including 1), with prefetch on or off, replays the same trajectory within
+fp32 tolerance — the property the equivalence tests pin down.
 
 Algorithms plug in as :class:`Strategy` objects (see
 ``repro.core.algorithms``) supplying only the local-update and
@@ -29,13 +40,17 @@ from __future__ import annotations
 import dataclasses
 import time
 import weakref
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.common import sharding as sharding_lib
+from repro.common.compat import shard_map
 from repro.common.pytree import tree_stack, tree_take, tree_scatter, tree_where
+from repro.sim.prefetch import TickBuilder, TickPrefetcher
 from repro.sim.profiles import SimClient
 from repro.sim.scheduler import AsyncScheduler, SyncScheduler, SweepScheduler
 from repro.sim.streaming import OnlineStream
@@ -73,6 +88,13 @@ class RunConfig:
     fedasync_staleness_exp: float = 0.5
     # engine
     max_cohort: Optional[int] = None  # cap on clients per tick (None: all)
+    prefetch: Optional[bool] = None  # build ticks on a side thread (None: on)
+    # feature pass lowering: None = auto (Pallas kernel above the ops.py
+    # size threshold on TPU, jnp otherwise); True/False force it.  The
+    # interpret flag runs the kernel through the Pallas interpreter — the
+    # CPU-CI hook for exercising the kernel path in equivalence tests.
+    feature_kernel: Optional[bool] = None
+    feature_kernel_interpret: bool = False
 
 
 @dataclasses.dataclass
@@ -110,6 +132,16 @@ class Strategy:
     def init_client(self, model, cfg: RunConfig, w0,
                     client: Optional[SimClient]):
         raise NotImplementedError
+
+    def build_init_client(self, model, cfg: RunConfig):
+        """Optional traceable ``(w0, n0) -> client state`` for the batched
+        stacked init: one vmapped jit builds every row of the stacked state
+        instead of K+1 eager ``init_client`` calls + ``tree_stack`` (the
+        dominant per-run setup cost at large K).  ``n0`` is the client's
+        ``stream.visible(0)`` sample count.  Return None to fall back to
+        the per-client path (strategies whose init needs host-side state,
+        e.g. per-client PRNG model inits)."""
+        return None
 
     def init_server(self, model, cfg_model, cfg: RunConfig, w0,
                     clients: Sequence[SimClient],
@@ -152,24 +184,29 @@ def pad_batch(x: Array, y: Array, size: int, template_x: Array,
               template_y: Array) -> Tuple[Array, Array]:
     """Force (x, y) to exactly ``size`` rows (keeps jit shapes static).
 
-    Short draws are padded by resampling; an *empty* draw (a client whose
-    visible window is empty) yields all-zero rows instead of the
-    historical division-by-zero crash.  ``template_*`` supply the row
-    shape/dtype for the empty case.
+    Short draws are padded by cycling the drawn rows (``np.resize`` —
+    one strided copy instead of the old O(reps) concatenate loop); an
+    *empty* draw (a client whose visible window is empty) yields all-zero
+    rows instead of the historical division-by-zero crash.  ``template_*``
+    supply the row shape/dtype for the empty case.
     """
     if len(x) == 0:
         return (np.zeros((size,) + template_x.shape[1:], template_x.dtype),
                 np.zeros((size,) + template_y.shape[1:], template_y.dtype))
     if len(x) < size:
-        reps = int(np.ceil(size / len(x)))
-        x = np.concatenate([x] * reps)
-        y = np.concatenate([y] * reps)
+        x = np.resize(x, (size,) + x.shape[1:])
+        y = np.resize(y, (size,) + y.shape[1:])
     return x[:size], y[:size]
 
 
 def stack_batches(stream: OnlineStream, t: int, batch_size: int,
                   n_steps: int) -> Tuple[Array, Array]:
-    """(n_steps, batch_size, ...) minibatches from one client's stream."""
+    """(n_steps, batch_size, ...) minibatches from one client's stream.
+
+    Consumes the same rng draws as ``OnlineStream.batch_into`` — the
+    engine's staging-buffer path and this allocating path are
+    interchangeable without perturbing the trajectory.
+    """
     xs, ys = [], []
     for _ in range(n_steps):
         x, y = pad_batch(*stream.batch(t, batch_size), batch_size,
@@ -180,12 +217,13 @@ def stack_batches(stream: OnlineStream, t: int, batch_size: int,
 
 
 # ---------------------------------------------------------------------------
-# Compiled-tick cache: one compilation per (model, strategy, config, shapes)
+# Compiled-fn caches: one compilation per (model, strategy, config, shapes)
 # — shared across runs, NOT rebuilt per runner invocation.
 # ---------------------------------------------------------------------------
 
 _TICK_CACHE: Dict[Any, Tuple[Any, Any]] = {}
 _PREDICT_CACHE: Dict[Any, Tuple[Any, Any]] = {}
+_INIT_CACHE: Dict[Any, Tuple[Any, Any]] = {}
 
 
 def _mask_select(mask, new, old):
@@ -197,18 +235,40 @@ def _mask_select(mask, new, old):
     )
 
 
-def _build_tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig):
+def _build_tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig,
+                   mesh: Optional[Mesh]):
     local = strategy.build_local(model, cfg)
     fold = strategy.build_fold(model, cfg_model, cfg)
     merge = strategy.build_merge(model, cfg)
     finalize = strategy.build_finalize(model, cfg)
+    vlocal = jax.vmap(local, in_axes=(0, None, 0, 0, 0, 0, 0))
 
     def tick(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
         cohort0 = tree_take(stacked, idx)
         bcast = strategy.server_broadcast(server)
-        cohort, uploads = jax.vmap(
-            local, in_axes=(0, None, 0, 0, 0, 0, 0)
-        )(cohort0, bcast, xs, ys, delays, n_vis, t_arr)
+        # the vmapped local rounds are embarrassingly parallel over the
+        # cohort axis: on a mesh, run them as explicit SPMD shards (the
+        # compile-time bucket makes divisibility a trace-time property;
+        # non-divisible small buckets fall back to the single-program path)
+        if mesh is not None and idx.shape[0] % mesh.devices.size == 0:
+            sharded_local = shard_map(
+                vlocal, mesh=mesh,
+                in_specs=(P("data"), P(), P("data"), P("data"), P("data"),
+                          P("data"), P("data")),
+                out_specs=(P("data"), P("data")),
+                check_vma=False,
+            )
+            cohort, uploads = sharded_local(
+                cohort0, bcast, xs, ys, delays, n_vis, t_arr)
+            if fold is not None:
+                # one explicit all-gather here, so the sequential fold
+                # scan below runs replicated with no per-step collectives
+                rep = sharding_lib.replicated(mesh)
+                uploads = jax.lax.with_sharding_constraint(
+                    uploads, jax.tree.map(lambda _: rep, uploads))
+        else:
+            cohort, uploads = vlocal(
+                cohort0, bcast, xs, ys, delays, n_vis, t_arr)
         if fold is not None:
             def step(sv, inp):
                 up, ix, nv, ta, mk = inp
@@ -226,6 +286,10 @@ def _build_tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig):
         stacked = tree_scatter(stacked, idx, _mask_select(mask, cohort, cohort0))
         return stacked, server
 
+    # donate the carried state so XLA reuses its buffers for the outputs
+    # (the per-tick input arrays can't alias either output shape, so
+    # donating them would only produce unusable-donation warnings);
+    # no-op on CPU, where donation is unsupported
     donate = (0, 1) if jax.default_backend() != "cpu" else ()
     return jax.jit(tick, donate_argnums=donate)
 
@@ -243,17 +307,45 @@ def _cache_put(cache, key, anchors, value):
     cache[key] = (tuple(weakref.ref(a) for a in anchors), value)
 
 
-def _tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig, K: int):
-    # runtime-only fields don't affect the traced computation: normalize
-    # them out so e.g. benchmark sweeps over T reuse one compilation
-    cfg_key = dataclasses.replace(cfg, T=0, sim_time_budget=None,
-                                  eval_every=0, seed=0, max_cohort=None)
+def _cfg_cache_key(cfg: RunConfig) -> Tuple:
+    """Runtime-only fields don't affect the traced computation: normalize
+    them out so e.g. benchmark sweeps over T (or prefetch toggles) reuse
+    one compilation."""
+    return dataclasses.astuple(dataclasses.replace(
+        cfg, T=0, sim_time_budget=None, eval_every=0, seed=0,
+        max_cohort=None, prefetch=None,
+    ))
+
+
+def _tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig, K: int,
+             mesh: Optional[Mesh]):
+    # key by device ids, not just mesh shape: the compiled fn closes over
+    # the concrete Mesh, and two same-shape meshes over different devices
+    # must not share it
+    mesh_key = (tuple(mesh.shape.items()),
+                tuple(d.id for d in mesh.devices.flat)) \
+        if mesh is not None else None
     key = (id(model), id(cfg_model), type(strategy).__name__, strategy.name,
-           dataclasses.astuple(cfg_key), K)
+           _cfg_cache_key(cfg), K, mesh_key)
     fn = _cache_get(_TICK_CACHE, key, (model, cfg_model))
     if fn is None:
-        fn = _build_tick_fn(strategy, model, cfg_model, cfg)
+        fn = _build_tick_fn(strategy, model, cfg_model, cfg, mesh)
         _cache_put(_TICK_CACHE, key, (model, cfg_model), fn)
+    return fn
+
+
+def _batched_init_fn(strategy: Strategy, model, cfg: RunConfig):
+    """Cached ``jit(vmap(init_one))`` for the stacked-state fast init, or
+    None when the strategy only provides the per-client path."""
+    init_one = strategy.build_init_client(model, cfg)
+    if init_one is None:
+        return None
+    key = (id(model), type(strategy).__name__, strategy.name,
+           _cfg_cache_key(cfg))
+    fn = _cache_get(_INIT_CACHE, key, (model,))
+    if fn is None:
+        fn = jax.jit(jax.vmap(init_one, in_axes=(None, 0)))
+        _cache_put(_INIT_CACHE, key, (model,), fn)
     return fn
 
 
@@ -273,6 +365,11 @@ def _predict_fn(model, per_client: bool):
 
 
 class _Evaluator:
+    """Batched eval in two phases: ``predict_device`` dispatches one padded
+    predict and returns the device array (cheap, non-serializing);
+    ``metrics_from`` pulls it to host and reduces — deferred to the end of
+    the run so eval never stalls the tick pipeline."""
+
     def __init__(self, model, clients: Sequence[SimClient], task: str,
                  per_client: bool):
         self.task = task
@@ -281,6 +378,7 @@ class _Evaluator:
         self.lens = [len(c.test_x) for c in clients]
         n_max = max(self.lens)
         K = len(clients)
+        self.K = K
         x0 = clients[0].test_x
         X = np.zeros((K, n_max) + x0.shape[1:], x0.dtype)
         for k, c in enumerate(clients):
@@ -288,18 +386,24 @@ class _Evaluator:
         self.X = jnp.asarray(X)
         self.targets = np.concatenate([c.test_y for c in clients])
 
-    def __call__(self, params) -> Dict[str, float]:
+    def predict_device(self, params):
+        return self.predict(params, self.X)
+
+    def metrics_from(self, preds_device) -> Dict[str, float]:
         # deferred import: repro.core packages the algorithm layer above
         # this engine; importing it at module scope would be circular
         from repro.core import metrics as M
 
-        preds = np.asarray(self.predict(params, self.X))
+        preds = np.asarray(preds_device)[: self.K]
         pred = np.concatenate([preds[k, :n] for k, n in enumerate(self.lens)])
         if self.task == "classification":
             return M.classification_report(pred, self.targets)
         return M.regression_report(
             pred[..., 0] if pred.ndim > 1 else pred, self.targets
         )
+
+    def __call__(self, params) -> Dict[str, float]:
+        return self.metrics_from(self.predict_device(params))
 
 
 # ---------------------------------------------------------------------------
@@ -317,6 +421,8 @@ def run_strategy(
     max_cohort: Optional[int] = None,
     trace: Optional[List] = None,
     stats: Optional[Dict] = None,
+    prefetch: Optional[bool] = None,
+    mesh: Union[str, None, Mesh] = "auto",
 ) -> List[HistoryPoint]:
     """Run one algorithm through the cohort engine.
 
@@ -324,7 +430,13 @@ def run_strategy(
     dispatch pattern; None batches every pending arrival).  ``trace``, when
     a list, receives ``(t, eval-params-as-numpy)`` after every tick — the
     hook the equivalence tests use.  ``stats``, when a dict, is filled with
-    ``{"ticks", "iters", "sim_time"}`` counters (benchmark hook).
+    ``{"ticks", "iters", "sim_time"}`` counters plus the per-phase wall
+    breakdown ``{"host_build_s", "device_s", "eval_s"}`` and the
+    ``{"prefetch", "devices", "tick_cache_size"}`` run descriptors
+    (benchmark hooks).  ``prefetch`` overrides ``cfg.prefetch`` (None →
+    on for async schedules).  ``mesh="auto"`` shards the client axis over
+    every local device (``repro.common.sharding.data_mesh``); pass None to
+    force the single-device path or an explicit 1-D ``data`` Mesh.
     """
     clients = list(clients)
     K = len(clients)
@@ -336,6 +448,8 @@ def run_strategy(
             "run_strategy requires clients with cid == position "
             f"(0..{K - 1}); got {[c.cid for c in clients]}"
         )
+    if mesh == "auto":
+        mesh = sharding_lib.data_mesh()
     E, B = cfg.local_epochs, cfg.batch_size
     max_cohort = max_cohort if max_cohort is not None else cfg.max_cohort
     w0 = model.init(jax.random.PRNGKey(cfg.seed))
@@ -363,18 +477,49 @@ def run_strategy(
 
     n_members = 1 if strategy.pooled else K
     members = [None] if strategy.pooled else clients
-    # stacked client states, + one scratch row targeted by padded slots
-    stacked = tree_stack(
-        [strategy.init_client(model, cfg, w0, c) for c in members]
-        + [strategy.init_client(model, cfg, w0, members[0])]
-    )
+    scratch = n_members  # index of the scratch row targeted by padded slots
+    n_rows = n_members + 1
+    if mesh is not None:
+        # extra scratch rows so the client axis divides the mesh evenly
+        D = mesh.devices.size
+        n_rows = -(-n_rows // D) * D
+
+    def _n0(c: Optional[SimClient]) -> float:
+        return float(c.stream.visible(0)) if c is not None else 0.0
+
+    init_batched = _batched_init_fn(strategy, model, cfg)
+    if init_batched is not None:
+        n0s = np.array([_n0(c) for c in members]
+                       + [_n0(members[0])] * (n_rows - n_members), np.float32)
+        stacked = init_batched(w0, jnp.asarray(n0s))
+    else:
+        states = [strategy.init_client(model, cfg, w0, c) for c in members]
+        states += [strategy.init_client(model, cfg, w0, members[0])
+                   ] * (n_rows - n_members)
+        stacked = tree_stack(states)
     server = strategy.init_server(model, cfg_model, cfg, w0, clients, active)
-    tick_fn = _tick_fn(strategy, model, cfg_model, cfg, K)
+    if mesh is not None:
+        stacked = jax.device_put(stacked, jax.tree.map(
+            lambda x: sharding_lib.client_sharding(x.shape, mesh), stacked))
+        server = jax.device_put(server, sharding_lib.replicated(mesh))
+    tick_fn = _tick_fn(strategy, model, cfg_model, cfg, K, mesh)
     evaluator = _Evaluator(model, clients, cfg.task, strategy.eval_per_client)
     by_id = {c.cid: c for c in clients}
-    scratch = n_members  # index of the scratch row
+
+    def transfer(name, arr):
+        sh = sharding_lib.client_sharding(arr.shape, mesh)
+        return jnp.asarray(arr) if sh is None else jax.device_put(arr, sh)
+
+    builder = TickBuilder(
+        by_id=by_id, batch_size=B, local_epochs=E, scratch=scratch, pad=pad,
+        pooled=strategy.pooled, transfer=transfer,
+    )
 
     history: List[HistoryPoint] = []
+    pending_evals: List[Tuple[int, float, float, Any]] = []
+    device_s = 0.0
+    eval_s = 0.0
+    n_ticks, t, sim_time = 0, 0, 0.0
     t0 = time.perf_counter()
 
     def eval_params():
@@ -382,75 +527,73 @@ def run_strategy(
         return strategy.eval_params(server, members_view)
 
     def record(t: int, sim_time: float):
-        history.append(HistoryPoint(
-            t, sim_time, time.perf_counter() - t0, evaluator(eval_params())
-        ))
+        nonlocal eval_s
+        e0 = time.perf_counter()
+        preds = evaluator.predict_device(eval_params())
+        pending_evals.append((t, sim_time, time.perf_counter() - t0, preds))
+        eval_s += time.perf_counter() - e0
 
-    def run_tick(arrivals, t_of, pooled_batch=None):
-        """Build padded host arrays for one tick and dispatch the jit.
+    def dispatch(pt):
+        nonlocal stacked, server, device_s, n_ticks
+        d0 = time.perf_counter()
+        stacked, server = tick_fn(stacked, server, *pt.arrays)
+        jax.block_until_ready((stacked, server))
+        device_s += time.perf_counter() - d0
+        n_ticks += 1
 
-        Cohorts are padded to power-of-two buckets (capped at ``pad``) so a
-        handful of compiled shapes serve every tick without paying full-
-        cohort compute when few clients arrive.
-        """
-        nonlocal stacked, server
-        n_real = len(arrivals)
-        P = min(pad, 1 << max(n_real - 1, 0).bit_length())
-        idx = np.full(P, scratch, np.int32)
-        delays = np.zeros(P, np.float32)
-        n_vis = np.zeros(P, np.float32)
-        t_arr = np.zeros(P, np.float32)
-        mask = np.zeros(P, bool)
-        xs_l, ys_l = [], []
-        for i, a in enumerate(arrivals):
-            t_i = t_of(i)
-            idx[i] = 0 if strategy.pooled else a.cid
-            delays[i] = a.delay
-            t_arr[i] = t_i
-            mask[i] = True
-            if pooled_batch is not None:
-                x_i, y_i = pooled_batch
-            else:
-                c = by_id[a.cid]
-                n_vis[i] = c.stream.visible(t_i)
-                x_i, y_i = stack_batches(c.stream, t_i, B, E)
-            xs_l.append(x_i)
-            ys_l.append(y_i)
-        for _ in range(P - n_real):  # zero pads keep shapes static
-            xs_l.append(np.zeros_like(xs_l[0]))
-            ys_l.append(np.zeros_like(ys_l[0]))
-        stacked, server = tick_fn(
-            stacked, server,
-            jnp.asarray(idx), jnp.asarray(np.stack(xs_l)),
-            jnp.asarray(np.stack(ys_l)), jnp.asarray(delays),
-            jnp.asarray(n_vis), jnp.asarray(t_arr), jnp.asarray(mask),
-        )
-
-    n_ticks, t, sim_time = 0, 0, 0.0
+    use_prefetch = False
     if strategy.schedule == "async":
         # a client with an empty local split (visible == 0 forever) can
         # never train: its arrivals are dropped so fabricated zero batches
         # are never folded in (FedAsync mixes at full weight, without the
         # n_vis/N guard ASO-Fed has)
         trainable = {c.cid for c in active if c.stream.n > 0}
+        use_prefetch = (prefetch if prefetch is not None
+                        else cfg.prefetch if cfg.prefetch is not None
+                        else True)
+
+        def produce():
+            """Pop + filter + build each tick (worker thread when
+            prefetching).  Mirrors the consuming loop's termination logic
+            exactly, so at most the single in-flight speculative peek is
+            ever un-committed."""
+            tp = 0
+            while tp < cfg.T:
+                arrivals = sched.peek_tick(min(pad, cfg.T - tp))
+                if not arrivals:
+                    sched.commit()
+                    break  # drained or over the simulated-time budget
+                kept = [a for a in arrivals if a.cid in trainable]
+                if not kept:
+                    sched.commit()
+                    continue  # tick held only empty-split clients
+                pt = builder.build(kept, range(tp, tp + len(kept)),
+                                   kept[-1].time)
+                sched.commit()
+                tp += len(kept)
+                yield pt
+
+        if not trainable:
+            source = iter(())
+        elif use_prefetch:
+            source = TickPrefetcher(produce(), depth=1)
+        else:
+            source = produce()
         next_eval = cfg.eval_every
-        while t < cfg.T and trainable:
-            arrivals = sched.next_tick(min(pad, cfg.T - t))
-            if not arrivals:
-                break  # drained or over the simulated-time budget
-            arrivals = [a for a in arrivals if a.cid in trainable]
-            if not arrivals:
-                continue  # tick held only empty-split clients
-            run_tick(arrivals, t_of=lambda i, t=t: t + i)
-            n_ticks += 1
-            t += len(arrivals)
-            sim_time = arrivals[-1].time
-            if trace is not None:
-                trace.append((t, jax.tree.map(np.asarray, eval_params())))
-            if t >= next_eval or t >= cfg.T:
-                record(t, sim_time)
-                while next_eval <= t:
-                    next_eval += cfg.eval_every
+        try:
+            for pt in source:
+                dispatch(pt)
+                t = pt.t_end
+                sim_time = pt.sim_time
+                if trace is not None:
+                    trace.append((t, jax.tree.map(np.asarray, eval_params())))
+                if t >= next_eval or t >= cfg.T:
+                    record(t, sim_time)
+                    while next_eval <= t:
+                        next_eval += cfg.eval_every
+        finally:
+            if isinstance(source, TickPrefetcher):
+                source.close()
     else:
         for t in range(1, cfg.T + 1):
             if (strategy.schedule == "sync" and cfg.sim_time_budget
@@ -463,14 +606,28 @@ def run_strategy(
                       if strategy.pooled else None)
             if strategy.pooled:
                 arrivals = arrivals[:1]
-            run_tick(arrivals, t_of=lambda i, t=t: t, pooled_batch=pooled)
-            n_ticks += 1
+            pt = builder.build(arrivals, [t] * len(arrivals), sim_time,
+                               pooled_batch=pooled)
+            dispatch(pt)
             sim_time = sim_time + round_time if strategy.schedule == "sync" \
                 else float(t)
             if trace is not None:
                 trace.append((t, jax.tree.map(np.asarray, eval_params())))
             if t % cfg.eval_every == 0 or t == cfg.T:
                 record(t, sim_time)
+
+    e0 = time.perf_counter()
+    for (te, ste, we, preds) in pending_evals:
+        history.append(HistoryPoint(te, ste, we, evaluator.metrics_from(preds)))
+    eval_s += time.perf_counter() - e0
     if stats is not None:
-        stats.update(ticks=n_ticks, iters=t, sim_time=sim_time)
+        stats.update(
+            ticks=n_ticks, iters=t, sim_time=sim_time,
+            host_build_s=round(builder.host_build_s, 6),
+            device_s=round(device_s, 6), eval_s=round(eval_s, 6),
+            prefetch=bool(use_prefetch),
+            devices=int(mesh.devices.size) if mesh is not None else 1,
+        )
+        if hasattr(tick_fn, "_cache_size"):
+            stats["tick_cache_size"] = int(tick_fn._cache_size())
     return history

@@ -1,0 +1,263 @@
+"""Host-side tick preparation: staging buffers + double-buffered prefetch.
+
+The cohort engine's host work per tick — drawing every arriving client's
+minibatches, padding them to the tick's shape bucket, and transferring the
+stacked arrays to device — used to happen inline between two device
+dispatches, so the accelerator idled while Python built batches.  This
+module makes that work overlappable and allocation-free:
+
+* :class:`TickBuilder` owns **pre-allocated staging buffers per shape
+  bucket** (rotated over a small number of slots so a buffer is never
+  rewritten while its device transfer may still be in flight) and fills
+  them in place via ``OnlineStream.batch_into`` — no per-tick ``np.stack``
+  / ``np.concatenate`` churn.  Buckets are powers of two: ``bucket_size``
+  rounds *both* the cohort cap and the arrival count to the power-of-two
+  grid, keeping the engine's compile cache at O(log K) entries even when
+  the cap itself is not a power of two.
+* :class:`TickPrefetcher` runs a tick-producing iterator on a side thread
+  with a bounded queue (depth 1 == double buffering): tick ``i+1``'s
+  batches are drawn and transferred while tick ``i`` executes on device.
+  All scheduler and stream rng state is touched only by the producer
+  thread, and the producer uses ``AsyncScheduler.peek_tick``/``commit`` so
+  speculation never perturbs the event stream — prefetch on/off replays
+  bit-identical trajectories.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sim.scheduler import Arrival
+
+Array = np.ndarray
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def bucket_size(n_real: int, pad: int) -> int:
+    """Power-of-two shape bucket for a tick of ``n_real`` arrivals.
+
+    Both operands are rounded to the power-of-two grid: capping at a
+    non-power-of-two ``pad`` (e.g. a FedAvg participant count of 6) would
+    otherwise mint one extra compiled shape per distinct cap value.  The
+    returned bucket may *exceed* ``pad`` — the surplus slots are masked
+    padding, which costs a little compute but no extra compilation.
+    """
+    return min(_pow2(max(pad, 1)), _pow2(max(n_real, 1)))
+
+
+@dataclasses.dataclass
+class PreparedTick:
+    """One tick's device-resident inputs plus its bookkeeping metadata.
+
+    ``arrays`` is the engine tick signature tail
+    ``(idx, xs, ys, delays, n_vis, t_arr, mask)``, already transferred
+    (and, on a mesh, sharded) by the builder.
+    """
+
+    arrivals: List[Arrival]  # trainable arrivals, in fold order
+    t_start: int  # global iteration at tick start
+    t_end: int  # global iteration after the tick's folds
+    sim_time: float  # simulated time of the last arrival
+    arrays: Tuple  # (idx, xs, ys, delays, n_vis, t_arr, mask)
+
+
+class TickBuilder:
+    """Builds padded tick inputs into per-bucket staging buffers.
+
+    ``transfer(name, np_array)`` moves one staging array to device (the
+    engine binds it to ``jax.device_put`` with the cohort sharding).  The
+    small per-slot metadata arrays are allocated once per bucket; the
+    ``xs``/``ys`` data buffers once per (bucket, batch shape).  Buffers
+    rotate over ``NSLOTS`` slots so the arrays handed to the device for
+    tick ``i`` are never overwritten while building tick ``i+1`` — safe
+    even if a future backend transfers zero-copy.
+
+    Padded slots keep whatever rows the previous occupant of the bucket
+    left behind: their uploads are masked out of the fold and their
+    write-back targets the scratch row, so only finiteness matters (stale
+    real batches are as finite as the zero rows the engine used to
+    materialize each tick).
+    """
+
+    NSLOTS = 3
+
+    def __init__(self, *, by_id: Dict[int, object], batch_size: int,
+                 local_epochs: int, scratch: int, pad: int, pooled: bool,
+                 transfer: Callable[[str, Array], object]):
+        self.by_id = by_id
+        self.B = batch_size
+        self.E = local_epochs
+        self.scratch = scratch
+        self.pad = pad
+        self.pooled = pooled
+        self.transfer = transfer
+        self.host_build_s = 0.0  # accumulated host batch-build + transfer time
+        self._meta: Dict[Tuple[int, int], Dict[str, Array]] = {}
+        self._data: Dict[Tuple, Tuple[Array, Array]] = {}
+        self._slot = 0
+
+    def _meta_slot(self, P: int, slot: int) -> Dict[str, Array]:
+        key = (P, slot)
+        buf = self._meta.get(key)
+        if buf is None:
+            buf = {
+                "idx": np.empty(P, np.int32),
+                "delays": np.empty(P, np.float32),
+                "n_vis": np.empty(P, np.float32),
+                "t_arr": np.empty(P, np.float32),
+                "mask": np.empty(P, bool),
+            }
+            self._meta[key] = buf
+        return buf
+
+    def _data_slot(self, P: int, slot: int, tx: Tuple,
+                   ty: Tuple) -> Tuple[Array, Array]:
+        (x_shape, x_dtype), (y_shape, y_dtype) = tx, ty
+        key = (P, slot, x_shape, y_shape)
+        buf = self._data.get(key)
+        if buf is None:
+            buf = (np.zeros((P,) + x_shape, x_dtype),
+                   np.zeros((P,) + y_shape, y_dtype))
+            self._data[key] = buf
+        return buf
+
+    def _slot_template(self, pooled_batch) -> Tuple[Tuple, Tuple]:
+        """Per-slot (x, y) (shape, dtype) pairs, computed once."""
+        if pooled_batch is not None:
+            px, py = pooled_batch
+            return (px.shape, px.dtype), (py.shape, py.dtype)
+        if not hasattr(self, "_tmpl"):
+            c = next(iter(self.by_id.values()))
+            x_row, y_row = c.stream.x, c.stream.y
+            self._tmpl = (
+                ((self.E, self.B) + x_row.shape[1:], x_row.dtype),
+                ((self.E, self.B) + y_row.shape[1:], y_row.dtype),
+            )
+        return self._tmpl
+
+    def build(self, arrivals: Sequence[Arrival], times: Sequence[int],
+              sim_time: float, pooled_batch=None) -> PreparedTick:
+        """Fill one tick's staging buffers and transfer them to device.
+
+        ``times`` gives the global-iteration stamp of each arrival (the
+        fold order t, t+1, ... for async schedules; a constant round index
+        for sync ones).  Minibatches are drawn in arrival order, exactly
+        as the inline loop did — the per-client stream rngs advance
+        identically, which the prefetch determinism tests pin down.
+        """
+        t0 = time.perf_counter()
+        n_real = len(arrivals)
+        P = 1 if self.pooled else bucket_size(n_real, self.pad)
+        slot = self._slot
+        self._slot = (slot + 1) % self.NSLOTS
+        meta = self._meta_slot(P, slot)
+        meta["idx"].fill(self.scratch)
+        meta["delays"].fill(0.0)
+        meta["n_vis"].fill(0.0)
+        meta["t_arr"].fill(0.0)
+        meta["mask"].fill(False)
+        tx, ty = self._slot_template(pooled_batch)
+        xs, ys = self._data_slot(P, slot, tx, ty)
+        for i, a in enumerate(arrivals):
+            t_i = times[i]
+            meta["idx"][i] = 0 if self.pooled else a.cid
+            meta["delays"][i] = a.delay
+            meta["t_arr"][i] = t_i
+            meta["mask"][i] = True
+            if pooled_batch is not None:
+                xs[i], ys[i] = pooled_batch
+            else:
+                c = self.by_id[a.cid]
+                meta["n_vis"][i] = c.stream.visible(t_i)
+                for e in range(self.E):
+                    c.stream.batch_into(t_i, xs[i, e], ys[i, e])
+        arrays = (
+            self.transfer("idx", meta["idx"]),
+            self.transfer("xs", xs),
+            self.transfer("ys", ys),
+            self.transfer("delays", meta["delays"]),
+            self.transfer("n_vis", meta["n_vis"]),
+            self.transfer("t_arr", meta["t_arr"]),
+            self.transfer("mask", meta["mask"]),
+        )
+        self.host_build_s += time.perf_counter() - t0
+        return PreparedTick(
+            arrivals=list(arrivals),
+            t_start=times[0] if len(times) else 0,
+            # async fold order stamps t, t+1, ...; sync rounds stamp a
+            # constant t and ignore t_end
+            t_end=(times[-1] + 1) if len(times) else 0,
+            sim_time=sim_time, arrays=arrays,
+        )
+
+
+class TickPrefetcher:
+    """Runs a tick iterator on a side thread with a bounded queue.
+
+    ``depth=1`` is classic double buffering: at most one built-but-unconsumed
+    tick, plus the one the worker is currently building.  Exceptions raised
+    by the producer surface on the consuming thread at the corresponding
+    ``__next__``.  ``close()`` stops the worker promptly (used on early
+    exit) — because the producer speculates via ``peek_tick``/``commit``,
+    an abandoned in-flight tick leaves the scheduler's committed event
+    stream untouched.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, it: Iterator[PreparedTick], depth: int = 1):
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, args=(it,), name="tick-prefetch", daemon=True
+        )
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _run(self, it: Iterator[PreparedTick]) -> None:
+        try:
+            for item in it:
+                if not self._put(item):
+                    return
+        except BaseException as e:  # noqa: BLE001 — re-raised on the consumer
+            self._err = e
+        finally:
+            self._put(self._SENTINEL)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> PreparedTick:
+        item = self._q.get()
+        if item is self._SENTINEL:
+            self._thread.join()
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)

@@ -73,10 +73,46 @@ class AsyncScheduler:
         self.round_work = round_work
         self.budget = sim_time_budget
         self._heap: List[Tuple[float, int]] = []
+        self._pending: Optional[Tuple[List[Arrival], object, List]] = None
         for c in self.active:
             heapq.heappush(
                 self._heap, (c.profile.delay(self.rng, init_work), c.cid)
             )
+
+    def peek_tick(self, limit: int) -> List[Arrival]:
+        """Speculatively compute the next tick without consuming state.
+
+        Runs the exact ``next_tick`` pop/draw sequence on the live state,
+        records the post-tick (rng, heap) pair, then rolls both back.  The
+        pop-time-draw contract makes this safe: the event stream is a pure
+        function of (rng state, heap), so the recorded outcome is the one
+        ``next_tick`` would produce.  ``commit()`` adopts the recorded
+        state; skipping the commit leaves the scheduler bit-identical to
+        before the peek (a later ``next_tick``/``peek_tick`` re-derives the
+        same arrivals).  This is what lets a prefetch thread build the next
+        tick's host arrays while the current tick executes on device,
+        without perturbing the trajectory if the run stops early.
+
+        Only one speculative tick is held at a time; a second peek before
+        commit replaces the first (identical by determinism).
+        """
+        rng_state = self.rng.bit_generator.state
+        heap = list(self._heap)
+        self._pending = None
+        tick = self.next_tick(limit)
+        self._pending = (tick, self.rng.bit_generator.state, self._heap)
+        self._heap = heap
+        self.rng.bit_generator.state = rng_state
+        return tick
+
+    def commit(self) -> None:
+        """Adopt the state recorded by the last ``peek_tick``."""
+        if self._pending is None:
+            raise RuntimeError("commit() without a preceding peek_tick()")
+        _, rng_state, heap = self._pending
+        self.rng.bit_generator.state = rng_state
+        self._heap = heap
+        self._pending = None
 
     def next_tick(self, limit: int) -> List[Arrival]:
         """Pop up to ``limit`` arrivals with pairwise-distinct clients.
@@ -87,6 +123,7 @@ class AsyncScheduler:
         folds), so no rng draw is consumed out of order and the global event
         stream is identical for every tick size.
         """
+        self._pending = None  # a direct pop invalidates any speculation
         tick: List[Arrival] = []
         seen = set()
         while len(tick) < limit and self._heap:

@@ -37,6 +37,29 @@ class OnlineStream:
         idx = self._rng.integers(0, v, size=min(batch_size, v))
         return self.x[idx], self.y[idx]
 
+    def batch_into(self, t: int, out_x: np.ndarray, out_y: np.ndarray) -> None:
+        """Draw one ``len(out_x)``-row minibatch directly into staging rows.
+
+        Consumes exactly the rng draws of :meth:`batch` (the prefetch
+        determinism contract), then pads a short draw by cycling the drawn
+        rows — the resampling semantics of ``pad_batch`` — and an empty
+        visible window with zeros, all without allocating fresh arrays.
+        """
+        B = len(out_x)
+        v = self.visible(t)
+        if v <= 0:
+            out_x[:] = 0
+            out_y[:] = 0
+            return
+        idx = self._rng.integers(0, v, size=min(B, v))
+        m = len(idx)
+        np.take(self.x, idx, axis=0, out=out_x[:m])
+        np.take(self.y, idx, axis=0, out=out_y[:m])
+        if m < B:  # cycle the drawn rows (== np.resize row semantics)
+            wrap = np.arange(m, B) % m
+            out_x[m:] = out_x[wrap]
+            out_y[m:] = out_y[wrap]
+
     def window(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
         v = self.visible(t)
         return self.x[:v], self.y[:v]

@@ -182,8 +182,184 @@ def test_scheduler_distinct_clients_per_tick():
 
 
 # ---------------------------------------------------------------------------
+# Speculative scheduling: peek/commit, prefetch determinism
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_peek_commit_roundtrip():
+    """peek_tick must not consume state; commit must adopt exactly the
+    state next_tick would have produced."""
+    data, _, _ = _setup(n_clients=6)
+
+    def fresh(seed=3):
+        return AsyncScheduler(sim_make_clients(data, seed=0), seed=seed,
+                              skip_prob=0.2, init_work=8, round_work=16)
+
+    # peek -> discard -> next_tick re-derives the identical tick
+    s = fresh()
+    peeked = s.peek_tick(3)
+    assert s.next_tick(3) == peeked
+    # peek -> commit interleaved == a plain next_tick drain
+    s1, s2 = fresh(), fresh()
+    stream1, stream2 = [], []
+    for _ in range(40):
+        tick = s1.peek_tick(3)
+        s1.commit()
+        stream1.extend(tick)
+        stream2.extend(s2.next_tick(3))
+    assert stream1 == stream2
+
+
+def test_scheduler_peek_without_commit_is_stateless():
+    data, _, _ = _setup(n_clients=6)
+    s = AsyncScheduler(sim_make_clients(data, seed=0), seed=1,
+                       skip_prob=0.3, init_work=8, round_work=16)
+    s.next_tick(2)
+    first = s.peek_tick(4)
+    # repeated peeks re-derive the same speculative tick
+    assert s.peek_tick(4) == first
+    assert s.next_tick(4) == first
+
+
+@pytest.mark.parametrize("alg", ["asofed", "fedasync"])
+def test_prefetch_on_off_identical_trajectory(alg):
+    """The prefetch thread builds ticks speculatively: its trajectory must
+    match the inline build bit-for-bit (same jit, same inputs) — asserted
+    at fp32 tolerance."""
+    data, cfg_model, model = _setup()
+    tr_on, tr_off = [], []
+    run_strategy(get_strategy(alg), model, cfg_model,
+                 sim_make_clients(data, seed=0), CFG, trace=tr_on,
+                 prefetch=True)
+    run_strategy(get_strategy(alg), model, cfg_model,
+                 sim_make_clients(data, seed=0), CFG, trace=tr_off,
+                 prefetch=False)
+    assert len(tr_on) == len(tr_off) >= 2
+    for (t1, w1), (t2, w2) in zip(tr_on, tr_off):
+        assert t1 == t2
+        for a, b in zip(jax.tree.leaves(w1), jax.tree.leaves(w2)):
+            np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Compile stability: power-of-two shape buckets, bounded jit cache
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_size_power_of_two_grid():
+    from repro.sim.prefetch import bucket_size
+
+    # pad is rounded to the grid too: a non-power-of-two cap must not mint
+    # per-cap compiled shapes
+    assert bucket_size(5, pad=6) == 8
+    assert bucket_size(6, pad=6) == 8
+    assert bucket_size(3, pad=6) == 4
+    assert bucket_size(1, pad=6) == 1
+    assert bucket_size(7, pad=16) == 8
+    assert bucket_size(16, pad=16) == 16
+    # the reachable bucket set is O(log K)
+    buckets = {bucket_size(n, pad=11) for n in range(1, 12)}
+    assert buckets == {1, 2, 4, 8, 16}
+
+
+def test_tick_compile_cache_bounded():
+    """A multi-tick run over a non-power-of-two cohort cap must stay within
+    the O(log K) bucket grid of compiled tick shapes."""
+    data, cfg_model, model = _setup(n_clients=6)
+    cfg = dataclasses.replace(CFG, T=48, periodic_dropout=0.15)
+    stats = {}
+    run_strategy(get_strategy("asofed"), model, cfg_model,
+                 sim_make_clients(data, seed=0), cfg, stats=stats)
+    assert stats["ticks"] > 4
+    if "tick_cache_size" in stats:  # jit cache introspection available
+        import math
+        assert stats["tick_cache_size"] <= math.ceil(math.log2(6)) + 2
+
+
+# ---------------------------------------------------------------------------
+# Pallas feature-attention fold (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_pallas_fold_matches_reference():
+    """The asofed fold with the Pallas feature-attention kernel (forced, as
+    above the ops.py size threshold) must replay the jnp-reference
+    trajectory at fp32 tolerance — the reference loop pins use_kernel=False
+    so this is kernel-in-scan vs jnp-in-loop."""
+    data, cfg_model, model = _setup(n_clients=4)
+    cfg = dataclasses.replace(CFG, T=24, feature_kernel=True,
+                              feature_kernel_interpret=True)
+    ref_cfg = dataclasses.replace(cfg, feature_kernel=False,
+                                  feature_kernel_interpret=False)
+    ref = run_asofed_reference(model, cfg_model,
+                               sim_make_clients(data, seed=0), ref_cfg)
+    trace = []
+    run_strategy(get_strategy("asofed"), model, cfg_model,
+                 sim_make_clients(data, seed=0), cfg, trace=trace)
+    _assert_traj_close(trace, ref)
+
+
+def test_feature_kernel_auto_threshold():
+    from repro.kernels.feature_attention import ops
+
+    # CPU backend: the auto rule must always pick the jnp path
+    assert not ops.use_kernel_default(ops.KERNEL_MIN_ELEMS * 2)
+    # the threshold itself is a sane power of two
+    assert ops.KERNEL_MIN_ELEMS & (ops.KERNEL_MIN_ELEMS - 1) == 0
+
+
+# ---------------------------------------------------------------------------
 # Satellite units: streaming empty window, non-mutating aggregate, stacking
 # ---------------------------------------------------------------------------
+
+
+def test_batch_into_matches_batch():
+    """The staging-buffer fill must consume the same rng draws and produce
+    the same padded rows as the allocating batch()+pad_batch path."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(11, 3)).astype(np.float32)
+    y = rng.normal(size=(11,)).astype(np.float32)
+    from repro.sim.engine import pad_batch
+
+    for t in (0, 5, 40):
+        s1 = OnlineStream(x, y, start_frac=0.3, seed=7)
+        s2 = OnlineStream(x, y, start_frac=0.3, seed=7)
+        for _ in range(3):  # several draws: rng streams must stay in step
+            bx, by = pad_batch(*s1.batch(t, 8), 8, s1.x, s1.y)
+            ox = np.empty((8, 3), np.float32)
+            oy = np.empty((8,), np.float32)
+            s2.batch_into(t, ox, oy)
+            np.testing.assert_array_equal(bx, ox)
+            np.testing.assert_array_equal(by, oy)
+
+
+def test_pad_batch_cycles_rows():
+    """np.resize padding must reproduce the old concatenate-and-slice
+    semantics: rows cycle in order."""
+    from repro.sim.engine import pad_batch
+
+    x = np.arange(6, dtype=np.float32).reshape(3, 2)
+    y = np.arange(3, dtype=np.float32)
+    px, py = pad_batch(x, y, 8, x, y)
+    np.testing.assert_array_equal(px, np.concatenate([x, x, x])[:8])
+    np.testing.assert_array_equal(py, np.concatenate([y, y, y])[:8])
+
+
+@pytest.mark.parametrize("alg", ["asofed", "fedasync"])
+def test_batched_init_matches_per_client(alg):
+    """The vmapped stacked init must equal the per-client eager path."""
+    data, cfg_model, model = _setup(n_clients=3)
+    clients = sim_make_clients(data, seed=0)
+    strategy = get_strategy(alg)
+    w0 = model.init(jax.random.PRNGKey(0))
+    init_one = strategy.build_init_client(model, CFG)
+    assert init_one is not None
+    n0s = jnp.asarray([float(c.stream.visible(0)) for c in clients])
+    batched = jax.jit(jax.vmap(init_one, in_axes=(None, 0)))(w0, n0s)
+    eager = tree_stack([strategy.init_client(model, CFG, w0, c)
+                        for c in clients])
+    for a, b in zip(jax.tree.leaves(batched), jax.tree.leaves(eager)):
+        np.testing.assert_allclose(a, b)
 
 
 def test_online_stream_empty_window():
