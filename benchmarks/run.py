@@ -35,6 +35,11 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=1,
                     help="with --smoke: force N virtual host devices to "
                          "exercise the sharded cohort path on CPU")
+    ap.add_argument("--scenario", default=None,
+                    help="with --smoke: also run the pipelined engine under "
+                         "an availability-trace scenario (diurnal|bursty|"
+                         "churn|flash|trace:<path>); churn records land in "
+                         "BENCH_sim.json next to the always-on sweep")
     args = ap.parse_args()
     quick = not args.full
     want = lambda s: args.only is None or args.only in s  # noqa: E731
@@ -55,7 +60,7 @@ def main() -> None:
     if args.smoke or (args.only and want("sim")):
         from benchmarks.sim_bench import bench_sim
 
-        for r in bench_sim():
+        for r in bench_sim(scenario=args.scenario):
             rows.append(r)
             print(_fmt(*r), flush=True)
         if args.smoke:  # smoke mode runs only the sim sweep

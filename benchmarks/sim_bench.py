@@ -63,15 +63,54 @@ def _run(model, cfg_model, clients, cfg, mode: str) -> Dict:
     return stats
 
 
+_STAT_COLS = ("host_build_s", "device_s", "eval_s", "prefetch", "devices",
+              "tick_cache_size", "staleness_mean", "staleness_max",
+              "availability_utilization", "deferred_arrivals",
+              "retired_clients")
+
+
+def _record(K: int, mode: str, scenario: str, s: Dict) -> Dict:
+    rec = {
+        "clients": K,
+        "mode": mode,
+        "scenario": scenario,
+        "iters": s["iters"],
+        "ticks": s["ticks"],
+        "wall_time_s": round(s["wall_time_s"], 4),
+        "ticks_per_s": round(s["ticks"] / s["wall_time_s"], 2),
+        "iters_per_s": round(s["iters"] / s["wall_time_s"], 2),
+    }
+    for k in _STAT_COLS:
+        if k in s:
+            rec[k] = round(s[k], 4) if isinstance(s[k], float) else s[k]
+    return rec
+
+
 def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
-              baseline_iters: int = 256) -> List[Tuple[str, float, str]]:
-    """Smoke sweep: pipelined/serialized engine vs per-arrival dispatch."""
+              baseline_iters: int = 256,
+              scenario: str = None) -> List[Tuple[str, float, str]]:
+    """Smoke sweep: pipelined/serialized engine vs per-arrival dispatch.
+
+    ``scenario`` (``diurnal`` / ``bursty`` / ``churn`` / ``flash`` /
+    ``trace:<path>``) *adds* churn records on top of the always-on sweep:
+    the pipelined engine re-runs with that availability-trace scenario
+    attached, so BENCH_sim.json carries throughput under structured churn
+    (availability-utilization / staleness / deferral columns) next to the
+    always-on record it must not regress.
+    """
     from repro.sim.engine import RunConfig
+    from repro.sim.traces import scenario_traces, with_traces
+
+    if scenario and scenario != "always_on":
+        # fail fast on a typo'd scenario name / unreadable trace file —
+        # before the always-on sweep burns minutes of JIT + bench time
+        scenario_traces(scenario, 0, seed=0)
 
     rows: List[Tuple[str, float, str]] = []
     records: List[Dict] = []
     speedup_at = {}
     overlap_at = {}
+    churn_at = {}
     for K in counts:
         cfg_model, model, mk = _build(K)
         base = RunConfig(
@@ -92,19 +131,7 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 # is part of the cost the engine removes
                 _run(model, cfg_model, mk(), cfg, mode)
             s = _run(model, cfg_model, mk(), cfg, mode)
-            rec = {
-                "clients": K,
-                "mode": mode,
-                "iters": s["iters"],
-                "ticks": s["ticks"],
-                "wall_time_s": round(s["wall_time_s"], 4),
-                "ticks_per_s": round(s["ticks"] / s["wall_time_s"], 2),
-                "iters_per_s": round(s["iters"] / s["wall_time_s"], 2),
-            }
-            for k in ("host_build_s", "device_s", "eval_s",
-                      "prefetch", "devices", "tick_cache_size"):
-                if k in s:
-                    rec[k] = round(s[k], 4) if isinstance(s[k], float) else s[k]
+            rec = _record(K, mode, "always_on", s)
             records.append(rec)
             per_mode[mode] = rec
             rows.append((
@@ -112,6 +139,22 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 s["wall_time_s"] / max(s["iters"], 1) * 1e6,
                 f"iters_per_s={rec['iters_per_s']};ticks_per_s="
                 f"{rec['ticks_per_s']}",
+            ))
+        if scenario and scenario != "always_on":
+            traces = scenario_traces(scenario, K, seed=0)
+            mk_churn = lambda: with_traces(mk(), traces)  # noqa: E731
+            _run(model, cfg_model, mk_churn(), base, "cohort")  # warmup
+            s = _run(model, cfg_model, mk_churn(), base, "cohort")
+            rec = _record(K, "cohort", scenario, s)
+            records.append(rec)
+            churn_at[K] = rec
+            rows.append((
+                f"sim/cohort/{K}clients/{scenario}",
+                s["wall_time_s"] / max(s["iters"], 1) * 1e6,
+                f"iters_per_s={rec['iters_per_s']};util="
+                f"{rec.get('availability_utilization')};stal_mean="
+                f"{rec.get('staleness_mean')};deferred="
+                f"{rec.get('deferred_arrivals')}",
             ))
         speedup_at[K] = round(
             per_mode["cohort"]["iters_per_s"]
@@ -138,11 +181,30 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                    "on); device_s = tick dispatch-to-completion; eval_s = "
                    "eval dispatch + deferred metric extraction.  "
                    "prefetch_overlap_s = host work hidden behind device "
-                   "execution (phase sum - wall, per client count)."),
+                   "execution (phase sum - wall, per client count).  "
+                   "Churn columns (scenario != always_on): "
+                   "availability_utilization = fleet mean on-fraction over "
+                   "the simulated horizon; staleness_mean/max = global "
+                   "iterations since each arriving client's previous fold; "
+                   "deferred_arrivals = off-window completions pushed to "
+                   "the next on-window edge; retired_clients = one-shot "
+                   "traces exhausted."),
         "records": records,
         "speedup_cohort_vs_per_arrival": speedup_at,
         "prefetch_overlap_s": overlap_at,
     }
+    if churn_at:
+        payload["churn_scenario"] = scenario
+        payload["churn_vs_always_on"] = {
+            K: {
+                "iters_per_s": rec["iters_per_s"],
+                "availability_utilization":
+                    rec.get("availability_utilization"),
+                "staleness_mean": rec.get("staleness_mean"),
+                "deferred_arrivals": rec.get("deferred_arrivals"),
+            }
+            for K, rec in churn_at.items()
+        }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     rows.append((

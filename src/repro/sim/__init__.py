@@ -32,9 +32,22 @@ from repro.sim.scheduler import (
     AsyncScheduler,
     SweepScheduler,
     SyncScheduler,
+    draw_dropouts,
     mark_dropouts,
 )
 from repro.sim.streaming import OnlineStream
+from repro.sim.traces import (
+    AvailabilityTrace,
+    diurnal,
+    flash_crowd,
+    load_jsonl,
+    markov_churn,
+    save_jsonl,
+    scenario_traces,
+    straggler_waves,
+    utilization,
+    with_traces,
+)
 
 __all__ = [
     "HistoryPoint",
@@ -54,6 +67,17 @@ __all__ = [
     "AsyncScheduler",
     "SweepScheduler",
     "SyncScheduler",
+    "draw_dropouts",
     "mark_dropouts",
     "OnlineStream",
+    "AvailabilityTrace",
+    "diurnal",
+    "flash_crowd",
+    "load_jsonl",
+    "markov_churn",
+    "save_jsonl",
+    "scenario_traces",
+    "straggler_waves",
+    "utilization",
+    "with_traces",
 ]

@@ -54,6 +54,7 @@ from repro.sim.prefetch import TickBuilder, TickPrefetcher
 from repro.sim.profiles import SimClient
 from repro.sim.scheduler import AsyncScheduler, SyncScheduler, SweepScheduler
 from repro.sim.streaming import OnlineStream
+from repro.sim.traces import utilization as availability_utilization
 
 Array = np.ndarray
 
@@ -627,6 +628,16 @@ def run_strategy(
             device_s=round(device_s, 6), eval_s=round(eval_s, 6),
             prefetch=bool(use_prefetch),
             devices=int(mesh.devices.size) if mesh is not None else 1,
+            # churn observability: per-arrival staleness (iterations since
+            # the client's previous fold) and the fleet's mean on-fraction
+            # over the simulated horizon, plus the scheduler's deferral /
+            # retirement counters (always-on runs report 1.0 / 0 / 0)
+            staleness_mean=round(builder.staleness.mean, 4),
+            staleness_max=int(builder.staleness.max),
+            availability_utilization=round(
+                availability_utilization(active, sim_time), 4),
+            deferred_arrivals=int(getattr(sched, "deferred", 0)),
+            retired_clients=int(getattr(sched, "retired", 0)),
         )
         if hasattr(tick_fn, "_cache_size"):
             stats["tick_cache_size"] = int(tick_fn._cache_size())

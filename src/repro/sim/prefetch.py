@@ -37,6 +37,31 @@ from repro.sim.scheduler import Arrival
 Array = np.ndarray
 
 
+class StalenessMeter:
+    """Per-arrival staleness accounting: global iterations since each
+    client's previous fold (a first arrival counts from iteration 0 —
+    the FedAsync version-vector convention).  One implementation shared
+    by the engine's :class:`TickBuilder` and the reference oracles, so
+    their stats stay comparable by construction."""
+
+    def __init__(self):
+        self.sum = 0.0
+        self.max = 0
+        self.n = 0
+        self._last: Dict[int, int] = {}
+
+    def observe(self, cid: int, t: int) -> None:
+        stal = t - self._last.get(cid, 0)
+        self._last[cid] = t
+        self.sum += stal
+        self.max = max(self.max, stal)
+        self.n += 1
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.n if self.n else 0.0
+
+
 def _pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
@@ -100,6 +125,10 @@ class TickBuilder:
         self.pooled = pooled
         self.transfer = transfer
         self.host_build_s = 0.0  # accumulated host batch-build + transfer time
+        # tracked here because the builder sees every arrival in fold
+        # order — on the producer thread when prefetching — so the
+        # engine loop stays untouched
+        self.staleness = StalenessMeter()
         self._meta: Dict[Tuple[int, int], Dict[str, Array]] = {}
         self._data: Dict[Tuple, Tuple[Array, Array]] = {}
         self._slot = 0
@@ -168,6 +197,7 @@ class TickBuilder:
         xs, ys = self._data_slot(P, slot, tx, ty)
         for i, a in enumerate(arrivals):
             t_i = times[i]
+            self.staleness.observe(a.cid, t_i)
             meta["idx"][i] = 0 if self.pooled else a.cid
             meta["delays"][i] = a.delay
             meta["t_arr"][i] = t_i

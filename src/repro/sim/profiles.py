@@ -15,6 +15,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.sim.streaming import OnlineStream
+from repro.sim.traces import AvailabilityTrace
 
 Array = np.ndarray
 
@@ -26,11 +27,16 @@ class DeviceProfile:
     ``delay(rng, n_work)`` is the simulated duration of a round processing
     ``n_work`` samples: deterministic compute time plus the network offset
     scaled by a uniform jitter draw (the paper's 10-100 s random delay).
+
+    ``trace``, when set, is the device's replayable availability: the
+    async scheduler defers any completion landing in an off-window to the
+    next on-window edge (``repro.sim.traces``).  ``None`` = always on.
     """
 
     base_delay: float  # mean network offset, seconds (paper: U[10, 100])
     compute_rate: float = 2000.0  # samples / simulated second
     jitter: Tuple[float, float] = (0.8, 1.2)  # multiplicative network jitter
+    trace: Optional[AvailabilityTrace] = None  # replayable on/off windows
 
     def delay(self, rng: np.random.Generator, n_work: int) -> float:
         compute = n_work / self.compute_rate
@@ -85,12 +91,16 @@ def make_sim_clients(
     start_frac: float = 0.3,
     growth: float = 0.00075,
     profiles: Optional[Sequence[DeviceProfile]] = None,
+    traces: Optional[Sequence[Optional[AvailabilityTrace]]] = None,
 ) -> List[SimClient]:
     """Build SimClients from (train_x, train_y, test_x, test_y) splits.
 
     Matches the seed reproduction's rng layout: client i's profile offset is
     the i-th U[delay_range] draw from ``default_rng(seed)`` and its stream is
-    seeded ``seed + i``.
+    seeded ``seed + i``.  ``traces[i]``, when given, becomes client i's
+    availability trace (``None`` entries stay always-on) — the profile
+    delay draws are unaffected, so attaching traces never perturbs the
+    delay rng stream.
     """
     rng = np.random.default_rng(seed)
     out = []
@@ -99,6 +109,8 @@ def make_sim_clients(
             prof = profiles[i]
         else:
             prof = DeviceProfile(base_delay=float(rng.uniform(*delay_range)))
+        if traces is not None and traces[i] is not None:
+            prof = dataclasses.replace(prof, trace=traces[i])
         out.append(
             SimClient(
                 cid=i,

@@ -22,7 +22,34 @@ from repro.core import client as client_lib
 from repro.core.algorithms.common import avg_surrogate_grad, sgd_epochs
 from repro.core.server import aggregate, init_server
 from repro.sim.engine import RunConfig, stack_batches
+from repro.sim.prefetch import StalenessMeter
 from repro.sim.scheduler import AsyncScheduler, SyncScheduler
+from repro.sim.traces import utilization
+
+
+class _ChurnStats:
+    """Staleness + availability bookkeeping for the oracle loops, built
+    on the same :class:`StalenessMeter` the engine's ``TickBuilder``
+    uses, so stats dicts are comparable across engine and reference."""
+
+    def __init__(self):
+        self.meter = StalenessMeter()
+        self.sim_time = 0.0
+
+    def arrival(self, cid: int, t: int, time: float) -> None:
+        self.meter.observe(cid, t)
+        self.sim_time = time
+
+    def update(self, stats: Dict, sched: AsyncScheduler) -> None:
+        stats.update(
+            staleness_mean=round(self.meter.mean, 4),
+            staleness_max=int(self.meter.max),
+            sim_time=self.sim_time,
+            availability_utilization=round(
+                utilization(sched.active, self.sim_time), 4),
+            deferred_arrivals=int(sched.deferred),
+            retired_clients=int(sched.retired),
+        )
 
 
 def _eval_all_per_client(model, params, clients, task: str):
@@ -83,6 +110,7 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
 
     trainable = {c.cid for c in active if c.stream.n > 0}
     traj: Dict[int, object] = {}
+    churn = _ChurnStats()
     t = 0
     while t < cfg.T and trainable:
         tick = sched.next_tick(1)
@@ -91,6 +119,7 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
         (a,) = tick
         if a.cid not in trainable:  # empty split: engine drops it too
             continue
+        churn.arrival(a.cid, t, a.time)
         c = sched.by_id[a.cid]
         st = cstate[a.cid]
         n_vis = c.stream.visible(t)
@@ -112,6 +141,7 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
             _eval_all_per_client(model, server.w, clients, cfg.task)
     if stats is not None:
         stats.update(iters=t, ticks=t, evals=n_evals)
+        churn.update(stats, sched)
     return traj
 
 
@@ -126,6 +156,7 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
     local_w = {c.cid: w for c in sched.active}
     trainable = {c.cid for c in sched.active if c.stream.n > 0}
     traj: Dict[int, object] = {}
+    churn = _ChurnStats()
     t, n_evals = 0, 0
     while t < cfg.T and trainable:
         tick = sched.next_tick(1)
@@ -134,6 +165,7 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
         (a,) = tick
         if a.cid not in trainable:  # empty split: engine drops it too
             continue
+        churn.arrival(a.cid, t, a.time)
         c = sched.by_id[a.cid]
         xs, ys = stack_batches(c.stream, t, cfg.batch_size, cfg.local_epochs)
         wk = sgd(local_w[a.cid], local_w[a.cid],
@@ -153,6 +185,7 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
             _eval_all_per_client(model, w, clients, cfg.task)
     if stats is not None:
         stats.update(iters=t, ticks=t, evals=n_evals)
+        churn.update(stats, sched)
     return traj
 
 

@@ -7,6 +7,20 @@ an identical arrival order regardless of how the engine chunks events into
 ticks (the cohort engine at any ``max_cohort`` replays the exact event
 sequence of the per-arrival reference loop).
 
+Availability traces (``repro.sim.traces``) are consulted at **pop time**
+and consume no randomness: a completion event popping inside an
+off-window is deferred to the next on-window edge (re-queued at that
+time), and a one-shot trace with no further on-window retires the client.
+Because deferral is a pure function of (heap, trace), the event stream
+stays a pure function of (rng state, heap) — tick-chunking invariance and
+the ``peek_tick``/``commit`` speculation contract survive unchanged.
+
+Dropout state is **scheduler-local**: the seeded draw selects client
+*positions* but marks nothing on the shared ``SimClient`` objects, so an
+engine and a reference oracle built from the same client list can never
+interfere (pre-existing manual ``SimClient.dropped`` flags are still
+honored).
+
 Three schedules:
 
 * ``AsyncScheduler``  — the paper's regime: a priority queue of completion
@@ -20,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional, Sequence, Tuple
+from typing import FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -41,14 +55,43 @@ class Arrival:
     delay: float
 
 
+def draw_dropouts(n: int, frac: float,
+                  rng: np.random.Generator) -> FrozenSet[int]:
+    """Positions of the ``frac * n`` permanently-dropped clients (Fig. 4).
+
+    One ``rng.choice`` draw, identical to the stream the old mutating
+    ``mark_dropouts`` consumed; the caller owns the returned set, so two
+    schedulers seeded differently over the same client list each get
+    their own draw without stepping on each other.
+    """
+    k = int(n * frac)
+    return frozenset(int(i) for i in rng.choice(n, size=k, replace=False))
+
+
 def mark_dropouts(clients: Sequence[SimClient], frac: float,
                   rng: np.random.Generator) -> None:
-    """Permanently drop ``frac`` of clients (Fig. 4).  One rng.choice draw."""
-    k = int(len(clients) * frac)
+    """Deprecated mutating form: stamps ``SimClient.dropped`` in place.
+
+    Kept for callers that want an explicit fleet-wide marking; the
+    schedulers no longer call this — they keep dropout state local via
+    :func:`draw_dropouts`.
+    """
     for c in clients:
         c.dropped = False
-    for i in rng.choice(len(clients), size=k, replace=False):
-        clients[int(i)].dropped = True
+    for i in draw_dropouts(len(clients), frac, rng):
+        clients[i].dropped = True
+
+
+def _split_active(clients: Sequence[SimClient], frac: float,
+                  rng: np.random.Generator
+                  ) -> Tuple[List[SimClient], FrozenSet[int]]:
+    """(active clients, dropped cids) under a scheduler-local draw."""
+    dropped_pos = draw_dropouts(len(clients), frac, rng) if frac \
+        else frozenset()
+    dropped_cids = frozenset(clients[i].cid for i in dropped_pos)
+    active = [c for c in clients
+              if not c.dropped and c.cid not in dropped_cids]
+    return active, dropped_cids
 
 
 class AsyncScheduler:
@@ -56,7 +99,11 @@ class AsyncScheduler:
 
     Delay draws happen *at pop time* (a round's duration does not depend on
     its numerical result), which makes the full event stream deterministic
-    given the seed — the foundation of tick-equivalence.
+    given the seed — the foundation of tick-equivalence.  Availability
+    traces are also resolved at pop time, consuming no randomness: an
+    off-window completion is re-queued at the next on-window edge, an
+    exhausted one-shot trace retires the client (``deferred`` / ``retired``
+    count both, and roll back with the speculation state).
     """
 
     def __init__(self, clients: Sequence[SimClient], *, seed: int = 0,
@@ -64,16 +111,17 @@ class AsyncScheduler:
                  init_work: int = 32, round_work: int = 64,
                  sim_time_budget: Optional[float] = None):
         self.rng = np.random.default_rng(seed)
-        if dropout_frac:
-            mark_dropouts(clients, dropout_frac, self.rng)
-        self.active = [c for c in clients if not c.dropped]
+        self.active, self.dropped_cids = _split_active(
+            clients, dropout_frac, self.rng)
         self.by_id = {c.cid: c for c in self.active}
         self.skip_prob = skip_prob
         self.init_work = init_work
         self.round_work = round_work
         self.budget = sim_time_budget
+        self.deferred = 0  # off-window completions pushed to an on-edge
+        self.retired = 0  # clients whose one-shot trace ran out
         self._heap: List[Tuple[float, int]] = []
-        self._pending: Optional[Tuple[List[Arrival], object, List]] = None
+        self._pending: Optional[Tuple] = None
         for c in self.active:
             heapq.heappush(
                 self._heap, (c.profile.delay(self.rng, init_work), c.cid)
@@ -98,20 +146,24 @@ class AsyncScheduler:
         """
         rng_state = self.rng.bit_generator.state
         heap = list(self._heap)
+        counters = (self.deferred, self.retired)
         self._pending = None
         tick = self.next_tick(limit)
-        self._pending = (tick, self.rng.bit_generator.state, self._heap)
+        self._pending = (tick, self.rng.bit_generator.state, self._heap,
+                         (self.deferred, self.retired))
         self._heap = heap
         self.rng.bit_generator.state = rng_state
+        self.deferred, self.retired = counters
         return tick
 
     def commit(self) -> None:
         """Adopt the state recorded by the last ``peek_tick``."""
         if self._pending is None:
             raise RuntimeError("commit() without a preceding peek_tick()")
-        _, rng_state, heap = self._pending
+        _, rng_state, heap, counters = self._pending
         self.rng.bit_generator.state = rng_state
         self._heap = heap
+        self.deferred, self.retired = counters
         self._pending = None
 
     def next_tick(self, limit: int) -> List[Arrival]:
@@ -122,14 +174,35 @@ class AsyncScheduler:
         popping (a repeat client's local round depends on this tick's server
         folds), so no rng draw is consumed out of order and the global event
         stream is identical for every tick size.
+
+        Off-window heap tops are *normalized* first — deferred to their
+        trace's next on-edge (or retired when the trace is exhausted) —
+        before the budget/seen checks run.  Normalization touches only the
+        heap, never the rng, so it commutes across tick boundaries and
+        replays identically under ``peek_tick`` rollback.
         """
         self._pending = None  # a direct pop invalidates any speculation
         tick: List[Arrival] = []
         seen = set()
         while len(tick) < limit and self._heap:
-            if self.budget is not None and self._heap[0][0] > self.budget:
+            top_time, top_cid = self._heap[0]
+            if self.budget is not None and top_time > self.budget:
+                # budget before normalization: deferral only moves times
+                # forward, so a raw time past the budget can never yield
+                # an in-budget arrival — don't count (or retire) events
+                # the budgeted run never reaches
                 break
-            if self._heap[0][1] in seen:
+            tr = self.by_id[top_cid].profile.trace
+            if tr is not None and not tr.is_on(top_time):
+                heapq.heappop(self._heap)
+                t_on = tr.next_on(top_time)
+                if t_on is None:
+                    self.retired += 1  # one-shot trace exhausted: Fig.-4
+                    continue           # style permanent departure
+                self.deferred += 1  # next_on > top_time strictly when off
+                heapq.heappush(self._heap, (t_on, top_cid))
+                continue
+            if top_cid in seen:
                 break
             now, cid = heapq.heappop(self._heap)
             c = self.by_id[cid]
@@ -149,15 +222,19 @@ class AsyncScheduler:
 
 
 class SyncScheduler:
-    """FedAvg/FedProx participant sampling with the synchronous barrier."""
+    """FedAvg/FedProx participant sampling with the synchronous barrier.
+
+    Availability traces are ignored here: a synchronous round waits for
+    its sampled participants by construction, so structured churn shows
+    up as the Fig.-4/5 dropout/skip knobs instead.
+    """
 
     def __init__(self, clients: Sequence[SimClient], *, seed: int = 0,
                  dropout_frac: float = 0.0, skip_prob: float = 0.0,
                  participation: float = 0.2, round_work: int = 64):
         self.rng = np.random.default_rng(seed)
-        if dropout_frac:
-            mark_dropouts(clients, dropout_frac, self.rng)
-        self.active = [c for c in clients if not c.dropped]
+        self.active, self.dropped_cids = _split_active(
+            clients, dropout_frac, self.rng)
         self.skip_prob = skip_prob
         self.m = max(1, int(participation * len(self.active)))
         self.round_work = round_work

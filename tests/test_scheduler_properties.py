@@ -1,0 +1,253 @@
+"""Property-test harness for the scheduler determinism contract.
+
+The engine's tick-equivalence, prefetch speculation, and trace-driven
+availability all rest on one invariant: the scheduler's arrival stream is
+a pure function of (seed, client list, policy knobs) — independent of how
+it is chunked into ticks and of whether ticks are built speculatively.
+Example-based tests pin single configurations; this harness sweeps
+randomized (seed, dropout_frac, skip_prob, budget, trace scenario)
+combinations and asserts, for every case:
+
+(a) the concatenated ``Arrival`` stream is identical for every tick size
+    (max_cohort ∈ {1, 3, 8, K});
+(b) ``peek_tick`` + ``commit`` replays exactly the ``next_tick`` stream,
+    and an uncommitted peek leaves the scheduler bit-identical;
+(c) [engine level, below] prefetch on/off trajectories are bit-identical
+    under traces, and both replay the per-arrival reference;
+(d) arrival times are non-decreasing and never land inside an off-window
+    (deferral pushes completions to the next on-window edge), dropped
+    clients never arrive, and per-tick cids are pairwise distinct.
+
+Tier-1 runs ``N_TIER1`` randomized cases; ``--runslow`` extends the sweep.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.sim.profiles import DeviceProfile, SimClient
+from repro.sim.scheduler import AsyncScheduler
+from repro.sim.streaming import OnlineStream
+from repro.sim.traces import scenario_traces, with_traces
+
+N_TIER1 = 24
+N_SLOW = 72
+
+_SCENARIOS = (None, "churn", "diurnal", "bursty", "flash")
+# generator kwargs scaled to the schedulers' simulated-seconds regime
+# (base delays of a few tens of seconds, horizons of a few hundred)
+_SCENARIO_KW = {
+    "churn": dict(mean_on=120.0, mean_off=40.0, period=600.0),
+    "diurnal": dict(period=150.0, duty=0.55),
+    "bursty": dict(period=200.0, width=50.0, frac=0.4),
+    "flash": dict(t_join=60.0, stagger=40.0),
+}
+
+
+def _make_clients(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        x = rng.normal(size=(10, 3)).astype(np.float32)
+        y = rng.normal(size=(10,)).astype(np.float32)
+        out.append(SimClient(
+            cid=i,
+            stream=OnlineStream(x, y, seed=seed + i),
+            test_x=x[:2], test_y=y[:2],
+            profile=DeviceProfile(base_delay=float(rng.uniform(5.0, 50.0))),
+        ))
+    return out
+
+
+def _case(i: int):
+    """Deterministically derive one randomized sweep point from its index."""
+    rng = np.random.default_rng(0xA5F0 + i)
+    n = int(rng.integers(3, 10))
+    seed = int(rng.integers(0, 2**31 - 1))
+    dropout = float(rng.uniform(0.1, 0.5)) if rng.uniform() < 0.4 else 0.0
+    skip = float(rng.uniform(0.05, 0.4)) if rng.uniform() < 0.6 else 0.0
+    budget = float(rng.uniform(150.0, 600.0)) if rng.uniform() < 0.3 else None
+    scenario = _SCENARIOS[int(rng.integers(0, len(_SCENARIOS)))]
+    clients = _make_clients(n, seed=seed % 10_000)
+    if scenario is not None:
+        traces = scenario_traces(scenario, n, seed=seed % 997,
+                                 **_SCENARIO_KW[scenario])
+        clients = with_traces(clients, traces)
+    return clients, dict(seed=seed, dropout_frac=dropout, skip_prob=skip,
+                         init_work=8, round_work=16, sim_time_budget=budget)
+
+
+def _sched(clients, kw) -> AsyncScheduler:
+    return AsyncScheduler(clients, **kw)
+
+
+def _drain(sched: AsyncScheduler, chunk: int, n: int = 150):
+    """(stream, per-tick cid groups) — exact floats, no rounding: the
+    streams under comparison come from identical arithmetic, so equality
+    must hold bit-for-bit."""
+    stream, groups = [], []
+    while len(stream) < n:
+        tick = sched.next_tick(chunk)
+        if not tick:
+            break
+        stream.extend(tick)
+        groups.append([a.cid for a in tick])
+    return stream[:n], groups
+
+
+def _drain_peeked(sched: AsyncScheduler, chunk: int, n: int = 150):
+    stream = []
+    while len(stream) < n:
+        tick = sched.peek_tick(chunk)
+        sched.commit()
+        if not tick:
+            break
+        stream.extend(tick)
+    return stream[:n]
+
+
+def _check_case(i: int):
+    clients, kw = _case(i)
+    K = len(clients)
+
+    # (a) tick-size invariance of the concatenated arrival stream
+    streams = {}
+    groups_by_chunk = {}
+    for chunk in (1, 3, 8, K):
+        streams[chunk], groups_by_chunk[chunk] = _drain(_sched(clients, kw),
+                                                        chunk)
+    base = streams[1]
+    for chunk, s in streams.items():
+        m = min(len(base), len(s))
+        assert s[:m] == base[:m], f"case {i}: chunk {chunk} diverged"
+        assert len(s) == len(base), f"case {i}: chunk {chunk} length"
+
+    # (b) speculative peek/commit replays the direct stream exactly,
+    # and an uncommitted peek is stateless
+    assert _drain_peeked(_sched(clients, kw), 3) == streams[3]
+    s = _sched(clients, kw)
+    s.next_tick(2)
+    peeked = s.peek_tick(4)
+    assert s.peek_tick(4) == peeked  # re-peek re-derives
+    assert s.next_tick(4) == peeked  # discard leaves state untouched
+
+    # (d) stream sanity: monotone times, on-window arrivals, no dropped
+    # clients, pairwise-distinct cids per tick
+    sch = _sched(clients, kw)
+    times = [a.time for a in base]
+    assert all(a <= b for a, b in zip(times, times[1:])), f"case {i}"
+    if kw["sim_time_budget"] is not None:
+        assert all(t <= kw["sim_time_budget"] for t in times)
+    for a in base:
+        assert a.cid not in sch.dropped_cids, f"case {i}: dropped cid arrived"
+        tr = clients[a.cid].profile.trace
+        if tr is not None:
+            assert tr.is_on(a.time), \
+                f"case {i}: arrival inside off-window at t={a.time}"
+    for groups in groups_by_chunk.values():
+        for g in groups:
+            assert len(g) == len(set(g)), f"case {i}: repeated cid in tick"
+
+
+@pytest.mark.parametrize("i", range(N_TIER1))
+def test_scheduler_contract_randomized(i):
+    _check_case(i)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("i", range(N_TIER1, N_SLOW))
+def test_scheduler_contract_randomized_extended(i):
+    _check_case(i)
+
+
+# ---------------------------------------------------------------------------
+# (c) Engine level: tick-equivalence and prefetch bit-identity under traces
+# ---------------------------------------------------------------------------
+
+
+def _setup_engine(n_clients=4, n_per=40, hidden=8):
+    from repro.configs import get_arch
+    from repro.data import airquality_like
+    from repro.models import LOCAL, build_model
+
+    data = airquality_like(n_clients=n_clients, n_per=n_per)
+    cfg_model = dataclasses.replace(
+        get_arch("paper-lstm"), in_features=8, out_features=1, hidden=hidden
+    )
+    return data, cfg_model, build_model(cfg_model, LOCAL)
+
+
+def _assert_traj_close(engine_trace, reference, atol=3e-4, rtol=3e-3):
+    assert engine_trace, "engine produced no ticks"
+    for t, w in engine_trace:
+        assert t in reference, f"tick boundary t={t} not in reference"
+        for a, b in zip(jax.tree.leaves(w), jax.tree.leaves(reference[t])):
+            np.testing.assert_allclose(a, b, atol=atol, rtol=rtol,
+                                       err_msg=f"divergence at t={t}")
+
+
+def _check_engine_scenario(scenario, alg="asofed", T=24, n_clients=4):
+    from repro.core.algorithms import get_strategy
+    from repro.sim.engine import RunConfig, run_strategy
+    from repro.sim.profiles import make_sim_clients
+    from repro.sim.reference import (run_asofed_reference,
+                                     run_fedasync_reference)
+
+    data, cfg_model, model = _setup_engine(n_clients=n_clients)
+    cfg = RunConfig(T=T, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
+                    beta=0.001, task="regression", eval_every=T // 2, seed=0)
+    traces = scenario_traces(scenario, n_clients, seed=0,
+                             **_SCENARIO_KW[scenario])
+
+    def mk():
+        return make_sim_clients(data, seed=0, traces=traces)
+
+    reference = {"asofed": run_asofed_reference,
+                 "fedasync": run_fedasync_reference}[alg]
+    ref_stats = {}
+    ref = reference(model, cfg_model, mk(), cfg, stats=ref_stats)
+    tr_on, tr_off, tr_c1 = [], [], []
+    st_on = {}
+    run_strategy(get_strategy(alg), model, cfg_model, mk(), cfg,
+                 trace=tr_on, prefetch=True, stats=st_on)
+    run_strategy(get_strategy(alg), model, cfg_model, mk(), cfg,
+                 trace=tr_off, prefetch=False)
+    run_strategy(get_strategy(alg), model, cfg_model, mk(), cfg,
+                 trace=tr_c1, prefetch=False, max_cohort=1)
+
+    # prefetch on/off: bit-identical trajectories (same jit, same inputs)
+    assert len(tr_on) == len(tr_off) >= 2
+    for (t1, w1), (t2, w2) in zip(tr_on, tr_off):
+        assert t1 == t2
+        for a, b in zip(jax.tree.leaves(w1), jax.tree.leaves(w2)):
+            np.testing.assert_array_equal(a, b)
+    # batched cohorts and the per-arrival dispatch pattern both replay the
+    # sequential oracle (fp32 reassociation tolerance)
+    _assert_traj_close(tr_on, ref)
+    _assert_traj_close(tr_c1, ref)
+    # churn observability agrees between engine and oracle
+    assert st_on["staleness_mean"] == pytest.approx(
+        ref_stats["staleness_mean"], abs=1e-9)
+    assert st_on["staleness_max"] == ref_stats["staleness_max"]
+    assert st_on["deferred_arrivals"] == ref_stats["deferred_arrivals"]
+    assert st_on["availability_utilization"] == pytest.approx(
+        ref_stats["availability_utilization"], abs=1e-6)
+    if scenario in ("churn", "diurnal"):
+        assert st_on["availability_utilization"] < 0.999
+
+
+@pytest.mark.parametrize("scenario", ["diurnal", "bursty"])
+def test_engine_tick_equivalence_under_traces(scenario):
+    _check_engine_scenario(scenario)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario,alg", [
+    ("churn", "asofed"),
+    ("flash", "asofed"),
+    ("diurnal", "fedasync"),
+    ("bursty", "fedasync"),
+])
+def test_engine_tick_equivalence_under_traces_extended(scenario, alg):
+    _check_engine_scenario(scenario, alg=alg, T=40)

@@ -1,0 +1,231 @@
+"""Coverage for the previously-untested scheduler paths and host-side
+batching edges: ``SyncScheduler`` (slowest-participant round cost, seeded
+sampling), ``SweepScheduler`` (every-client order), scheduler-local
+dropout state, and ``pad_batch`` / ``stack_batches`` shape handling."""
+import numpy as np
+import pytest
+
+from repro.sim.engine import pad_batch, stack_batches
+from repro.sim.prefetch import bucket_size
+from repro.sim.profiles import DeviceProfile, SimClient
+from repro.sim.scheduler import (AsyncScheduler, SweepScheduler,
+                                 SyncScheduler, draw_dropouts, mark_dropouts)
+from repro.sim.streaming import OnlineStream
+
+
+def _clients(n, base_delays=None, jitter=(0.8, 1.2)):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(20, 3)).astype(np.float32)
+    y = rng.normal(size=(20,)).astype(np.float32)
+    out = []
+    for i in range(n):
+        bd = base_delays[i] if base_delays is not None else 10.0 + i
+        out.append(SimClient(
+            cid=i, stream=OnlineStream(x, y, seed=i),
+            test_x=x[:2], test_y=y[:2],
+            profile=DeviceProfile(base_delay=bd, compute_rate=2000.0,
+                                  jitter=jitter),
+        ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SyncScheduler
+# ---------------------------------------------------------------------------
+
+
+def test_sync_round_costs_slowest_participant():
+    # jitter pinned to 1.0: delay = round_work/compute_rate + base_delay,
+    # so the synchronous barrier cost is checkable exactly
+    clients = _clients(8, base_delays=[5.0 * (i + 1) for i in range(8)],
+                       jitter=(1.0, 1.0))
+    s = SyncScheduler(clients, seed=3, participation=0.5, round_work=64)
+    for _ in range(10):
+        arrivals, round_time = s.next_round()
+        assert len(arrivals) == s.m == 4
+        expected = [64 / 2000.0 + clients[a.cid].profile.base_delay
+                    for a in arrivals]
+        assert [a.delay for a in arrivals] == pytest.approx(expected)
+        assert round_time == max(a.delay for a in arrivals)
+
+
+def test_sync_participation_count():
+    clients = _clients(10)
+    assert SyncScheduler(clients, participation=0.2).m == 2
+    assert SyncScheduler(clients, participation=0.25).m == 2  # int() floor
+    # floor never reaches zero: at least one participant per round
+    assert SyncScheduler(clients, participation=0.01).m == 1
+
+
+def test_sync_sampling_seed_determinism():
+    clients = _clients(9)
+
+    def rounds(seed, n=12):
+        s = SyncScheduler(clients, seed=seed, participation=0.4,
+                          skip_prob=0.2)
+        return [tuple((a.cid, round(a.delay, 9)) for a in s.next_round()[0])
+                for _ in range(n)]
+
+    assert rounds(5) == rounds(5)
+    assert rounds(5) != rounds(6)
+
+
+def test_sync_all_skipped_round_is_empty():
+    clients = _clients(5)
+    s = SyncScheduler(clients, seed=0, participation=0.6, skip_prob=1.0)
+    arrivals, round_time = s.next_round()
+    assert arrivals == [] and round_time == 0.0
+
+
+# ---------------------------------------------------------------------------
+# SweepScheduler
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_every_client_every_round_in_order():
+    clients = _clients(6)
+    s = SweepScheduler(clients)
+    for _ in range(3):
+        arrivals, round_time = s.next_round()
+        assert [a.cid for a in arrivals] == [c.cid for c in clients]
+        assert all(a.delay == 0.0 for a in arrivals)
+        assert round_time == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-local dropout state
+# ---------------------------------------------------------------------------
+
+
+def test_dropout_state_is_scheduler_local():
+    """Two schedulers over the same client list (the engine + reference
+    oracle pattern) must not interfere: the draw marks nothing on the
+    shared SimClient objects."""
+    clients = _clients(10)
+    s1 = AsyncScheduler(clients, seed=1, dropout_frac=0.4)
+    actives_before = [c.cid for c in s1.active]
+    s2 = AsyncScheduler(clients, seed=2, dropout_frac=0.4)
+    s3 = SyncScheduler(clients, seed=7, dropout_frac=0.4)
+    assert not any(c.dropped for c in clients)  # no in-place re-marking
+    assert [c.cid for c in s1.active] == actives_before
+    assert len(s1.active) == len(s2.active) == len(s3.active) == 6
+    assert len(s1.dropped_cids) == 4  # 0.4 of 10 dropped
+    # same seed re-derives the same draw; the streams stay independent
+    s1b = AsyncScheduler(clients, seed=1, dropout_frac=0.4)
+    assert s1b.dropped_cids == s1.dropped_cids
+
+
+def test_draw_dropouts_matches_legacy_mark():
+    """draw_dropouts consumes the exact rng stream the old mutating
+    mark_dropouts did, so seeded runs reproduce PR-2 event streams."""
+    clients = _clients(10)
+    drawn = draw_dropouts(10, 0.3, np.random.default_rng(9))
+    mark_dropouts(clients, 0.3, np.random.default_rng(9))
+    assert drawn == {c.cid for c in clients if c.dropped}
+    # manual (pre-set) dropped flags are still honored by schedulers
+    s = AsyncScheduler(clients, seed=0)
+    assert {c.cid for c in s.active} == {c.cid for c in clients
+                                         if not c.dropped}
+    for c in clients:
+        c.dropped = False
+
+
+def test_budget_checked_before_trace_normalization():
+    """Events already past the simulated-time budget must not be
+    deferred, retired, or popped: the budgeted run never reaches them,
+    so the churn counters must not report them."""
+    from repro.sim.traces import AvailabilityTrace, with_traces
+
+    clients = with_traces(
+        _clients(3, base_delays=[500.0, 600.0, 700.0], jitter=(1.0, 1.0)),
+        [AvailabilityTrace(windows=((0.0, 10.0),)),  # exhausted by t=500
+         AvailabilityTrace(windows=((0.0, 10.0),), period=1000.0),
+         None],
+    )
+    s = AsyncScheduler(clients, seed=0, init_work=8, round_work=16,
+                       sim_time_budget=100.0)
+    heap_before = sorted(s._heap)
+    assert s.next_tick(3) == []  # every completion lands past the budget
+    assert s.deferred == 0 and s.retired == 0
+    assert sorted(s._heap) == heap_before  # heap untouched, not consumed
+
+
+# ---------------------------------------------------------------------------
+# pad_batch / stack_batches / bucket_size edges
+# ---------------------------------------------------------------------------
+
+
+def test_pad_batch_empty_draw_uses_template_shape():
+    tx = np.zeros((4, 5, 2), np.float32)
+    ty = np.zeros((4, 3), np.int32)
+    px, py = pad_batch(tx[:0], ty[:0], 6, tx, ty)
+    assert px.shape == (6, 5, 2) and px.dtype == np.float32
+    assert py.shape == (6, 3) and py.dtype == np.int32
+    assert not px.any() and not py.any()
+
+
+def test_pad_batch_exact_and_overfull():
+    x = np.arange(12, dtype=np.float32).reshape(4, 3)
+    y = np.arange(4, dtype=np.float32)
+    # n == size: rows pass through untouched
+    px, py = pad_batch(x, y, 4, x, y)
+    np.testing.assert_array_equal(px, x)
+    np.testing.assert_array_equal(py, y)
+    # n > size: truncate, keeping the leading rows
+    px, py = pad_batch(x, y, 2, x, y)
+    np.testing.assert_array_equal(px, x[:2])
+    np.testing.assert_array_equal(py, y[:2])
+
+
+def test_pad_batch_resize_row_cycling():
+    """np.resize pads by cycling rows in order — the semantics the
+    staging-buffer fill (OnlineStream.batch_into) must mirror."""
+    x = np.arange(6, dtype=np.float32).reshape(3, 2)
+    y = np.arange(3, dtype=np.float32)
+    px, py = pad_batch(x, y, 7, x, y)
+    np.testing.assert_array_equal(px, x[[0, 1, 2, 0, 1, 2, 0]])
+    np.testing.assert_array_equal(py, y[[0, 1, 2, 0, 1, 2, 0]])
+
+
+def test_stack_batches_rng_stream_alignment():
+    """stack_batches must consume exactly n_steps batch() draws — the
+    interchangeability contract with the staging-buffer path."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(15, 3)).astype(np.float32)
+    y = rng.normal(size=(15,)).astype(np.float32)
+    s1 = OnlineStream(x, y, start_frac=0.4, seed=3)
+    s2 = OnlineStream(x, y, start_frac=0.4, seed=3)
+    xs, ys = stack_batches(s1, 5, batch_size=4, n_steps=3)
+    assert xs.shape == (3, 4, 3) and ys.shape == (3, 4)
+    for e in range(3):
+        bx, by = pad_batch(*s2.batch(5, 4), 4, s2.x, s2.y)
+        np.testing.assert_array_equal(xs[e], bx)
+        np.testing.assert_array_equal(ys[e], by)
+    # both streams end at the same rng state
+    nxt1 = s1.batch(5, 4)
+    nxt2 = s2.batch(5, 4)
+    np.testing.assert_array_equal(nxt1[0], nxt2[0])
+
+
+def test_stack_batches_visible_window_smaller_than_batch():
+    """n_vis < batch_size: every step pads by cycling the short draw."""
+    x = np.arange(20, dtype=np.float32).reshape(10, 2)
+    y = np.arange(10, dtype=np.float32)
+    s = OnlineStream(x, y, start_frac=0.2, growth=0.0, seed=0)  # 2 visible
+    xs, ys = stack_batches(s, 0, batch_size=8, n_steps=2)
+    assert xs.shape == (2, 8, 2)
+    # only the two visible rows may appear
+    assert set(np.unique(ys)) <= {0.0, 1.0}
+
+
+def test_bucket_size_edges():
+    # n_vis == bucket size: no extra padding slot minted
+    assert bucket_size(8, pad=8) == 8
+    assert bucket_size(4, pad=4) == 4
+    # non-pow2 cohort caps round up to the grid, never per-cap shapes
+    assert bucket_size(6, pad=6) == 8
+    assert bucket_size(9, pad=11) == 16
+    assert bucket_size(11, pad=11) == 16
+    # degenerate zero-arrival tick still maps to the smallest bucket
+    assert bucket_size(0, pad=4) == 1
+    assert bucket_size(1, pad=1) == 1

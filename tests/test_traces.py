@@ -1,0 +1,199 @@
+"""Unit tests for the trace-driven availability subsystem
+(``repro.sim.traces``): window semantics, cyclic wrap, generators,
+JSONL persistence, and fleet utilization."""
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.sim.profiles import DeviceProfile, SimClient
+from repro.sim.streaming import OnlineStream
+from repro.sim.traces import (
+    ALWAYS_ON,
+    AvailabilityTrace,
+    diurnal,
+    flash_crowd,
+    load_jsonl,
+    markov_churn,
+    save_jsonl,
+    scenario_traces,
+    straggler_waves,
+    utilization,
+    with_traces,
+)
+
+
+# ---------------------------------------------------------------------------
+# Window semantics
+# ---------------------------------------------------------------------------
+
+
+def test_one_shot_windows():
+    tr = AvailabilityTrace(windows=((10.0, 20.0), (30.0, 40.0)))
+    # half-open [start, end): on at start, off at end
+    assert not tr.is_on(5) and tr.is_on(10) and tr.is_on(19.999)
+    assert not tr.is_on(20) and tr.is_on(30) and not tr.is_on(40)
+    assert tr.next_on(0) == 10 and tr.next_on(15) == 15
+    assert tr.next_on(20) == 30 and tr.next_on(25) == 30
+    # exhausted one-shot trace: never on again
+    assert tr.next_on(40) is None and tr.next_on(1e9) is None
+    assert tr.on_seconds(0, 100) == 20
+    assert tr.on_fraction(0, 40) == pytest.approx(0.5)
+    assert tr.on_fraction(12, 18) == pytest.approx(1.0)
+    assert tr.on_fraction(50, 60) == 0.0
+
+
+def test_cyclic_windows():
+    tr = AvailabilityTrace(windows=((10.0, 20.0),), period=50.0)
+    assert tr.is_on(60) and tr.is_on(115) and not tr.is_on(55)
+    assert tr.next_on(75) == pytest.approx(110.0)
+    assert tr.next_on(0) == 10.0
+    assert tr.on_fraction(0, 500) == pytest.approx(0.2)
+    # a cyclic trace is never exhausted
+    assert tr.next_on(1e6) is not None
+
+
+def test_next_on_strict_progress_at_fp_edges():
+    """The scheduler's deferral loop requires next_on(t) > t whenever
+    is_on(t) is false — including when the gap to the window start is
+    sub-ulp at large t (naive ``t + gap`` rounds back to t) and when the
+    mod-period re-reduction lands an ulp short of the start."""
+    tr = AvailabilityTrace(windows=((10.0, 20.0),), period=50.0)
+    for t in (20.0, 49.999999999, 1e7 + 0.3, 1e12 + 5.0):
+        if not tr.is_on(t):
+            c = tr.next_on(t)
+            assert c > t and tr.is_on(c), t
+
+
+def test_open_ended_window():
+    tr = AvailabilityTrace(windows=((100.0, math.inf),))
+    assert not tr.is_on(99) and tr.is_on(100) and tr.is_on(1e12)
+    assert tr.next_on(50) == 100.0 and tr.next_on(500) == 500.0
+    assert tr.on_fraction(0, 200) == pytest.approx(0.5)
+    assert ALWAYS_ON.is_on(0) and ALWAYS_ON.next_on(123.0) == 123.0
+
+
+def test_window_validation():
+    with pytest.raises(ValueError):
+        AvailabilityTrace(windows=((10.0, 10.0),))  # empty window
+    with pytest.raises(ValueError):
+        AvailabilityTrace(windows=((-1.0, 5.0),))  # negative start
+    with pytest.raises(ValueError):
+        AvailabilityTrace(windows=((10.0, 30.0), (20.0, 40.0)))  # overlap
+    with pytest.raises(ValueError):
+        AvailabilityTrace(windows=((30.0, 40.0), (10.0, 20.0)))  # unsorted
+    with pytest.raises(ValueError):
+        AvailabilityTrace(windows=((0.0, 60.0),), period=50.0)  # > period
+    with pytest.raises(ValueError):
+        AvailabilityTrace(windows=((0.0, 1.0),), period=0.0)  # bad period
+    # never-on one-shot is legal (a fully dark device log)
+    assert AvailabilityTrace(windows=()).next_on(0.0) is None
+
+
+# ---------------------------------------------------------------------------
+# Generators: seeded determinism + scenario shape
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gen", [markov_churn, diurnal, straggler_waves,
+                                 flash_crowd])
+def test_generators_seeded_and_valid(gen):
+    a = gen(9, seed=5)
+    assert len(a) == 9
+    assert a == gen(9, seed=5)  # same seed, identical traces
+    assert a != gen(9, seed=6)  # a different seed actually changes them
+    for tr in a:
+        # every generated trace admits a future on-window from t=0
+        assert tr.next_on(0.0) is not None
+
+
+def test_flash_crowd_shape():
+    trs = flash_crowd(6, seed=1, t_join=100.0, stagger=30.0)
+    for tr in trs:
+        assert not tr.is_on(99.0)
+        assert tr.is_on(200.0) and tr.is_on(1e9)
+        assert 100.0 <= tr.next_on(0.0) <= 130.0
+
+
+def test_straggler_waves_shape():
+    trs = straggler_waves(10, seed=3, period=200.0, width=50.0, frac=0.5)
+    riders = [tr for tr in trs if tr != ALWAYS_ON]
+    assert len(riders) == 5  # frac of the fleet rides the wave
+    for tr in riders:
+        # off for ~width out of every period
+        assert tr.on_fraction(0.0, 2000.0) == pytest.approx(
+            1.0 - 50.0 / 200.0, abs=0.06)
+
+
+def test_straggler_waves_rejects_oversized_burst():
+    # rng.uniform(low, high) accepts low > high without complaint: the
+    # generator must validate instead of emitting distorted traces
+    with pytest.raises(ValueError):
+        straggler_waves(4, seed=0, period=100.0, width=80.0, jitter=30.0)
+
+
+def test_scenario_dispatcher():
+    assert scenario_traces(None, 4) == [None] * 4
+    assert scenario_traces("always_on", 4) == [None] * 4
+    assert len(scenario_traces("diurnal", 4, seed=1)) == 4
+    assert scenario_traces("bursty", 3, seed=0) == \
+        scenario_traces("bursty", 3, seed=0)
+    with pytest.raises(ValueError):
+        scenario_traces("full_moon", 4)
+
+
+# ---------------------------------------------------------------------------
+# JSONL persistence
+# ---------------------------------------------------------------------------
+
+
+def test_jsonl_roundtrip(tmp_path):
+    traces = [
+        AvailabilityTrace(windows=((10.0, 20.0),), period=50.0),
+        AvailabilityTrace(windows=((100.0, math.inf),)),
+        None,  # always-on clients serialize as ALWAYS_ON
+        AvailabilityTrace(windows=()),
+    ]
+    path = os.path.join(tmp_path, "fleet.jsonl")
+    save_jsonl(path, traces)
+    back = load_jsonl(path)
+    assert back[0] == traces[0]
+    assert back[1] == traces[1]
+    assert back[2] == ALWAYS_ON
+    assert back[3] == traces[3]
+    # the trace:<path> scenario replays the log; absent cids stay always-on
+    replay = scenario_traces(f"trace:{path}", 6)
+    assert replay[0] == traces[0] and replay[4] is None and replay[5] is None
+
+
+# ---------------------------------------------------------------------------
+# Attachment + utilization
+# ---------------------------------------------------------------------------
+
+
+def _clients(n):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(8, 3)).astype(np.float32)
+    y = rng.normal(size=(8,)).astype(np.float32)
+    return [SimClient(cid=i, stream=OnlineStream(x, y, seed=i),
+                      test_x=x[:2], test_y=y[:2],
+                      profile=DeviceProfile(base_delay=10.0))
+            for i in range(n)]
+
+
+def test_with_traces_and_utilization():
+    clients = _clients(3)
+    half = AvailabilityTrace(windows=((0.0, 50.0),), period=100.0)
+    out = with_traces(clients, [half, None, half])
+    assert out[0].profile.trace == half
+    assert out[1].profile.trace is None  # None leaves the profile untouched
+    # non-mutating: the input list keeps its original trace-free profiles
+    assert all(c.profile.trace is None for c in clients)
+    assert out[1] is clients[1] and out[0] is not clients[0]
+    # two clients at 0.5, one always-on -> mean 2/3
+    assert utilization(out, 1000.0) == pytest.approx(2.0 / 3.0)
+    assert utilization(out, 0.0) == 1.0
+    assert utilization([], 100.0) == 1.0
+    with pytest.raises(ValueError):
+        with_traces(clients, [half])  # too few traces
