@@ -1,0 +1,104 @@
+"""Nightly perf-regression guard for the cohort engine.
+
+Snapshots the checked-in ``BENCH_sim.json`` reference record (256-client
+always-on pipelined cohort by default), reruns just that slice of the
+smoke sweep — which overwrites ``BENCH_sim.json`` with fresh numbers —
+and fails (exit 1) when the rerun's iters/s drops more than
+``--tolerance`` (default 20%) below the checked-in record.  Run it
+*before* any other smoke invocation in a CI job: the baseline must be
+read from the committed file, not from a same-job rerun.
+
+    PYTHONPATH=src python -m benchmarks.perf_guard
+    PYTHONPATH=src python -m benchmarks.perf_guard --clients 256 --tolerance 0.2
+
+Exit codes: 0 = within tolerance, or no comparable baseline record yet
+(first run on a new bench schema — the self-arming path: commit the
+fresh ``BENCH_sim.json`` and the guard compares for real the next
+night); 1 = regression; 2 = the rerun itself produced no comparable
+record (bench breakage, never a perf verdict).
+
+Caveat: the floor compares a CI-runner rerun against a possibly
+different recording host.  20% catches real regressions on a stable
+runner; on noisy shared runners widen ``--tolerance`` in the workflow
+rather than chasing host-scheduling flakes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.sim_bench import OUT_PATH, bench_sim
+
+
+def _reference_record(payload: dict, clients: int) -> dict:
+    for rec in payload.get("records", []):
+        if (rec.get("clients") == clients and rec.get("mode") == "cohort"
+                and rec.get("scenario") == "always_on"):
+            return rec
+    return {}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=256,
+                    help="client count of the guarded record")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional iters/s drop vs the "
+                         "checked-in record (0.2 = 20%%)")
+    ap.add_argument("--window", type=int, default=32)
+    args = ap.parse_args()
+
+    try:
+        with open(OUT_PATH) as f:
+            baseline = _reference_record(json.load(f), args.clients)
+    except (OSError, json.JSONDecodeError):
+        baseline = {}
+    base_ips = baseline.get("iters_per_s")
+    if not base_ips:
+        print(f"perf_guard: no checked-in {args.clients}-client always-on "
+              "cohort record to guard against; running the sweep to mint "
+              "one", flush=True)
+    elif (baseline.get("window") not in (None, args.window)
+          or baseline.get("state_dtype") not in (None, "fp32")):
+        # an apples-to-oranges floor is worse than no floor: a bf16 or
+        # differently-windowed baseline would silently mis-calibrate the
+        # regression threshold in either direction
+        print(f"perf_guard: committed baseline is incomparable "
+              f"(window={baseline.get('window')} vs {args.window}, "
+              f"state_dtype={baseline.get('state_dtype')} vs fp32) — "
+              "commit a BENCH_sim.json minted with the guard's flags",
+              file=sys.stderr)
+        sys.exit(2)
+    else:
+        print(f"perf_guard: checked-in baseline {base_ips} iters/s "
+              f"(window={baseline.get('window')}, "
+              f"state_dtype={baseline.get('state_dtype')})", flush=True)
+
+    # only the guarded slice: one client count, no K=1024 memory pair,
+    # and a token per-arrival budget (the guard never reads that record)
+    bench_sim(counts=(args.clients,), baseline_iters=8,
+              window=args.window, mem_cohort=0)  # overwrites BENCH_sim.json
+
+    with open(OUT_PATH) as f:
+        fresh = _reference_record(json.load(f), args.clients)
+    new_ips = fresh.get("iters_per_s")
+    if new_ips is None:
+        print("perf_guard: rerun produced no comparable record",
+              file=sys.stderr)
+        sys.exit(2)
+    if not base_ips:
+        print(f"perf_guard: fresh record {new_ips} iters/s (no baseline "
+              "to compare — commit BENCH_sim.json to arm the guard)")
+        sys.exit(0)
+    floor = (1.0 - args.tolerance) * base_ips
+    verdict = "OK" if new_ips >= floor else "REGRESSION"
+    print(f"perf_guard: {verdict} — rerun {new_ips} iters/s vs baseline "
+          f"{base_ips} (floor {floor:.2f} at {args.tolerance:.0%} "
+          "tolerance)")
+    if new_ips < floor:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

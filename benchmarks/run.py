@@ -40,6 +40,16 @@ def main() -> None:
                          "an availability-trace scenario (diurnal|bursty|"
                          "churn|flash|trace:<path>); churn records land in "
                          "BENCH_sim.json next to the always-on sweep")
+    ap.add_argument("--window", type=int, default=32,
+                    help="with --smoke: async ticks fused per megastep "
+                         "dispatch in the cohort modes (1 = per-tick)")
+    ap.add_argument("--state-dtype", default=None,
+                    help="with --smoke: stacked client-state storage dtype "
+                         "(fp32 = full-copy master, bf16 = delta-"
+                         "compressed)")
+    ap.add_argument("--mem-cohort", type=int, default=1024,
+                    help="with --smoke: cohort size for the fp32-vs-bf16 "
+                         "stacked-state memory pair (0 disables)")
     args = ap.parse_args()
     quick = not args.full
     want = lambda s: args.only is None or args.only in s  # noqa: E731
@@ -60,7 +70,9 @@ def main() -> None:
     if args.smoke or (args.only and want("sim")):
         from benchmarks.sim_bench import bench_sim
 
-        for r in bench_sim(scenario=args.scenario):
+        for r in bench_sim(scenario=args.scenario, window=args.window,
+                           state_dtype=args.state_dtype,
+                           mem_cohort=args.mem_cohort):
             rows.append(r)
             print(_fmt(*r), flush=True)
         if args.smoke:  # smoke mode runs only the sim sweep

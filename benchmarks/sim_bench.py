@@ -1,22 +1,35 @@
 """Clients-vs-throughput sweep for the cohort simulation engine.
 
-Runs ASO-Fed at growing client counts, in three modes per count:
+Runs ASO-Fed at growing client counts, in four modes per count:
 
-* ``cohort``          — the pipelined engine (prefetch thread building the
-  next tick's staging buffers while the device executes the current one);
-* ``cohort_serial``   — same engine, prefetch off: build -> execute ->
-  build, fully serialized (isolates what the overlap buys);
+* ``cohort``          — the pipelined megastep engine (``--window`` ticks
+  fused per ``jit(lax.scan)`` dispatch; adaptive prefetch: the staging
+  thread overlaps building with device execution on accelerators and
+  >=4-core hosts, and stays off on smaller boxes where it would steal
+  cycles from XLA);
+* ``cohort_serial``   — same engine, prefetch pinned off: build ->
+  execute -> build, fully serialized (isolates what the overlap buys);
+* ``cohort_unfused``  — same engine, ``window=1``: one dispatch per tick
+  (isolates what the megastep fusion buys);
 * ``per_arrival``     — ``repro.sim.reference.run_asofed_reference``, the
   faithful port of the seed's one-jit-dispatch-per-arrival host loop
   (eager delta ops + a blocking host read per arrival), same scheduler.
 
 Each record carries the per-phase wall breakdown the engine measures —
 ``host_build_s`` (batch draw + staging fill + device transfer, wherever it
-ran), ``device_s`` (tick dispatch-to-completion), ``eval_s`` (batched
-predict + deferred metric extraction) — plus the prefetch flag, device
-count, and compiled-tick cache size, so the speedup from each tentpole
-piece is attributable.  In the prefetched mode ``host_build_s`` overlaps
-``device_s``; their sum exceeding wall time is the measured overlap.
+ran), ``device_s`` (dispatch-to-completion), ``eval_s`` (batched predict +
+deferred metric extraction) — plus the prefetch flag, device count,
+compiled-tick cache size, ``window``/``windows`` (fused ticks per dispatch
+/ dispatch count), ``state_dtype``, and the memory columns
+``stacked_state_bytes`` / ``peak_live_device_bytes``, so the speedup and
+footprint of each tentpole piece is attributable.  In the prefetched mode
+``host_build_s`` overlaps ``device_s``; their sum exceeding wall time is
+the measured overlap.
+
+A final memory pair at ``--mem-cohort`` clients (default 1024) runs the
+same config with fp32 full-copy state (the memory baseline) and with
+bf16 delta-compressed state (``ClientStateCodec``), recording both so the
+compression ratio rides in ``BENCH_sim.json``.
 
 Emits one ``name,us_per_call,derived`` row per (count, mode) and writes the
 full records to ``BENCH_sim.json`` at the repo root for the perf trajectory.
@@ -54,8 +67,12 @@ def _run(model, cfg_model, clients, cfg, mode: str) -> Dict:
     stats: Dict = {}
     t0 = time.perf_counter()
     if mode.startswith("cohort"):
+        # "cohort" rides the adaptive prefetch default (on where the
+        # overlap pays, off on <4-core hosts); serial pins it off
         run_strategy(get_strategy("asofed"), model, cfg_model, clients, cfg,
-                     stats=stats, prefetch=(mode == "cohort"))
+                     stats=stats,
+                     prefetch=False if mode == "cohort_serial" else None,
+                     window=1 if mode == "cohort_unfused" else None)
     else:  # the seed per-arrival loop
         run_asofed_reference(model, cfg_model, clients, cfg,
                              collect_trace=False, stats=stats)
@@ -64,9 +81,10 @@ def _run(model, cfg_model, clients, cfg, mode: str) -> Dict:
 
 
 _STAT_COLS = ("host_build_s", "device_s", "eval_s", "prefetch", "devices",
-              "tick_cache_size", "staleness_mean", "staleness_max",
-              "availability_utilization", "deferred_arrivals",
-              "retired_clients")
+              "window", "windows", "state_dtype", "stacked_state_bytes",
+              "peak_live_device_bytes", "tick_cache_size", "staleness_mean",
+              "staleness_max", "availability_utilization",
+              "deferred_arrivals", "retired_clients")
 
 
 def _record(K: int, mode: str, scenario: str, s: Dict) -> Dict:
@@ -88,15 +106,20 @@ def _record(K: int, mode: str, scenario: str, s: Dict) -> Dict:
 
 def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
               baseline_iters: int = 256,
-              scenario: str = None) -> List[Tuple[str, float, str]]:
-    """Smoke sweep: pipelined/serialized engine vs per-arrival dispatch.
+              scenario: str = None, window: int = 32,
+              state_dtype: str = None,
+              mem_cohort: int = 1024) -> List[Tuple[str, float, str]]:
+    """Smoke sweep: pipelined/serialized/unfused engine vs per-arrival.
 
     ``scenario`` (``diurnal`` / ``bursty`` / ``churn`` / ``flash`` /
     ``trace:<path>``) *adds* churn records on top of the always-on sweep:
     the pipelined engine re-runs with that availability-trace scenario
     attached, so BENCH_sim.json carries throughput under structured churn
     (availability-utilization / staleness / deferral columns) next to the
-    always-on record it must not regress.
+    always-on record it must not regress.  ``window``/``state_dtype``
+    configure the megastep fusion depth and the stacked-state storage
+    dtype of the engine modes; ``mem_cohort`` (0 disables) sizes the
+    final fp32-vs-bf16 memory pair.
     """
     from repro.sim.engine import RunConfig
     from repro.sim.traces import scenario_traces, with_traces
@@ -109,6 +132,7 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
     rows: List[Tuple[str, float, str]] = []
     records: List[Dict] = []
     speedup_at = {}
+    fusion_at = {}
     overlap_at = {}
     churn_at = {}
     for K in counts:
@@ -116,11 +140,13 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
         base = RunConfig(
             T=iters_per_client * K, batch_size=8, local_epochs=2, eta=0.02,
             lam=1.0, beta=0.001, task="regression", eval_every=50, seed=0,
+            window=window, state_dtype=state_dtype,
         )
         per_mode = {}
         for mode, T in (
             ("cohort", iters_per_client * K),
             ("cohort_serial", iters_per_client * K),
+            ("cohort_unfused", iters_per_client * K),
             ("per_arrival", min(baseline_iters, iters_per_client * K)),
         ):
             cfg = dataclasses.replace(base, T=T)
@@ -128,9 +154,17 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 # warmup populates the engine's shared compile cache (incl.
                 # the power-of-two tick buckets); the seed loop can't be
                 # warmed — it rebuilds its jits on every invocation, which
-                # is part of the cost the engine removes
+                # is part of the cost the engine removes.  Engine modes
+                # are cheap, so take the best of two measured runs — the
+                # mode comparisons would otherwise be dominated by host
+                # scheduling noise on small shared boxes
                 _run(model, cfg_model, mk(), cfg, mode)
-            s = _run(model, cfg_model, mk(), cfg, mode)
+                s = _run(model, cfg_model, mk(), cfg, mode)
+                s2 = _run(model, cfg_model, mk(), cfg, mode)
+                if s2["wall_time_s"] < s["wall_time_s"]:
+                    s = s2
+            else:
+                s = _run(model, cfg_model, mk(), cfg, mode)
             rec = _record(K, mode, "always_on", s)
             records.append(rec)
             per_mode[mode] = rec
@@ -160,39 +194,95 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
             per_mode["cohort"]["iters_per_s"]
             / max(per_mode["per_arrival"]["iters_per_s"], 1e-9), 2
         )
+        # what the megastep fusion buys, same host, same run: fused
+        # window dispatches vs one dispatch per tick
+        fusion_at[K] = round(
+            per_mode["cohort"]["iters_per_s"]
+            / max(per_mode["cohort_unfused"]["iters_per_s"], 1e-9), 2
+        )
         # overlap: host build time hidden behind device execution in the
         # prefetched run (phase sum minus wall, clamped at 0)
         c = per_mode["cohort"]
         overlap_at[K] = round(max(
             0.0, c.get("host_build_s", 0.0) + c.get("device_s", 0.0)
             + c.get("eval_s", 0.0) - c["wall_time_s"]), 4)
+    if mem_cohort:
+        # memory pair: fp32 full-copy stacked state (the baseline) vs
+        # bf16 delta-compressed, at a cohort size the fp32 engine still
+        # fits but a transformer-scale model would not
+        K = mem_cohort
+        cfg_model, model, mk = _build(K)
+        mem_cfg = RunConfig(
+            T=2 * K, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
+            beta=0.001, task="regression", eval_every=K, seed=0,
+            window=window,
+        )
+        memory_at = {}
+        for dt in ("fp32", "bf16"):
+            cfg = dataclasses.replace(mem_cfg, state_dtype=dt)
+            s = _run(model, cfg_model, mk(), cfg, "cohort")
+            rec = _record(K, "cohort", "always_on", s)
+            records.append(rec)
+            memory_at[dt] = rec
+            rows.append((
+                f"sim/cohort/{K}clients/state_{dt}",
+                s["wall_time_s"] / max(s["iters"], 1) * 1e6,
+                f"iters_per_s={rec['iters_per_s']};stacked_state_bytes="
+                f"{rec.get('stacked_state_bytes')};peak_live="
+                f"{rec.get('peak_live_device_bytes')}",
+            ))
     payload = {
         "benchmark": "cohort simulation engine throughput (asofed)",
         "metric": ("iters = global iterations (client arrivals folded); "
-                   "ticks = vmapped engine dispatches (== iters for the "
-                   "per-arrival seed loop).  Both modes evaluate every 50 "
-                   "iterations: the engine as one batched/padded predict "
-                   "with metric extraction deferred past the tick loop, "
-                   "the seed loop as K per-client round-trips.  The seed "
-                   "loop also re-jits per invocation — a cost the engine's "
-                   "shared compile cache removes.  Phase columns: "
-                   "host_build_s = minibatch draw + staging fill + device "
-                   "transfer (overlapped with device_s when prefetch is "
-                   "on); device_s = tick dispatch-to-completion; eval_s = "
-                   "eval dispatch + deferred metric extraction.  "
+                   "ticks = scheduler ticks executed; windows = fused "
+                   "megastep dispatches (window = ticks fused per "
+                   "jit(lax.scan) dispatch; ticks == windows == iters for "
+                   "the per-arrival seed loop).  All modes evaluate every "
+                   "50 iterations: the engine as one batched/padded "
+                   "predict with metric extraction deferred past the tick "
+                   "loop (landing on window boundaries), the seed loop as "
+                   "K per-client round-trips.  The seed loop also re-jits "
+                   "per invocation — a cost the engine's shared compile "
+                   "cache removes.  Phase columns: host_build_s = "
+                   "minibatch draw + staging fill + device transfer "
+                   "(overlapped with device_s when prefetch is on); "
+                   "device_s = dispatch-to-completion; eval_s = eval "
+                   "dispatch + deferred metric extraction.  "
                    "prefetch_overlap_s = host work hidden behind device "
                    "execution (phase sum - wall, per client count).  "
-                   "Churn columns (scenario != always_on): "
-                   "availability_utilization = fleet mean on-fraction over "
-                   "the simulated horizon; staleness_mean/max = global "
-                   "iterations since each arriving client's previous fold; "
-                   "deferred_arrivals = off-window completions pushed to "
-                   "the next on-window edge; retired_clients = one-shot "
-                   "traces exhausted."),
+                   "Timing methodology: engine (cohort*) modes report the "
+                   "best of two measured runs (scheduling noise on small "
+                   "shared hosts); per_arrival is single-run — it "
+                   "dominates sweep cost — so cross-mode speedups carry "
+                   "its noise.  "
+                   "speedup_megastep = cohort vs cohort_unfused (window=1) "
+                   "on the same host.  Memory columns: "
+                   "stacked_state_bytes = the stacked per-client state "
+                   "pytree (state_dtype bf16 stores parameter slots as "
+                   "delta-compressed reduced-precision rows); "
+                   "peak_live_device_bytes = max sampled bytes of live "
+                   "jax arrays, process-wide.  Churn columns (scenario != "
+                   "always_on): availability_utilization = fleet mean "
+                   "on-fraction over the simulated horizon; "
+                   "staleness_mean/max = global iterations since each "
+                   "arriving client's previous fold; deferred_arrivals = "
+                   "off-window completions pushed to the next on-window "
+                   "edge; retired_clients = one-shot traces exhausted."),
         "records": records,
         "speedup_cohort_vs_per_arrival": speedup_at,
+        "speedup_megastep": fusion_at,
         "prefetch_overlap_s": overlap_at,
     }
+    if mem_cohort:
+        payload["memory_cohort"] = mem_cohort
+        payload["memory_baseline_vs_delta"] = {
+            dt: {
+                "iters_per_s": rec["iters_per_s"],
+                "stacked_state_bytes": rec.get("stacked_state_bytes"),
+                "peak_live_device_bytes": rec.get("peak_live_device_bytes"),
+            }
+            for dt, rec in memory_at.items()
+        }
     if churn_at:
         payload["churn_scenario"] = scenario
         payload["churn_vs_always_on"] = {

@@ -41,6 +41,17 @@ def save_checkpoint(path: str, params, step: int = 0, extra: Optional[dict] = No
         json.dump(manifest, f, indent=2)
 
 
+def _named_dtype(name: str) -> np.dtype:
+    """np.dtype from a manifest name, resolving ml_dtypes extension types
+    (bfloat16 etc.) that plain ``np.dtype(str)`` does not know."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def load_checkpoint(path: str, like, shardings=None):
     """Restore into the structure of ``like`` (a params pytree or spec)."""
     with open(os.path.join(path, "manifest.json")) as f:
@@ -53,6 +64,11 @@ def load_checkpoint(path: str, like, shardings=None):
             f"checkpoint structure mismatch: {set(saved_keys) ^ set(keys)}"
         )
     vals = [data[f"arr_{i}"] for i in range(len(keys))]
+    # .npy round-trips extension dtypes (ml_dtypes bfloat16: the
+    # delta-compressed client-state codec) as raw void bytes; the manifest
+    # records the true dtype — view the bits back, exactly
+    vals = [v if str(v.dtype) == dt else v.view(_named_dtype(dt))
+            for v, dt in zip(vals, manifest["dtypes"])]
     if shardings is not None:
         sh_leaves = jax.tree.leaves(shardings)
         vals = [jax.device_put(v, s) for v, s in zip(vals, sh_leaves)]

@@ -33,3 +33,25 @@ FP32 = Policy(param_dtype=jnp.float32, compute_dtype=jnp.float32)
 
 def bytes_of(dtype) -> int:
     return jnp.dtype(dtype).itemsize
+
+
+# Storage dtypes accepted for the delta-compressed stacked client state
+# (``RunConfig.state_dtype`` / the bench ``--state-dtype`` flag).  fp32 is
+# the identity codec: master precision stored directly, bitwise-replayable.
+STATE_DTYPES = {
+    "fp32": jnp.float32, "f32": jnp.float32, "float32": jnp.float32,
+    "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+    "fp16": jnp.float16, "f16": jnp.float16, "float16": jnp.float16,
+}
+
+
+def resolve_state_dtype(name):
+    """Map a ``state_dtype`` config string to a jnp dtype (None -> None)."""
+    if name is None:
+        return None
+    key = str(name).lower()
+    if key not in STATE_DTYPES:
+        raise ValueError(
+            f"unknown state dtype {name!r}; expected one of "
+            f"{sorted(STATE_DTYPES)}")
+    return STATE_DTYPES[key]

@@ -269,6 +269,24 @@ def client_sharding(shape: Sequence[int], mesh: Optional[Mesh],
     return rules.sharding_for_shape(shape, axes, mesh)
 
 
+def window_sharding(shape: Sequence[int], mesh: Optional[Mesh],
+                    rules: ShardingRules = COHORT) -> Optional[NamedSharding]:
+    """Sharding for a megastep window block ``[T, bucket, ...]``.
+
+    The leading window axis is a *time* axis (the fused ticks execute
+    sequentially inside one ``lax.scan``) so it stays replicated; axis 1
+    is the per-tick client/cohort axis and shards over the data mesh
+    exactly as :func:`client_sharding` does for a single tick.  The scan
+    slices axis 0 away, handing each step a tick whose sharding matches
+    the unfused path.  Non-divisible cohort buckets replicate, as in
+    :func:`client_sharding`.
+    """
+    if mesh is None:
+        return None
+    axes = (None, "clients") + (None,) * (len(shape) - 2)
+    return rules.sharding_for_shape(shape, axes, mesh)
+
+
 def replicated(mesh: Optional[Mesh]) -> Optional[NamedSharding]:
     """Fully-replicated NamedSharding on ``mesh`` (None when no mesh)."""
     if mesh is None:

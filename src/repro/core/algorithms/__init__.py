@@ -9,6 +9,7 @@ from __future__ import annotations
 from typing import Dict, Type
 
 from repro.core.algorithms.asofed import AsoFedStrategy
+from repro.core.algorithms.common import ClientStateCodec
 from repro.core.algorithms.fedasync import FedAsyncStrategy
 from repro.core.algorithms.fedavg import FedAvgStrategy, FedProxStrategy
 from repro.core.algorithms.local_global import GlobalStrategy, LocalStrategy
@@ -32,6 +33,7 @@ __all__ = [
     "Strategy",
     "STRATEGIES",
     "get_strategy",
+    "ClientStateCodec",
     "AsoFedStrategy",
     "FedAvgStrategy",
     "FedProxStrategy",

@@ -13,9 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import tree_axpy, tree_sub
+from repro.common.dtypes import resolve_state_dtype
+from repro.common.pytree import tree_axpy, tree_sub, tree_zeros_like
 from repro.core import client as client_lib
-from repro.core.algorithms.common import avg_surrogate_grad
+from repro.core.algorithms.common import (ClientStateCodec, avg_surrogate_grad,
+                                          bool_tree)
 from repro.core.feature_learning import apply_feature_learning
 from repro.sim.engine import Strategy
 
@@ -31,6 +33,28 @@ class AsoFedStrategy(Strategy):
     def build_init_client(self, model, cfg):
         # batched stacked init: one vmapped jit instead of K+1 eager calls
         return lambda w0, n0: client_lib.init_client_state(w0, n0)
+
+    def state_codec(self, model, cfg, w0):
+        # delta-compressed stacked state: params/server_params stored as
+        # reduced-dtype deltas from w0 (constant over the run, so encode
+        # and decode share one anchor), h/v as plain reduced casts (zero
+        # anchor); the delay/round/sample scalars pass through in fp32 —
+        # reduced mantissas would corrupt their integer-valued counting
+        dt = resolve_state_dtype(cfg.state_dtype)
+        if dt is None or dt == jnp.float32:
+            return None  # identity: master fp32 stored directly (bitwise)
+        z = tree_zeros_like(w0)
+        s0 = jnp.zeros((), jnp.float32)
+        anchor = client_lib.ClientState(
+            params=w0, server_params=w0, h=z, v=z,
+            delay_sum=s0, rounds=s0, n_samples=s0,
+        )
+        mask = client_lib.ClientState(
+            params=bool_tree(w0, True), server_params=bool_tree(w0, True),
+            h=bool_tree(z, True), v=bool_tree(z, True),
+            delay_sum=False, rounds=False, n_samples=False,
+        )
+        return ClientStateCodec(dtype=dt, anchor=anchor, mask=mask)
 
     def init_server(self, model, cfg_model, cfg, w0, clients, active):
         # per-client online sample counts n'_k, indexed by cid; one extra

@@ -10,7 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.algorithms.common import sgd_epochs
+from repro.common.dtypes import resolve_state_dtype
+from repro.core.algorithms.common import (ClientStateCodec, bool_tree,
+                                          sgd_epochs)
 from repro.sim.engine import Strategy
 
 
@@ -24,6 +26,18 @@ class FedAsyncStrategy(Strategy):
     def build_init_client(self, model, cfg):
         # batched stacked init: one vmapped jit instead of K+1 eager calls
         return lambda w0, n0: {"w": w0, "version": jnp.zeros((), jnp.float32)}
+
+    def state_codec(self, model, cfg, w0):
+        # stale model copies stored as reduced-dtype deltas from w0; the
+        # version counter passes through fp32 (it counts global iters)
+        dt = resolve_state_dtype(cfg.state_dtype)
+        if dt is None or dt == jnp.float32:
+            return None  # identity: master fp32 stored directly (bitwise)
+        return ClientStateCodec(
+            dtype=dt,
+            anchor={"w": w0, "version": jnp.zeros((), jnp.float32)},
+            mask={"w": bool_tree(w0, True), "version": False},
+        )
 
     def init_server(self, model, cfg_model, cfg, w0, clients, active):
         return {"w": w0}

@@ -14,21 +14,37 @@ pending arrivals with pairwise-distinct clients (capped at ``max_cohort``):
 3. evaluation is one batched/padded predict over all clients instead of
    K separate device round-trips.
 
-The tick loop is **pipelined and device-resident**: host batch building
-runs on a prefetch thread (``repro.sim.prefetch``) that fills pre-allocated
-per-bucket staging buffers and transfers them while the previous tick
-executes, the stacked client state lives on device between ticks (donated
-on accelerators), and on a multi-device ``data`` mesh the client axis of
-the stacked state, the cohort inputs, and the batched eval are sharded
-with the ``repro.common.sharding`` cohort rules (single device degrades to
-the plain path).  Evaluation metric extraction is deferred to the end of
-the run so eval dispatches never serialize the tick loop.
+The tick loop is **pipelined, device-resident, and windowed**: the async
+engine fuses a *window* of ``RunConfig.window`` consecutive ticks into one
+**megastep** — a single ``jit(lax.scan(tick))`` dispatch over a stacked
+``[T_w, bucket, ...]`` staging block — eliminating T−1 of every T
+dispatches, host→device transfers, and ``block_until_ready`` syncs.  Host
+batch building runs on a prefetch thread (``repro.sim.prefetch``) that
+fills pre-allocated per-bucket staging buffers (speculating via
+``AsyncScheduler.peek_window``/``commit``) and transfers them while the
+previous window executes, the stacked client state lives on device between
+windows (donated on accelerators), and on a multi-device ``data`` mesh the
+client axis of the stacked state, the cohort inputs (window axis
+replicated), and the batched eval are sharded with the
+``repro.common.sharding`` cohort rules (single device degrades to the
+plain path).  Evaluation metric extraction is deferred to the end of the
+run so eval dispatches never serialize the tick loop; with ``window > 1``
+evals (and ``trace`` samples) land on window boundaries — a coarser
+cadence, documented in the README.
+
+Per-client-state strategies can additionally store the stacked state
+**delta-compressed** (``RunConfig.state_dtype``): parameter-like slots are
+kept as ``w_k − w0`` in a reduced dtype behind a
+:class:`repro.core.algorithms.common.ClientStateCodec` and reconstructed
+inside the vmapped local round, roughly halving stacked-state memory at
+bf16.  The fp32 codec is the identity (bitwise master precision).
 
 Because the scheduler draws every delay/skip at pop time, the arrival
-stream is invariant to how it is chunked into ticks AND to whether the
-next tick is built speculatively: the engine at any ``max_cohort``
-(including 1), with prefetch on or off, replays the same trajectory within
-fp32 tolerance — the property the equivalence tests pin down.
+stream is invariant to how it is chunked into ticks AND windows, and to
+whether the next window is built speculatively: the engine at any
+``max_cohort`` (including 1) and any ``window``, with prefetch on or off,
+replays the same trajectory (bit-for-bit across window sizes for the fp32
+codec) — the property the equivalence tests pin down.
 
 Algorithms plug in as :class:`Strategy` objects (see
 ``repro.core.algorithms``) supplying only the local-update and
@@ -38,6 +54,7 @@ compiled once per (model, config) rather than once per runner.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import weakref
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -47,10 +64,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.common import dtypes as dtypes_lib
 from repro.common import sharding as sharding_lib
 from repro.common.compat import shard_map
 from repro.common.pytree import tree_stack, tree_take, tree_scatter, tree_where
-from repro.sim.prefetch import TickBuilder, TickPrefetcher
+from repro.sim.prefetch import TickBuilder, TickPrefetcher, bucket_size
 from repro.sim.profiles import SimClient
 from repro.sim.scheduler import AsyncScheduler, SyncScheduler, SweepScheduler
 from repro.sim.streaming import OnlineStream
@@ -89,7 +107,18 @@ class RunConfig:
     fedasync_staleness_exp: float = 0.5
     # engine
     max_cohort: Optional[int] = None  # cap on clients per tick (None: all)
-    prefetch: Optional[bool] = None  # build ticks on a side thread (None: on)
+    # build ticks on a side thread (None: adaptive — on for accelerators
+    # and >=4-core CPU hosts, off on smaller boxes where the builder
+    # thread would steal cycles from XLA; bit-identical either way)
+    prefetch: Optional[bool] = None
+    # megastep: fuse `window` consecutive async ticks into one
+    # jit(lax.scan) dispatch (1 = per-tick dispatch; evals/trace samples
+    # land on window boundaries).  `state_dtype` selects the storage dtype
+    # of the delta-compressed stacked client state for strategies with a
+    # ClientStateCodec ("fp32"/None = identity, bitwise; "bf16" halves
+    # stacked-state memory, tolerance-equal trajectories).
+    window: int = 1
+    state_dtype: Optional[str] = None
     # feature pass lowering: None = auto (Pallas kernel above the ops.py
     # size threshold on TPU, jnp otherwise); True/False force it.  The
     # interpret flag runs the kernel through the Pallas interpreter — the
@@ -148,6 +177,13 @@ class Strategy:
                     clients: Sequence[SimClient],
                     active: Sequence[SimClient]):
         return {}
+
+    def state_codec(self, model, cfg: RunConfig, w0):
+        """Optional ``ClientStateCodec`` for the stacked client state
+        (``repro.core.algorithms.common``).  None (the default, and the
+        required answer for ``state_dtype in (None, "fp32")``) stores the
+        fp32 master state directly — the bitwise-replayable path."""
+        return None
 
     # -- traceable pieces ------------------------------------------------
     def build_local(self, model, cfg: RunConfig):
@@ -236,8 +272,11 @@ def _mask_select(mask, new, old):
     )
 
 
-def _build_tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig,
-                   mesh: Optional[Mesh]):
+def _tick_body(strategy: Strategy, model, cfg_model, cfg: RunConfig,
+               mesh: Optional[Mesh], codec):
+    """The traceable one-tick update ``(stacked, server, *inputs) ->
+    (stacked, server)`` — jitted standalone for sync/sweep schedules,
+    scanned over a window axis by the async megastep."""
     local = strategy.build_local(model, cfg)
     fold = strategy.build_fold(model, cfg_model, cfg)
     merge = strategy.build_merge(model, cfg)
@@ -245,7 +284,11 @@ def _build_tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig,
     vlocal = jax.vmap(local, in_axes=(0, None, 0, 0, 0, 0, 0))
 
     def tick(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
-        cohort0 = tree_take(stacked, idx)
+        enc0 = tree_take(stacked, idx)
+        # the stacked state may be delta-compressed: reconstruct the
+        # cohort's working (master-dtype) state right at the gather —
+        # identity (and fused away) for the fp32 codec
+        cohort0 = enc0 if codec is None else codec.decode(enc0)
         bcast = strategy.server_broadcast(server)
         # the vmapped local rounds are embarrassingly parallel over the
         # cohort axis: on a mesh, run them as explicit SPMD shards (the
@@ -283,16 +326,49 @@ def _build_tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig,
         if finalize is not None:
             server = finalize(server)
         # masked write-back: padded slots target the scratch row and revert
-        # to their pre-tick values, so real rows are written exactly once
-        stacked = tree_scatter(stacked, idx, _mask_select(mask, cohort, cohort0))
+        # to their pre-tick (still-encoded) values, so real rows are
+        # written exactly once
+        enc = cohort if codec is None else codec.encode(cohort)
+        stacked = tree_scatter(stacked, idx, _mask_select(mask, enc, enc0))
         return stacked, server
 
-    # donate the carried state so XLA reuses its buffers for the outputs
-    # (the per-tick input arrays can't alias either output shape, so
-    # donating them would only produce unusable-donation warnings);
-    # no-op on CPU, where donation is unsupported
-    donate = (0, 1) if jax.default_backend() != "cpu" else ()
-    return jax.jit(tick, donate_argnums=donate)
+    return tick
+
+
+# donate the carried state so XLA reuses its buffers for the outputs
+# (the per-tick/window input arrays can't alias either output shape, so
+# donating them would only produce unusable-donation warnings); no-op on
+# CPU, where donation is unsupported
+def _donate():
+    return (0, 1) if jax.default_backend() != "cpu" else ()
+
+
+def _build_tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig,
+                   mesh: Optional[Mesh], codec=None):
+    return jax.jit(_tick_body(strategy, model, cfg_model, cfg, mesh, codec),
+                   donate_argnums=_donate())
+
+
+def _build_megastep_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig,
+                       mesh: Optional[Mesh], codec=None):
+    """One fused dispatch per window: ``lax.scan`` of the tick body over
+    the leading ``[T_w]`` axis of the staged window block.  Tick ``j+1``'s
+    gather reads the rows tick ``j`` scattered (the scan carry), so a
+    client arriving twice in one window sees the mid-window server folds
+    exactly as it would across two separate dispatches — fully-masked
+    padding ticks leave both carries untouched."""
+    tick = _tick_body(strategy, model, cfg_model, cfg, mesh, codec)
+
+    def megastep(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
+        def step(carry, inp):
+            return tick(*carry, *inp), None
+
+        (stacked, server), _ = jax.lax.scan(
+            step, (stacked, server), (idx, xs, ys, delays, n_vis, t_arr, mask)
+        )
+        return stacked, server
+
+    return jax.jit(megastep, donate_argnums=_donate())
 
 
 def _cache_get(cache, key, anchors):
@@ -310,27 +386,33 @@ def _cache_put(cache, key, anchors, value):
 
 def _cfg_cache_key(cfg: RunConfig) -> Tuple:
     """Runtime-only fields don't affect the traced computation: normalize
-    them out so e.g. benchmark sweeps over T (or prefetch toggles) reuse
-    one compilation."""
+    them out so e.g. benchmark sweeps over T (or prefetch/window toggles)
+    reuse one compilation.  ``state_dtype`` stays in the key — the codec
+    changes the traced encode/decode ops."""
     return dataclasses.astuple(dataclasses.replace(
         cfg, T=0, sim_time_budget=None, eval_every=0, seed=0,
-        max_cohort=None, prefetch=None,
+        max_cohort=None, prefetch=None, window=1,
     ))
 
 
 def _tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig, K: int,
-             mesh: Optional[Mesh]):
+             mesh: Optional[Mesh], *, windowed: bool = False, codec=None):
     # key by device ids, not just mesh shape: the compiled fn closes over
     # the concrete Mesh, and two same-shape meshes over different devices
-    # must not share it
+    # must not share it.  A non-identity codec additionally closes over
+    # its anchor w0 = model.init(PRNGKey(cfg.seed)) — seed-dependent, so
+    # the seed (normalized out of the cfg key) must re-enter the key or a
+    # second seed's run would decode against the first seed's anchor.
     mesh_key = (tuple(mesh.shape.items()),
                 tuple(d.id for d in mesh.devices.flat)) \
         if mesh is not None else None
+    codec_key = cfg.seed if codec is not None and not codec.identity else None
     key = (id(model), id(cfg_model), type(strategy).__name__, strategy.name,
-           _cfg_cache_key(cfg), K, mesh_key)
+           _cfg_cache_key(cfg), K, mesh_key, windowed, codec_key)
     fn = _cache_get(_TICK_CACHE, key, (model, cfg_model))
     if fn is None:
-        fn = _build_tick_fn(strategy, model, cfg_model, cfg, mesh)
+        build = _build_megastep_fn if windowed else _build_tick_fn
+        fn = build(strategy, model, cfg_model, cfg, mesh, codec)
         _cache_put(_TICK_CACHE, key, (model, cfg_model), fn)
     return fn
 
@@ -412,6 +494,16 @@ class _Evaluator:
 # ---------------------------------------------------------------------------
 
 
+def _live_device_bytes() -> int:
+    """Total bytes of live jax arrays (process-wide) — the memory column
+    sampled around dispatches for ``stats["peak_live_device_bytes"]``.
+    Best-effort: 0 when the runtime can't enumerate live buffers."""
+    try:
+        return sum(int(getattr(a, "nbytes", 0)) for a in jax.live_arrays())
+    except Exception:  # noqa: BLE001 — observability must never kill a run
+        return 0
+
+
 def run_strategy(
     strategy: Strategy,
     model,
@@ -423,19 +515,26 @@ def run_strategy(
     trace: Optional[List] = None,
     stats: Optional[Dict] = None,
     prefetch: Optional[bool] = None,
+    window: Optional[int] = None,
     mesh: Union[str, None, Mesh] = "auto",
 ) -> List[HistoryPoint]:
     """Run one algorithm through the cohort engine.
 
     ``max_cohort`` caps the clients per tick (1 reproduces the per-arrival
-    dispatch pattern; None batches every pending arrival).  ``trace``, when
-    a list, receives ``(t, eval-params-as-numpy)`` after every tick — the
-    hook the equivalence tests use.  ``stats``, when a dict, is filled with
-    ``{"ticks", "iters", "sim_time"}`` counters plus the per-phase wall
-    breakdown ``{"host_build_s", "device_s", "eval_s"}`` and the
-    ``{"prefetch", "devices", "tick_cache_size"}`` run descriptors
+    dispatch pattern; None batches every pending arrival).  ``window``
+    overrides ``cfg.window``: the number of consecutive async ticks fused
+    into one megastep dispatch (``jit(lax.scan(tick))`` over a stacked
+    window block); evals and ``trace`` samples land on window boundaries.
+    ``trace``, when a list, receives ``(t, eval-params-as-numpy)`` after
+    every dispatch — the hook the equivalence tests use.  ``stats``, when
+    a dict, is filled with ``{"ticks", "windows", "iters", "sim_time"}``
+    counters plus the per-phase wall breakdown ``{"host_build_s",
+    "device_s", "eval_s"}``, the ``{"prefetch", "devices", "window",
+    "state_dtype", "tick_cache_size"}`` run descriptors, and the
+    ``{"stacked_state_bytes", "peak_live_device_bytes"}`` memory columns
     (benchmark hooks).  ``prefetch`` overrides ``cfg.prefetch`` (None →
-    on for async schedules).  ``mesh="auto"`` shards the client axis over
+    adaptive: on for accelerators and >=4-core hosts).  ``mesh="auto"``
+    shards the client axis over
     every local device (``repro.common.sharding.data_mesh``); pass None to
     force the single-device path or an explicit 1-D ``data`` Mesh.
     """
@@ -453,7 +552,12 @@ def run_strategy(
         mesh = sharding_lib.data_mesh()
     E, B = cfg.local_epochs, cfg.batch_size
     max_cohort = max_cohort if max_cohort is not None else cfg.max_cohort
+    W = max(1, int(window if window is not None else cfg.window))
+    # validate up front even for codec-less strategies: a typo'd dtype
+    # must raise, not ride silently into the stats/BENCH columns
+    dtypes_lib.resolve_state_dtype(cfg.state_dtype)
     w0 = model.init(jax.random.PRNGKey(cfg.seed))
+    codec = strategy.state_codec(model, cfg, w0)
     drop = cfg.dropout_frac if strategy.uses_dropout else 0.0
     skip = cfg.periodic_dropout if strategy.uses_dropout else 0.0
 
@@ -498,12 +602,16 @@ def run_strategy(
         states += [strategy.init_client(model, cfg, w0, members[0])
                    ] * (n_rows - n_members)
         stacked = tree_stack(states)
+    if codec is not None:
+        stacked = codec.encode(stacked)  # one-time: state lives compressed
     server = strategy.init_server(model, cfg_model, cfg, w0, clients, active)
     if mesh is not None:
         stacked = jax.device_put(stacked, jax.tree.map(
             lambda x: sharding_lib.client_sharding(x.shape, mesh), stacked))
         server = jax.device_put(server, sharding_lib.replicated(mesh))
-    tick_fn = _tick_fn(strategy, model, cfg_model, cfg, K, mesh)
+    windowed = strategy.schedule == "async"
+    tick_fn = _tick_fn(strategy, model, cfg_model, cfg, K, mesh,
+                       windowed=windowed, codec=codec)
     evaluator = _Evaluator(model, clients, cfg.task, strategy.eval_per_client)
     by_id = {c.cid: c for c in clients}
 
@@ -511,20 +619,31 @@ def run_strategy(
         sh = sharding_lib.client_sharding(arr.shape, mesh)
         return jnp.asarray(arr) if sh is None else jax.device_put(arr, sh)
 
+    def window_transfer(name, arr):
+        sh = sharding_lib.window_sharding(arr.shape, mesh)
+        return jnp.asarray(arr) if sh is None else jax.device_put(arr, sh)
+
     builder = TickBuilder(
         by_id=by_id, batch_size=B, local_epochs=E, scratch=scratch, pad=pad,
         pooled=strategy.pooled, transfer=transfer,
+        window_transfer=window_transfer,
     )
+    stacked_state_bytes = sum(
+        int(x.size) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(stacked))
+    peak_live = _live_device_bytes()
 
     history: List[HistoryPoint] = []
     pending_evals: List[Tuple[int, float, float, Any]] = []
     device_s = 0.0
     eval_s = 0.0
-    n_ticks, t, sim_time = 0, 0, 0.0
+    n_ticks, n_windows, t, sim_time = 0, 0, 0, 0.0
     t0 = time.perf_counter()
 
     def eval_params():
         members_view = jax.tree.map(lambda x: x[:n_members], stacked)
+        if codec is not None and (strategy.eval_per_client or strategy.pooled):
+            members_view = codec.decode(members_view)
         return strategy.eval_params(server, members_view)
 
     def record(t: int, sim_time: float):
@@ -535,12 +654,15 @@ def run_strategy(
         eval_s += time.perf_counter() - e0
 
     def dispatch(pt):
-        nonlocal stacked, server, device_s, n_ticks
+        nonlocal stacked, server, device_s, n_ticks, n_windows, peak_live
         d0 = time.perf_counter()
         stacked, server = tick_fn(stacked, server, *pt.arrays)
         jax.block_until_ready((stacked, server))
         device_s += time.perf_counter() - d0
-        n_ticks += 1
+        n_ticks += pt.n_ticks
+        n_windows += 1
+        if n_windows <= 2:  # steady-state live-set snapshot, off the hot path
+            peak_live = max(peak_live, _live_device_bytes())
 
     use_prefetch = False
     if strategy.schedule == "async":
@@ -549,30 +671,82 @@ def run_strategy(
         # are never folded in (FedAsync mixes at full weight, without the
         # n_vis/N guard ASO-Fed has)
         trainable = {c.cid for c in active if c.stream.n > 0}
+        # adaptive default: the prefetch thread overlaps host batch
+        # building with device execution, which is a pure win on
+        # accelerators and multi-core hosts — but on <4-core CPU boxes
+        # the builder steals cycles from XLA itself and the "overlap" is
+        # negative-sum.  Trajectories are bit-identical either way (the
+        # speculation contract), so the default is free to choose.
+        try:  # affinity respects container/cgroup CPU limits; cpu_count
+            ncpu = len(os.sched_getaffinity(0))  # does not
+        except AttributeError:
+            ncpu = os.cpu_count() or 1
         use_prefetch = (prefetch if prefetch is not None
                         else cfg.prefetch if cfg.prefetch is not None
-                        else True)
+                        else jax.default_backend() != "cpu" or ncpu >= 4)
 
         def produce():
-            """Pop + filter + build each tick (worker thread when
+            """Pop + filter + build each window (worker thread when
             prefetching).  Mirrors the consuming loop's termination logic
             exactly, so at most the single in-flight speculative peek is
-            ever un-committed."""
+            ever un-committed.  ``total_limit`` caps *popped* arrivals at
+            the remaining iteration budget — for W == 1 this is exactly
+            the old per-tick ``peek_tick(min(pad, T - tp))`` stream.
+
+            A window is split into maximal runs of *same-bucket* ticks
+            (one fused ``lax.scan`` block per run): a tick must execute
+            at exactly the shape bucket it would ride at W == 1, because
+            XLA's lowering is shape-dependent and inflating a small tick
+            to a larger bucket would break the window-on/off bitwise
+            replay.  In the steady state arrivals-per-tick is stable, so
+            runs span whole windows; bucket switches (the first
+            full-cohort tick, the drained tail, churn) cost one extra
+            dispatch each — never a wrong bit.
+            """
             tp = 0
+            # the iteration budget advances per *fold*: charge it only
+            # for trainable arrivals, so every in-window tick limit
+            # equals the one a window=1 producer would compute (dropped
+            # empty-split clients must not perturb tick membership)
+            kept_count = lambda tk: sum(  # noqa: E731
+                a.cid in trainable for a in tk)
             while tp < cfg.T:
-                arrivals = sched.peek_tick(min(pad, cfg.T - tp))
-                if not arrivals:
+                ticks = sched.peek_window(W, pad, total_limit=cfg.T - tp,
+                                          count=kept_count)
+                if not ticks:
                     sched.commit()
                     break  # drained or over the simulated-time budget
-                kept = [a for a in arrivals if a.cid in trainable]
+                kept = [[a for a in tk if a.cid in trainable] for tk in ticks]
+                kept = [tk for tk in kept if tk]
                 if not kept:
                     sched.commit()
-                    continue  # tick held only empty-split clients
-                pt = builder.build(kept, range(tp, tp + len(kept)),
-                                   kept[-1].time)
+                    continue  # window held only empty-split clients
                 sched.commit()
-                tp += len(kept)
-                yield pt
+                groups: List[Tuple[int, List]] = []
+                for tk in kept:
+                    b = bucket_size(len(tk), pad)
+                    if groups and groups[-1][0] == b:
+                        groups[-1][1].append(tk)
+                    else:
+                        groups.append((b, [tk]))
+                # each same-bucket run is split greedily into exact
+                # power-of-two chunks (8+2 instead of 16 with 6 masked
+                # ticks): a fully-masked padding tick costs a whole
+                # bucket's compute, an extra dispatch costs microseconds.
+                # Blocks are built only as the queue drains: the staging
+                # slots rotate over NSLOTS buffers, so at most (consumer's
+                # current + queued + being-built) blocks are in flight.
+                for _, g in groups:
+                    i = 0
+                    while i < len(g):
+                        n = 1 << ((len(g) - i).bit_length() - 1)
+                        chunk = g[i:i + n]
+                        i += n
+                        pt = builder.build_window(
+                            chunk, t_start=tp, window=W,
+                            sim_time=chunk[-1][-1].time)
+                        tp = pt.t_end
+                        yield pt
 
         if not trainable:
             source = iter(())
@@ -600,9 +774,16 @@ def run_strategy(
             if (strategy.schedule == "sync" and cfg.sim_time_budget
                     and sim_time > cfg.sim_time_budget):
                 break
-            arrivals, round_time = sched.next_round()
+            arrivals, round_time = sched.next_round(now=sim_time)
             if not arrivals:
-                continue  # every participant skipped this round
+                if strategy.schedule == "sync":
+                    if not np.isfinite(round_time):
+                        break  # fleet retired: no trace ever rejoins
+                    # every participant skipped (round_time 0), or the
+                    # whole fleet is off-window: the barrier still waits
+                    # out the gap to the earliest rejoin edge
+                    sim_time += round_time
+                continue
             pooled = (strategy.pooled_batches(clients, t, cfg)
                       if strategy.pooled else None)
             if strategy.pooled:
@@ -621,13 +802,20 @@ def run_strategy(
     for (te, ste, we, preds) in pending_evals:
         history.append(HistoryPoint(te, ste, we, evaluator.metrics_from(preds)))
     eval_s += time.perf_counter() - e0
+    peak_live = max(peak_live, _live_device_bytes())
     if stats is not None:
         stats.update(
-            ticks=n_ticks, iters=t, sim_time=sim_time,
+            ticks=n_ticks, windows=n_windows, iters=t, sim_time=sim_time,
             host_build_s=round(builder.host_build_s, 6),
             device_s=round(device_s, 6), eval_s=round(eval_s, 6),
             prefetch=bool(use_prefetch),
             devices=int(mesh.devices.size) if mesh is not None else 1,
+            window=W if strategy.schedule == "async" else 1,
+            # "fp32" whenever no codec ran: a codec-less strategy stores
+            # full-precision state regardless of what the config asked for
+            state_dtype=str(cfg.state_dtype) if codec is not None else "fp32",
+            stacked_state_bytes=int(stacked_state_bytes),
+            peak_live_device_bytes=int(peak_live),
             # churn observability: per-arrival staleness (iterations since
             # the client's previous fold) and the fleet's mean on-fraction
             # over the simulated horizon, plus the scheduler's deferral /

@@ -21,6 +21,12 @@ module makes that work overlappable and allocation-free:
   thread, and the producer uses ``AsyncScheduler.peek_tick``/``commit`` so
   speculation never perturbs the event stream — prefetch on/off replays
   bit-identical trajectories.
+* ``TickBuilder.build_window`` stacks a whole *window* of ticks into one
+  ``[T_w, bucket, ...]`` staging block for the engine's fused megastep
+  (one ``jit(lax.scan(tick))`` dispatch per window), built speculatively
+  via ``AsyncScheduler.peek_window``/``commit`` — the same double-buffer
+  rotation and determinism contract, T−1 fewer dispatches and transfers
+  per window.
 """
 from __future__ import annotations
 
@@ -80,11 +86,14 @@ def bucket_size(n_real: int, pad: int) -> int:
 
 @dataclasses.dataclass
 class PreparedTick:
-    """One tick's device-resident inputs plus its bookkeeping metadata.
+    """One tick's (or one fused window's) device-resident inputs plus its
+    bookkeeping metadata.
 
     ``arrays`` is the engine tick signature tail
     ``(idx, xs, ys, delays, n_vis, t_arr, mask)``, already transferred
-    (and, on a mesh, sharded) by the builder.
+    (and, on a mesh, sharded) by the builder.  For a megastep window
+    every array carries an extra leading ``[T_w]`` axis (one slice per
+    fused tick) and ``n_ticks`` counts the real (non-padding) ticks.
     """
 
     arrivals: List[Arrival]  # trainable arrivals, in fold order
@@ -92,6 +101,7 @@ class PreparedTick:
     t_end: int  # global iteration after the tick's folds
     sim_time: float  # simulated time of the last arrival
     arrays: Tuple  # (idx, xs, ys, delays, n_vis, t_arr, mask)
+    n_ticks: int = 1  # real scheduler ticks fused into this dispatch
 
 
 class TickBuilder:
@@ -116,7 +126,9 @@ class TickBuilder:
 
     def __init__(self, *, by_id: Dict[int, object], batch_size: int,
                  local_epochs: int, scratch: int, pad: int, pooled: bool,
-                 transfer: Callable[[str, Array], object]):
+                 transfer: Callable[[str, Array], object],
+                 window_transfer: Optional[Callable[[str, Array],
+                                                    object]] = None):
         self.by_id = by_id
         self.B = batch_size
         self.E = local_epochs
@@ -124,37 +136,40 @@ class TickBuilder:
         self.pad = pad
         self.pooled = pooled
         self.transfer = transfer
+        # window blocks carry a leading [T_w] time axis: on a mesh their
+        # client axis is axis 1, so they need their own sharding rule
+        self.window_transfer = window_transfer or transfer
         self.host_build_s = 0.0  # accumulated host batch-build + transfer time
         # tracked here because the builder sees every arrival in fold
         # order — on the producer thread when prefetching — so the
         # engine loop stays untouched
         self.staleness = StalenessMeter()
-        self._meta: Dict[Tuple[int, int], Dict[str, Array]] = {}
+        self._meta: Dict[Tuple, Dict[str, Array]] = {}
         self._data: Dict[Tuple, Tuple[Array, Array]] = {}
         self._slot = 0
 
-    def _meta_slot(self, P: int, slot: int) -> Dict[str, Array]:
-        key = (P, slot)
+    def _meta_slot(self, shape: Tuple[int, ...], slot: int) -> Dict[str, Array]:
+        key = (shape, slot)
         buf = self._meta.get(key)
         if buf is None:
             buf = {
-                "idx": np.empty(P, np.int32),
-                "delays": np.empty(P, np.float32),
-                "n_vis": np.empty(P, np.float32),
-                "t_arr": np.empty(P, np.float32),
-                "mask": np.empty(P, bool),
+                "idx": np.empty(shape, np.int32),
+                "delays": np.empty(shape, np.float32),
+                "n_vis": np.empty(shape, np.float32),
+                "t_arr": np.empty(shape, np.float32),
+                "mask": np.empty(shape, bool),
             }
             self._meta[key] = buf
         return buf
 
-    def _data_slot(self, P: int, slot: int, tx: Tuple,
+    def _data_slot(self, shape: Tuple[int, ...], slot: int, tx: Tuple,
                    ty: Tuple) -> Tuple[Array, Array]:
         (x_shape, x_dtype), (y_shape, y_dtype) = tx, ty
-        key = (P, slot, x_shape, y_shape)
+        key = (shape, slot, x_shape, y_shape)
         buf = self._data.get(key)
         if buf is None:
-            buf = (np.zeros((P,) + x_shape, x_dtype),
-                   np.zeros((P,) + y_shape, y_dtype))
+            buf = (np.zeros(shape + x_shape, x_dtype),
+                   np.zeros(shape + y_shape, y_dtype))
             self._data[key] = buf
         return buf
 
@@ -187,14 +202,14 @@ class TickBuilder:
         P = 1 if self.pooled else bucket_size(n_real, self.pad)
         slot = self._slot
         self._slot = (slot + 1) % self.NSLOTS
-        meta = self._meta_slot(P, slot)
+        meta = self._meta_slot((P,), slot)
         meta["idx"].fill(self.scratch)
         meta["delays"].fill(0.0)
         meta["n_vis"].fill(0.0)
         meta["t_arr"].fill(0.0)
         meta["mask"].fill(False)
         tx, ty = self._slot_template(pooled_batch)
-        xs, ys = self._data_slot(P, slot, tx, ty)
+        xs, ys = self._data_slot((P,), slot, tx, ty)
         for i, a in enumerate(arrivals):
             t_i = times[i]
             self.staleness.observe(a.cid, t_i)
@@ -226,6 +241,67 @@ class TickBuilder:
             # constant t and ignore t_end
             t_end=(times[-1] + 1) if len(times) else 0,
             sim_time=sim_time, arrays=arrays,
+        )
+
+    def build_window(self, ticks: Sequence[Sequence[Arrival]], *,
+                     t_start: int, window: int,
+                     sim_time: float) -> PreparedTick:
+        """Stack a whole window of ticks into one ``[T_w, bucket, ...]``
+        staging block and transfer it in one shot.
+
+        ``ticks`` are consecutive scheduler ticks (trainable arrivals in
+        fold order); global-iteration stamps run ``t_start, t_start+1, ...``
+        across the flattened window, and every client's minibatches are
+        drawn in that same order — exactly the draws the per-tick path
+        makes, so window size never perturbs the stream rngs.  Both window
+        dims ride the power-of-two grid: ``T_w`` rounds the tick count to
+        the bucket of ``window`` and the cohort axis rounds the *largest*
+        tick to the bucket of ``pad``, so the compiled megastep cache
+        stays O(log window · log K).  Padding ticks are fully masked
+        (scratch-row writes, no server folds): they cost a little compute
+        on the drained tail but never a fresh compilation.
+        """
+        t0 = time.perf_counter()
+        Tw = bucket_size(len(ticks), window)
+        P = bucket_size(max(len(tk) for tk in ticks), self.pad)
+        slot = self._slot
+        self._slot = (slot + 1) % self.NSLOTS
+        meta = self._meta_slot((Tw, P), slot)
+        meta["idx"].fill(self.scratch)
+        meta["delays"].fill(0.0)
+        meta["n_vis"].fill(0.0)
+        meta["t_arr"].fill(0.0)
+        meta["mask"].fill(False)
+        tx, ty = self._slot_template(None)
+        xs, ys = self._data_slot((Tw, P), slot, tx, ty)
+        t_run = t_start
+        flat: List[Arrival] = []
+        for j, tk in enumerate(ticks):
+            for i, a in enumerate(tk):
+                self.staleness.observe(a.cid, t_run)
+                meta["idx"][j, i] = a.cid
+                meta["delays"][j, i] = a.delay
+                meta["t_arr"][j, i] = t_run
+                meta["mask"][j, i] = True
+                c = self.by_id[a.cid]
+                meta["n_vis"][j, i] = c.stream.visible(t_run)
+                for e in range(self.E):
+                    c.stream.batch_into(t_run, xs[j, i, e], ys[j, i, e])
+                t_run += 1
+                flat.append(a)
+        arrays = (
+            self.window_transfer("idx", meta["idx"]),
+            self.window_transfer("xs", xs),
+            self.window_transfer("ys", ys),
+            self.window_transfer("delays", meta["delays"]),
+            self.window_transfer("n_vis", meta["n_vis"]),
+            self.window_transfer("t_arr", meta["t_arr"]),
+            self.window_transfer("mask", meta["mask"]),
+        )
+        self.host_build_s += time.perf_counter() - t0
+        return PreparedTick(
+            arrivals=flat, t_start=t_start, t_end=t_run,
+            sim_time=sim_time, arrays=arrays, n_ticks=len(ticks),
         )
 
 

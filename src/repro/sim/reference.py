@@ -194,7 +194,13 @@ def run_fedavg_reference(model, cfg_model, clients, cfg: RunConfig, *,
                          collect_trace: bool = True,
                          stats: Optional[Dict] = None) -> Dict[int, object]:
     """FedAvg/FedProx, one jit dispatch per participant per round, with
-    the seed's direct weighted mean.  Returns {round t: server w}."""
+    the seed's direct weighted mean.  Returns {round t: server w}.
+
+    The round barrier is trace-aware: ``next_round(now=sim_time)`` samples
+    only on-window clients, and an all-off round pays the wait to the
+    earliest rejoin edge — the oracle for FedAvg-under-churn, mirroring
+    the engine's sync loop step for step.
+    """
     w = model.init(jax.random.PRNGKey(cfg.seed))
     sched = SyncScheduler(
         clients, seed=cfg.seed, dropout_frac=cfg.dropout_frac,
@@ -208,8 +214,11 @@ def run_fedavg_reference(model, cfg_model, clients, cfg: RunConfig, *,
     for t in range(1, cfg.T + 1):
         if cfg.sim_time_budget and sim_time > cfg.sim_time_budget:
             break
-        arrivals, round_time = sched.next_round()
+        arrivals, round_time = sched.next_round(now=sim_time)
         if not arrivals:
+            if not np.isfinite(round_time):
+                break  # fleet retired: no trace ever rejoins
+            sim_time += round_time  # all skipped / whole fleet off-window
             continue
         new_ws, weights = [], []
         for a in arrivals:

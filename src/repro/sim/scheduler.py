@@ -13,7 +13,10 @@ off-window is deferred to the next on-window edge (re-queued at that
 time), and a one-shot trace with no further on-window retires the client.
 Because deferral is a pure function of (heap, trace), the event stream
 stays a pure function of (rng state, heap) — tick-chunking invariance and
-the ``peek_tick``/``commit`` speculation contract survive unchanged.
+the ``peek_tick``/``peek_window``/``commit`` speculation contract survive
+unchanged.  ``SyncScheduler`` consults traces at round-sampling time
+instead: only on-window clients are eligible participants (its own rng
+stream once traces are attached — see the class docstring).
 
 Dropout state is **scheduler-local**: the seeded draw selects client
 *positions* but marks nothing on the shared ``SimClient`` objects, so an
@@ -34,6 +37,8 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
+import warnings
 from typing import FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -72,10 +77,16 @@ def mark_dropouts(clients: Sequence[SimClient], frac: float,
                   rng: np.random.Generator) -> None:
     """Deprecated mutating form: stamps ``SimClient.dropped`` in place.
 
-    Kept for callers that want an explicit fleet-wide marking; the
-    schedulers no longer call this — they keep dropout state local via
-    :func:`draw_dropouts`.
+    Dropout state is scheduler-local now — draw positions with
+    :func:`draw_dropouts` (same rng stream) and keep the set on the
+    caller's side instead of mutating the shared client list.
     """
+    warnings.warn(
+        "mark_dropouts is deprecated: dropout state is scheduler-local — "
+        "use draw_dropouts(n, frac, rng) and keep the returned positions "
+        "instead of mutating SimClient.dropped",
+        DeprecationWarning, stacklevel=2,
+    )
     for c in clients:
         c.dropped = False
     for i in draw_dropouts(len(clients), frac, rng):
@@ -130,31 +141,65 @@ class AsyncScheduler:
     def peek_tick(self, limit: int) -> List[Arrival]:
         """Speculatively compute the next tick without consuming state.
 
-        Runs the exact ``next_tick`` pop/draw sequence on the live state,
-        records the post-tick (rng, heap) pair, then rolls both back.  The
-        pop-time-draw contract makes this safe: the event stream is a pure
-        function of (rng state, heap), so the recorded outcome is the one
-        ``next_tick`` would produce.  ``commit()`` adopts the recorded
-        state; skipping the commit leaves the scheduler bit-identical to
-        before the peek (a later ``next_tick``/``peek_tick`` re-derives the
-        same arrivals).  This is what lets a prefetch thread build the next
-        tick's host arrays while the current tick executes on device,
-        without perturbing the trajectory if the run stops early.
+        ``peek_window(1, limit)`` with the tick unwrapped — see
+        :meth:`peek_window` for the speculation contract.
+        """
+        ticks = self.peek_window(1, limit)
+        return ticks[0] if ticks else []
 
-        Only one speculative tick is held at a time; a second peek before
-        commit replaces the first (identical by determinism).
+    def peek_window(self, n_ticks: int, limit: int,
+                    total_limit: Optional[int] = None,
+                    count=None) -> List[List[Arrival]]:
+        """Speculatively compute up to ``n_ticks`` consecutive ticks.
+
+        Runs the exact ``next_tick`` pop/draw sequence ``n_ticks`` times on
+        the live state, records the post-window (rng, heap, counters)
+        triple, then rolls everything back — so the lookahead consumes no
+        extra randomness and a skipped commit leaves the scheduler
+        bit-identical to before the peek.  The pop-time-draw contract makes
+        this safe: the event stream is a pure function of (rng state, heap),
+        so the recorded outcome is exactly what ``n_ticks`` direct
+        ``next_tick`` calls would produce — the foundation of the engine's
+        fused multi-tick megastep (one ``lax.scan`` dispatch per window)
+        and of the prefetch thread that builds the window's staging block
+        while the previous window executes on device.
+
+        ``limit`` caps each tick's arrivals (distinct clients per tick);
+        ``total_limit``, when given, caps the window's *counted* arrivals,
+        where ``count(tick)`` (default ``len``) says how many of a tick's
+        arrivals the budget charges.  The engine counts only trainable
+        arrivals: its iteration budget advances per fold, so a tick's
+        dropped empty-split clients must not shrink the next tick's limit
+        — each in-window limit must equal the one a window=1 producer
+        would compute, or window size would change tick membership (and
+        break the window-on/off bit-identity contract).  The window ends
+        early at a drained/over-budget scheduler.  ``commit()`` adopts the
+        recorded state; only one speculative window is held at a time — a
+        second peek before commit replaces the first (identical by
+        determinism).
         """
         rng_state = self.rng.bit_generator.state
         heap = list(self._heap)
         counters = (self.deferred, self.retired)
         self._pending = None
-        tick = self.next_tick(limit)
-        self._pending = (tick, self.rng.bit_generator.state, self._heap,
+        ticks: List[List[Arrival]] = []
+        count = count if count is not None else len
+        remaining = total_limit if total_limit is not None \
+            else n_ticks * limit
+        for _ in range(n_ticks):
+            if remaining <= 0:
+                break
+            tick = self.next_tick(min(limit, remaining))
+            if not tick:
+                break
+            ticks.append(tick)
+            remaining -= count(tick)
+        self._pending = (ticks, self.rng.bit_generator.state, self._heap,
                          (self.deferred, self.retired))
         self._heap = heap
         self.rng.bit_generator.state = rng_state
         self.deferred, self.retired = counters
-        return tick
+        return ticks
 
     def commit(self) -> None:
         """Adopt the state recorded by the last ``peek_tick``."""
@@ -224,9 +269,19 @@ class AsyncScheduler:
 class SyncScheduler:
     """FedAvg/FedProx participant sampling with the synchronous barrier.
 
-    Availability traces are ignored here: a synchronous round waits for
-    its sampled participants by construction, so structured churn shows
-    up as the Fig.-4/5 dropout/skip knobs instead.
+    Availability traces restrict the sampling pool: a round starting at
+    simulated time ``now`` samples only clients whose trace is on-window
+    at ``now`` (FedAvg under structured churn — the server cannot recruit
+    a dark device).  Sampled participants hold the barrier for their full
+    round even if their window closes mid-round (the barrier waits, as a
+    synchronous server must).  When the whole fleet is off-window the
+    round is empty and ``round_time`` is the wait until the earliest
+    rejoin edge (``inf`` when every one-shot trace is exhausted — the run
+    is over).  Traceless fleets are unchanged: the eligible pool equals
+    ``active``, so the participant rng stream is bit-identical to the
+    pre-trace scheduler; traced fleets draw from a *different* stream
+    (the pool size varies), which is why FedAvg-under-churn carries its
+    own reference oracle.
     """
 
     def __init__(self, clients: Sequence[SimClient], *, seed: int = 0,
@@ -239,16 +294,27 @@ class SyncScheduler:
         self.m = max(1, int(participation * len(self.active)))
         self.round_work = round_work
 
-    def next_round(self) -> Tuple[List[Arrival], float]:
-        """(participants, round_time).  round_time = slowest participant."""
-        sel = self.rng.choice(len(self.active), size=self.m, replace=False)
+    def next_round(self, now: float = 0.0) -> Tuple[List[Arrival], float]:
+        """(participants, round_time).  round_time = slowest participant,
+        or the wait to the next on-window edge when nobody is available."""
+        eligible = [c for c in self.active
+                    if c.profile.trace is None or c.profile.trace.is_on(now)]
+        if not eligible:
+            rejoin = [c.profile.trace.next_on(now) for c in self.active
+                      if c.profile.trace is not None]
+            rejoin = [t for t in rejoin if t is not None]
+            if not rejoin:  # every one-shot trace exhausted: fleet retired
+                return [], math.inf
+            return [], min(rejoin) - now
+        sel = self.rng.choice(len(eligible), size=min(self.m, len(eligible)),
+                              replace=False)
         arrivals: List[Arrival] = []
         for i in sel:
-            c = self.active[int(i)]
+            c = eligible[int(i)]
             if self.skip_prob and self.rng.uniform() < self.skip_prob:
                 continue
             delay = c.profile.delay(self.rng, self.round_work)
-            arrivals.append(Arrival(cid=c.cid, time=0.0, delay=delay))
+            arrivals.append(Arrival(cid=c.cid, time=now, delay=delay))
         round_time = max((a.delay for a in arrivals), default=0.0)
         return arrivals, round_time
 
@@ -259,6 +325,6 @@ class SweepScheduler:
     def __init__(self, clients: Sequence[SimClient]):
         self.active = list(clients)
 
-    def next_round(self) -> Tuple[List[Arrival], float]:
+    def next_round(self, now: float = 0.0) -> Tuple[List[Arrival], float]:
         return [Arrival(cid=c.cid, time=0.0, delay=0.0)
                 for c in self.active], 1.0

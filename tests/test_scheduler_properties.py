@@ -132,6 +132,20 @@ def _check_case(i: int):
     assert s.peek_tick(4) == peeked  # re-peek re-derives
     assert s.next_tick(4) == peeked  # discard leaves state untouched
 
+    # (b') multi-tick speculative lookahead (the megastep window) drains
+    # the identical stream, and an uncommitted window peek is stateless
+    s = _sched(clients, kw)
+    first = s.peek_window(3, 3)
+    assert s.peek_window(3, 3) == first
+    stream_w = []
+    while len(stream_w) < 150:
+        window = s.peek_window(3, 3)
+        s.commit()
+        if not window:
+            break
+        stream_w.extend(a for tk in window for a in tk)
+    assert stream_w[:150] == streams[3], f"case {i}: peek_window diverged"
+
     # (d) stream sanity: monotone times, on-window arrivals, no dropped
     # clients, pairwise-distinct cids per tick
     sch = _sched(clients, kw)

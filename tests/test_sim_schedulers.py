@@ -117,10 +117,12 @@ def test_dropout_state_is_scheduler_local():
 
 def test_draw_dropouts_matches_legacy_mark():
     """draw_dropouts consumes the exact rng stream the old mutating
-    mark_dropouts did, so seeded runs reproduce PR-2 event streams."""
+    mark_dropouts did, so seeded runs reproduce PR-2 event streams —
+    and the legacy mutating form now warns on use."""
     clients = _clients(10)
     drawn = draw_dropouts(10, 0.3, np.random.default_rng(9))
-    mark_dropouts(clients, 0.3, np.random.default_rng(9))
+    with pytest.deprecated_call():
+        mark_dropouts(clients, 0.3, np.random.default_rng(9))
     assert drawn == {c.cid for c in clients if c.dropped}
     # manual (pre-set) dropped flags are still honored by schedulers
     s = AsyncScheduler(clients, seed=0)
@@ -128,6 +130,19 @@ def test_draw_dropouts_matches_legacy_mark():
                                          if not c.dropped}
     for c in clients:
         c.dropped = False
+
+
+def test_manual_dropped_flags_via_draw_dropouts():
+    """The migration path off mark_dropouts: a caller who wants explicit
+    fleet-wide marking draws positions and stamps them itself, consuming
+    the identical rng stream (no deprecated API involved)."""
+    clients = _clients(10)
+    legacy = _clients(10)
+    with pytest.deprecated_call():
+        mark_dropouts(legacy, 0.3, np.random.default_rng(4))
+    for i in draw_dropouts(len(clients), 0.3, np.random.default_rng(4)):
+        clients[i].dropped = True
+    assert [c.dropped for c in clients] == [c.dropped for c in legacy]
 
 
 def test_budget_checked_before_trace_normalization():
@@ -148,6 +163,122 @@ def test_budget_checked_before_trace_normalization():
     assert s.next_tick(3) == []  # every completion lands past the budget
     assert s.deferred == 0 and s.retired == 0
     assert sorted(s._heap) == heap_before  # heap untouched, not consumed
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven SyncScheduler participation (FedAvg under churn)
+# ---------------------------------------------------------------------------
+
+
+def _attach(clients, traces):
+    from repro.sim.traces import with_traces
+
+    return with_traces(clients, traces)
+
+
+def test_sync_samples_only_on_window_clients():
+    from repro.sim.traces import AvailabilityTrace
+
+    on = AvailabilityTrace(windows=((0.0, 1e9),))
+    off = AvailabilityTrace(windows=((500.0, 1e9),))  # dark until t=500
+    clients = _attach(_clients(8), [on, on, on, off, off, off, off, off])
+    s = SyncScheduler(clients, seed=0, participation=0.5, round_work=64)
+    for _ in range(20):
+        arrivals, _ = s.next_round(now=0.0)
+        assert arrivals, "three clients are on-window"
+        assert all(a.cid in {0, 1, 2} for a in arrivals)
+    # after the dark cohort rejoins, it becomes sampleable again
+    seen = set()
+    for _ in range(40):
+        seen |= {a.cid for a in s.next_round(now=600.0)[0]}
+    assert seen - {0, 1, 2}, "rejoined clients never sampled"
+
+
+def test_sync_all_off_round_waits_for_rejoin_edge():
+    from repro.sim.traces import AvailabilityTrace
+
+    clients = _attach(
+        _clients(3),
+        [AvailabilityTrace(windows=((100.0, 200.0),), period=300.0),
+         AvailabilityTrace(windows=((150.0, 250.0),), period=300.0),
+         AvailabilityTrace(windows=((120.0, 130.0),))],
+    )
+    s = SyncScheduler(clients, seed=0, participation=1.0)
+    arrivals, round_time = s.next_round(now=0.0)
+    assert arrivals == []
+    assert round_time == pytest.approx(100.0)  # earliest rejoin edge
+
+
+def test_sync_retired_fleet_reports_infinite_wait():
+    from repro.sim.traces import AvailabilityTrace
+
+    clients = _attach(
+        _clients(2),
+        [AvailabilityTrace(windows=((0.0, 10.0),)),
+         AvailabilityTrace(windows=((5.0, 20.0),))],  # both one-shot
+    )
+    s = SyncScheduler(clients, seed=0, participation=1.0)
+    arrivals, round_time = s.next_round(now=50.0)
+    assert arrivals == [] and np.isinf(round_time)
+
+
+def test_sync_traceless_rng_stream_unchanged():
+    """With no traces attached the eligible pool is the full active list,
+    so the participant draws must be bit-identical to the pre-trace
+    scheduler (seeded runs reproduce PR-3 event streams)."""
+    clients = _clients(9)
+    s = SyncScheduler(clients, seed=5, participation=0.4, skip_prob=0.2)
+    rng = np.random.default_rng(5)  # replay the scheduler's draw order
+    for _ in range(8):
+        expected = []
+        sel = rng.choice(len(clients), size=s.m, replace=False)
+        for i in sel:
+            c = clients[int(i)]
+            if rng.uniform() < 0.2:
+                continue
+            expected.append((c.cid, c.profile.delay(rng, 64)))
+        got = [(a.cid, a.delay) for a in s.next_round(now=3.0)[0]]
+        assert got == pytest.approx(expected)
+
+
+def test_fedavg_under_churn_engine_matches_oracle():
+    """FedAvg with diurnal traces: the engine's sync loop must replay the
+    per-participant reference oracle round for round (the trace-aware
+    participant stream is a new rng stream — this is its oracle)."""
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.core.algorithms import get_strategy
+    from repro.data import airquality_like
+    from repro.models import LOCAL, build_model
+    from repro.sim.engine import RunConfig, run_strategy
+    from repro.sim.profiles import make_sim_clients
+    from repro.sim.reference import run_fedavg_reference
+    from repro.sim.traces import scenario_traces
+
+    data = airquality_like(n_clients=6, n_per=40)
+    cfg_model = dc.replace(get_arch("paper-lstm"), in_features=8,
+                           out_features=1, hidden=8)
+    model = build_model(cfg_model, LOCAL)
+    cfg = RunConfig(T=16, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
+                    beta=0.001, task="regression", eval_every=8, seed=0,
+                    participation=0.6, periodic_dropout=0.1)
+    traces = scenario_traces("diurnal", 6, seed=0, period=150.0, duty=0.5)
+
+    def mk():
+        return make_sim_clients(data, seed=0, traces=traces)
+
+    ref = run_fedavg_reference(model, cfg_model, mk(), cfg)
+    trace = []
+    run_strategy(get_strategy("fedavg"), model, cfg_model, mk(), cfg,
+                 trace=trace)
+    assert len(trace) >= 2
+    for t, w in trace:
+        assert t in ref
+        for a, b in zip(jax.tree.leaves(w), jax.tree.leaves(ref[t])):
+            np.testing.assert_allclose(a, b, atol=3e-4, rtol=3e-3)
 
 
 # ---------------------------------------------------------------------------
