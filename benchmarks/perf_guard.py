@@ -1,12 +1,17 @@
 """Nightly perf-regression guard for the cohort engine.
 
-Snapshots the checked-in ``BENCH_sim.json`` reference record (256-client
-always-on pipelined cohort by default), reruns just that slice of the
-smoke sweep — which overwrites ``BENCH_sim.json`` with fresh numbers —
-and fails (exit 1) when the rerun's iters/s drops more than
-``--tolerance`` (default 20%) below the checked-in record.  Run it
-*before* any other smoke invocation in a CI job: the baseline must be
-read from the committed file, not from a same-job rerun.
+Snapshots the checked-in ``BENCH_sim.json`` reference records, reruns
+just the guarded slices of the smoke sweep — which overwrites
+``BENCH_sim.json`` with fresh numbers — and fails (exit 1) when any
+rerun record's iters/s drops below its committed floor.  Run it *before*
+any other smoke invocation in a CI job: the baseline must be read from
+the committed file, not from a same-job rerun.
+
+The guard is **keyed per workload record**: every committed pipelined
+always-on record — the ``--clients`` sweep row of the sweep workload
+*and* each small-cohort workload-smoke row (one per registered workload)
+— gets its own floor, so a regression confined to e.g. the CNN
+classification path can't hide behind a healthy LSTM sweep number.
 
     PYTHONPATH=src python -m benchmarks.perf_guard
     PYTHONPATH=src python -m benchmarks.perf_guard --clients 256 --tolerance 0.2
@@ -14,89 +19,144 @@ read from the committed file, not from a same-job rerun.
 Exit codes: 0 = within tolerance, or no comparable baseline record yet
 (first run on a new bench schema — the self-arming path: commit the
 fresh ``BENCH_sim.json`` and the guard compares for real the next
-night); 1 = regression; 2 = the rerun itself produced no comparable
-record (bench breakage, never a perf verdict).
+night); 1 = regression on any guarded record; 2 = the rerun produced no
+comparable main record (bench breakage, never a perf verdict).
 
-Caveat: the floor compares a CI-runner rerun against a possibly
-different recording host.  20% catches real regressions on a stable
-runner; on noisy shared runners widen ``--tolerance`` in the workflow
-rather than chasing host-scheduling flakes.
+Caveats: the floor compares a CI-runner rerun against a possibly
+different recording host — 20% catches real regressions on a stable
+runner; widen ``--tolerance`` in the workflow on noisy shared runners.
+The small-cohort workload rows are shorter and noisier than the main
+sweep row, so they get their own (wider) ``--workload-tolerance``.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+from typing import Dict, Optional, Tuple
 
 from benchmarks.sim_bench import OUT_PATH, bench_sim
 
+# records with this (mode, scenario) shape are guardable
+_GUARDED = ("cohort", "always_on")
 
-def _reference_record(payload: dict, clients: int) -> dict:
+
+Key = Tuple[str, int, str]
+
+
+def _key(rec: dict) -> Key:
+    # `kind` separates the per-workload smoke rows (short runs, their own
+    # T / eval cadence) from sweep rows — the two shapes must never share
+    # a floor, even at the same (workload, clients)
+    return (rec.get("workload", "lstm_regression"), rec.get("clients", 0),
+            rec.get("kind", "sweep"))
+
+
+def _guardable(payload: dict, window: int
+               ) -> Tuple[Dict[Key, dict], int]:
+    """(comparable pipelined always-on records keyed (workload, clients,
+    kind), count of *candidate* rows before comparability filtering).
+
+    Incomparable rows (different window, non-fp32 state) are skipped —
+    an apples-to-oranges floor would mis-calibrate the threshold in
+    either direction (e.g. the K=1024 bf16 memory-pair record).  The
+    candidate count lets the caller distinguish "no baseline yet" (arm
+    quietly) from "baseline exists but was minted with other flags"
+    (exit 2: a silently disarmed guard is worse than a failing one).
+    """
+    out: Dict[Key, dict] = {}
+    candidates = 0
     for rec in payload.get("records", []):
-        if (rec.get("clients") == clients and rec.get("mode") == "cohort"
-                and rec.get("scenario") == "always_on"):
-            return rec
-    return {}
+        if (rec.get("mode"), rec.get("scenario")) != _GUARDED:
+            continue
+        candidates += 1
+        if rec.get("window") not in (None, window):
+            continue
+        if rec.get("state_dtype") not in (None, "fp32"):
+            continue
+        if not rec.get("iters_per_s"):
+            continue
+        out.setdefault(_key(rec), rec)
+    return out, candidates
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=256,
-                    help="client count of the guarded record")
+                    help="client count of the main guarded sweep record")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="allowed fractional iters/s drop vs the "
-                         "checked-in record (0.2 = 20%%)")
+                         "checked-in main record (0.2 = 20%%)")
+    ap.add_argument("--workload-tolerance", type=float, default=0.5,
+                    help="tolerance for the per-workload small-cohort "
+                         "records (shorter runs, noisier timing)")
     ap.add_argument("--window", type=int, default=32)
     args = ap.parse_args()
 
     try:
         with open(OUT_PATH) as f:
-            baseline = _reference_record(json.load(f), args.clients)
+            baseline, candidates = _guardable(json.load(f), args.window)
     except (OSError, json.JSONDecodeError):
-        baseline = {}
-    base_ips = baseline.get("iters_per_s")
-    if not base_ips:
-        print(f"perf_guard: no checked-in {args.clients}-client always-on "
-              "cohort record to guard against; running the sweep to mint "
-              "one", flush=True)
-    elif (baseline.get("window") not in (None, args.window)
-          or baseline.get("state_dtype") not in (None, "fp32")):
-        # an apples-to-oranges floor is worse than no floor: a bf16 or
-        # differently-windowed baseline would silently mis-calibrate the
-        # regression threshold in either direction
-        print(f"perf_guard: committed baseline is incomparable "
-              f"(window={baseline.get('window')} vs {args.window}, "
-              f"state_dtype={baseline.get('state_dtype')} vs fp32) — "
-              "commit a BENCH_sim.json minted with the guard's flags",
-              file=sys.stderr)
+        baseline, candidates = {}, 0
+    if not baseline and candidates:
+        # records exist but none are comparable: the committed file was
+        # minted with different flags (window / state_dtype).  Exiting 0
+        # here would permanently disarm the guard while CI stays green.
+        print(f"perf_guard: committed BENCH_sim.json has {candidates} "
+              "pipelined always-on record(s) but none comparable to "
+              f"(window={args.window}, state_dtype=fp32) — commit a file "
+              "minted with the guard's flags", file=sys.stderr)
         sys.exit(2)
+    if not baseline:
+        print("perf_guard: no checked-in comparable cohort records to "
+              "guard against; running the sweep to mint them", flush=True)
     else:
-        print(f"perf_guard: checked-in baseline {base_ips} iters/s "
-              f"(window={baseline.get('window')}, "
-              f"state_dtype={baseline.get('state_dtype')})", flush=True)
+        for (wl, K, kind), rec in sorted(baseline.items()):
+            print(f"perf_guard: baseline {wl}@{K} clients [{kind}] = "
+                  f"{rec['iters_per_s']} iters/s", flush=True)
 
-    # only the guarded slice: one client count, no K=1024 memory pair,
-    # and a token per-arrival budget (the guard never reads that record)
+    # only the guarded slices: one sweep client count, no K=1024 memory
+    # pair, a token per-arrival budget (the guard never reads that
+    # record), plus the per-workload smoke rows
     bench_sim(counts=(args.clients,), baseline_iters=8,
-              window=args.window, mem_cohort=0)  # overwrites BENCH_sim.json
+              window=args.window, mem_cohort=0,
+              workload_smoke=True)  # overwrites BENCH_sim.json
 
     with open(OUT_PATH) as f:
-        fresh = _reference_record(json.load(f), args.clients)
-    new_ips = fresh.get("iters_per_s")
-    if new_ips is None:
-        print("perf_guard: rerun produced no comparable record",
+        fresh, _ = _guardable(json.load(f), args.window)
+    main_key = ("lstm_regression", args.clients, "sweep")
+    if main_key not in fresh:
+        print("perf_guard: rerun produced no comparable main record",
               file=sys.stderr)
         sys.exit(2)
-    if not base_ips:
-        print(f"perf_guard: fresh record {new_ips} iters/s (no baseline "
-              "to compare — commit BENCH_sim.json to arm the guard)")
+    if not baseline:
+        summary = {f"{w}@{k}[{kind}]": r["iters_per_s"]
+                   for (w, k, kind), r in sorted(fresh.items())}
+        print(f"perf_guard: fresh records {summary} (no baseline to "
+              "compare — commit BENCH_sim.json to arm the guard)")
         sys.exit(0)
-    floor = (1.0 - args.tolerance) * base_ips
-    verdict = "OK" if new_ips >= floor else "REGRESSION"
-    print(f"perf_guard: {verdict} — rerun {new_ips} iters/s vs baseline "
-          f"{base_ips} (floor {floor:.2f} at {args.tolerance:.0%} "
-          "tolerance)")
-    if new_ips < floor:
+
+    failed = False
+    for key, base_rec in sorted(baseline.items()):
+        wl, K, kind = key
+        fresh_rec: Optional[dict] = fresh.get(key)
+        if fresh_rec is None:
+            # a workload removed from the registry (or a different
+            # --clients) simply stops being guarded; the committed file
+            # gets refreshed by the same nightly run
+            print(f"perf_guard: {wl}@{K} [{kind}]: no rerun record — "
+                  "skipped")
+            continue
+        tol = (args.tolerance if key == main_key
+               else args.workload_tolerance)
+        base_ips, new_ips = base_rec["iters_per_s"], fresh_rec["iters_per_s"]
+        floor = (1.0 - tol) * base_ips
+        verdict = "OK" if new_ips >= floor else "REGRESSION"
+        print(f"perf_guard: {verdict} — {wl}@{K} [{kind}]: rerun "
+              f"{new_ips} iters/s vs baseline {base_ips} "
+              f"(floor {floor:.2f} at {tol:.0%})")
+        failed = failed or new_ips < floor
+    if failed:
         sys.exit(1)
 
 

@@ -46,7 +46,17 @@ def main() -> None:
     ap.add_argument("--state-dtype", default=None,
                     help="with --smoke: stacked client-state storage dtype "
                          "(fp32 = full-copy master, bf16 = delta-"
-                         "compressed)")
+                         "compressed); unknown names fail fast with the "
+                         "accepted list")
+    ap.add_argument("--workload", default="lstm_regression",
+                    help="with --smoke: registered repro.sim.workloads "
+                         "name the sweep runs (validated against the "
+                         "registry before the sweep; every registered "
+                         "workload additionally gets one small-cohort "
+                         "smoke record unless --no-workload-smoke)")
+    ap.add_argument("--no-workload-smoke", action="store_true",
+                    help="with --smoke: skip the per-registered-workload "
+                         "small-cohort records")
     ap.add_argument("--mem-cohort", type=int, default=1024,
                     help="with --smoke: cohort size for the fp32-vs-bf16 "
                          "stacked-state memory pair (0 disables)")
@@ -72,7 +82,9 @@ def main() -> None:
 
         for r in bench_sim(scenario=args.scenario, window=args.window,
                            state_dtype=args.state_dtype,
-                           mem_cohort=args.mem_cohort):
+                           mem_cohort=args.mem_cohort,
+                           workload=args.workload,
+                           workload_smoke=not args.no_workload_smoke):
             rows.append(r)
             print(_fmt(*r), flush=True)
         if args.smoke:  # smoke mode runs only the sim sweep

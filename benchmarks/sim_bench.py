@@ -31,6 +31,15 @@ same config with fp32 full-copy state (the memory baseline) and with
 bf16 delta-compressed state (``ClientStateCodec``), recording both so the
 compression ratio rides in ``BENCH_sim.json``.
 
+Every record carries a ``workload`` column (``repro.sim.workloads``
+registry name); the sweep itself runs one workload (``--workload``,
+default ``lstm_regression`` — the historical LSTM/Air-Quality setup) and
+a final **workload smoke** runs *every* registered workload once at a
+small cohort, so BENCH_sim.json always holds one comparable record per
+task family (the perf guard keys on them).  Unknown workload / scenario /
+state-dtype names fail fast with the registry's known-name list before
+any sweep time is burned.
+
 Emits one ``name,us_per_call,derived`` row per (count, mode) and writes the
 full records to ``BENCH_sim.json`` at the repo root for the perf trajectory.
 """
@@ -45,18 +54,31 @@ from typing import Dict, List, Tuple
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
 
 
-def _build(n_clients: int):
-    from repro.configs import get_arch
-    from repro.data import airquality_like
-    from repro.models import LOCAL, build_model
+def validate_bench_args(workload=None, state_dtype=None, scenario=None):
+    """Fail fast on typo'd names with the registry's known lists —
+    *before* the sweep burns minutes of JIT + bench time.  Choices come
+    from the workload registry / dtype table / scenario dispatcher, never
+    a hand-maintained list here."""
+    from repro.common.dtypes import resolve_state_dtype
+    from repro.sim.traces import scenario_traces
+    from repro.sim.workloads import get_workload
+
+    if workload is not None:
+        get_workload(workload)  # KeyError lists registered workloads
+    resolve_state_dtype(state_dtype)  # ValueError lists accepted dtypes
+    if scenario and scenario != "always_on":
+        scenario_traces(scenario, 0, seed=0)  # ValueError lists scenarios
+
+
+def _build(n_clients: int, workload: str = "lstm_regression"):
+    from repro.sim.workloads import get_workload
+
+    wl = get_workload(workload)
+    cfg_model, model = wl.build()
+    data = wl.make_data(n_clients)
     from repro.sim.profiles import make_sim_clients
 
-    cfg_model = dataclasses.replace(
-        get_arch("paper-lstm"), in_features=8, out_features=1, hidden=8
-    )
-    model = build_model(cfg_model, LOCAL)
-    data = airquality_like(n_clients=n_clients, n_per=24)
-    return cfg_model, model, lambda: make_sim_clients(data, seed=0)
+    return wl, cfg_model, model, lambda: make_sim_clients(data, seed=0)
 
 
 def _run(model, cfg_model, clients, cfg, mode: str) -> Dict:
@@ -84,14 +106,17 @@ _STAT_COLS = ("host_build_s", "device_s", "eval_s", "prefetch", "devices",
               "window", "windows", "state_dtype", "stacked_state_bytes",
               "peak_live_device_bytes", "tick_cache_size", "staleness_mean",
               "staleness_max", "availability_utilization",
-              "deferred_arrivals", "retired_clients")
+              "deferred_arrivals", "retired_clients", "train_loss_final",
+              "participation_mean")
 
 
-def _record(K: int, mode: str, scenario: str, s: Dict) -> Dict:
+def _record(K: int, mode: str, scenario: str, s: Dict, *,
+            workload: str = "lstm_regression") -> Dict:
     rec = {
         "clients": K,
         "mode": mode,
         "scenario": scenario,
+        "workload": workload,
         "iters": s["iters"],
         "ticks": s["ticks"],
         "wall_time_s": round(s["wall_time_s"], 4),
@@ -108,7 +133,9 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
               baseline_iters: int = 256,
               scenario: str = None, window: int = 32,
               state_dtype: str = None,
-              mem_cohort: int = 1024) -> List[Tuple[str, float, str]]:
+              mem_cohort: int = 1024,
+              workload: str = "lstm_regression",
+              workload_smoke: bool = True) -> List[Tuple[str, float, str]]:
     """Smoke sweep: pipelined/serialized/unfused engine vs per-arrival.
 
     ``scenario`` (``diurnal`` / ``bursty`` / ``churn`` / ``flash`` /
@@ -119,15 +146,17 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
     always-on record it must not regress.  ``window``/``state_dtype``
     configure the megastep fusion depth and the stacked-state storage
     dtype of the engine modes; ``mem_cohort`` (0 disables) sizes the
-    final fp32-vs-bf16 memory pair.
+    final fp32-vs-bf16 memory pair.  ``workload`` selects the sweep's
+    registered workload; ``workload_smoke`` appends one small-cohort
+    pipelined record *per registered workload* (the task-diversity floor
+    the perf guard keys on).
     """
-    from repro.sim.engine import RunConfig
     from repro.sim.traces import scenario_traces, with_traces
 
-    if scenario and scenario != "always_on":
-        # fail fast on a typo'd scenario name / unreadable trace file —
-        # before the always-on sweep burns minutes of JIT + bench time
-        scenario_traces(scenario, 0, seed=0)
+    # fail fast on typo'd workload/scenario/dtype names — before the
+    # always-on sweep burns minutes of JIT + bench time
+    validate_bench_args(workload=workload, state_dtype=state_dtype,
+                        scenario=scenario)
 
     rows: List[Tuple[str, float, str]] = []
     records: List[Dict] = []
@@ -136,10 +165,10 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
     overlap_at = {}
     churn_at = {}
     for K in counts:
-        cfg_model, model, mk = _build(K)
-        base = RunConfig(
+        wl, cfg_model, model, mk = _build(K, workload)
+        base = wl.run_config(
             T=iters_per_client * K, batch_size=8, local_epochs=2, eta=0.02,
-            lam=1.0, beta=0.001, task="regression", eval_every=50, seed=0,
+            lam=1.0, beta=0.001, eval_every=50, seed=0,
             window=window, state_dtype=state_dtype,
         )
         per_mode = {}
@@ -165,7 +194,7 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                     s = s2
             else:
                 s = _run(model, cfg_model, mk(), cfg, mode)
-            rec = _record(K, mode, "always_on", s)
+            rec = _record(K, mode, "always_on", s, workload=workload)
             records.append(rec)
             per_mode[mode] = rec
             rows.append((
@@ -179,7 +208,7 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
             mk_churn = lambda: with_traces(mk(), traces)  # noqa: E731
             _run(model, cfg_model, mk_churn(), base, "cohort")  # warmup
             s = _run(model, cfg_model, mk_churn(), base, "cohort")
-            rec = _record(K, "cohort", scenario, s)
+            rec = _record(K, "cohort", scenario, s, workload=workload)
             records.append(rec)
             churn_at[K] = rec
             rows.append((
@@ -211,17 +240,17 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
         # bf16 delta-compressed, at a cohort size the fp32 engine still
         # fits but a transformer-scale model would not
         K = mem_cohort
-        cfg_model, model, mk = _build(K)
-        mem_cfg = RunConfig(
+        wl, cfg_model, model, mk = _build(K, workload)
+        mem_cfg = wl.run_config(
             T=2 * K, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
-            beta=0.001, task="regression", eval_every=K, seed=0,
+            beta=0.001, eval_every=K, seed=0,
             window=window,
         )
         memory_at = {}
         for dt in ("fp32", "bf16"):
             cfg = dataclasses.replace(mem_cfg, state_dtype=dt)
             s = _run(model, cfg_model, mk(), cfg, "cohort")
-            rec = _record(K, "cohort", "always_on", s)
+            rec = _record(K, "cohort", "always_on", s, workload=workload)
             records.append(rec)
             memory_at[dt] = rec
             rows.append((
@@ -230,6 +259,40 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 f"iters_per_s={rec['iters_per_s']};stacked_state_bytes="
                 f"{rec.get('stacked_state_bytes')};peak_live="
                 f"{rec.get('peak_live_device_bytes')}",
+            ))
+    workload_at = {}
+    if workload_smoke:
+        from repro.sim.workloads import WORKLOADS
+
+        # one small-cohort pipelined record per registered workload: the
+        # scenario-diversity floor (regression + classification +
+        # multi-label all exercise the engine end-to-end every sweep, and
+        # the perf guard keys on these records per workload name)
+        K = 8
+        for name in WORKLOADS:
+            wl, cfg_model, model, mk = _build(K, name)
+            cfg = wl.run_config(
+                T=iters_per_client * K * 2, batch_size=8, local_epochs=2,
+                eta=0.02, lam=1.0, beta=0.001, eval_every=32, seed=0,
+                window=window,
+            )
+            _run(model, cfg_model, mk(), cfg, "cohort")  # warmup
+            s = _run(model, cfg_model, mk(), cfg, "cohort")
+            s2 = _run(model, cfg_model, mk(), cfg, "cohort")
+            if s2["wall_time_s"] < s["wall_time_s"]:
+                s = s2
+            rec = _record(K, "cohort", "always_on", s, workload=name)
+            # smoke rows have a different run shape (T, eval cadence)
+            # than sweep rows: the kind column keeps the perf guard from
+            # ever comparing one against the other
+            rec["kind"] = "workload_smoke"
+            records.append(rec)
+            workload_at[name] = rec
+            rows.append((
+                f"sim/workload/{name}/{K}clients",
+                s["wall_time_s"] / max(s["iters"], 1) * 1e6,
+                f"iters_per_s={rec['iters_per_s']};train_loss_final="
+                f"{rec.get('train_loss_final')}",
             ))
     payload = {
         "benchmark": "cohort simulation engine throughput (asofed)",
@@ -267,12 +330,24 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                    "staleness_mean/max = global iterations since each "
                    "arriving client's previous fold; deferred_arrivals = "
                    "off-window completions pushed to the next on-window "
-                   "edge; retired_clients = one-shot traces exhausted."),
+                   "edge; retired_clients = one-shot traces exhausted.  "
+                   "workload = repro.sim.workloads registry name: the "
+                   "sweep runs one workload, the workload-smoke records "
+                   "run every registered workload once at a small cohort "
+                   "(train_loss_final = last tick's in-scan telemetry "
+                   "loss)."),
         "records": records,
+        "sweep_workload": workload,
         "speedup_cohort_vs_per_arrival": speedup_at,
         "speedup_megastep": fusion_at,
         "prefetch_overlap_s": overlap_at,
     }
+    if workload_at:
+        payload["workload_smoke"] = {
+            name: {"iters_per_s": rec["iters_per_s"],
+                   "train_loss_final": rec.get("train_loss_final")}
+            for name, rec in workload_at.items()
+        }
     if mem_cohort:
         payload["memory_cohort"] = mem_cohort
         payload["memory_baseline_vs_delta"] = {

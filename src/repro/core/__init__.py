@@ -23,7 +23,7 @@ from repro.core.federated import (
     run,
 )
 from repro.core.server import ServerState, aggregate, init_server
-from repro.core.streaming import OnlineStream
+from repro.sim.streaming import OnlineStream
 
 __all__ = [
     "ClientState",

@@ -26,6 +26,11 @@ class AsoFedStrategy(Strategy):
     name = "asofed"
     schedule = "async"
 
+    def telemetry_slots(self, cfg):
+        # the Eq. (11) dynamic step multiplier rides along with the
+        # surrogate loss: both are already computed by the local round
+        return ("train_loss", "step_mult")
+
     def init_client(self, model, cfg, w0, client):
         n0 = float(client.stream.visible(0)) if client is not None else 0.0
         return client_lib.init_client_state(w0, n0)
@@ -90,7 +95,8 @@ class AsoFedStrategy(Strategy):
                 delay_sum=st.delay_sum + delay, rounds=st.rounds + 1.0,
                 n_samples=st.n_samples + n_new,
             )
-            return st2, tree_sub(st.params, new_params)  # upload: the delta
+            tel = {"train_loss": loss, "step_mult": r}
+            return st2, tree_sub(st.params, new_params), tel  # upload: delta
 
         return local
 

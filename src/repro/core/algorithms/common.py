@@ -103,7 +103,14 @@ def avg_surrogate_grad(model, cfg):
 
 
 def sgd_epochs(model, cfg, mu: float = 0.0):
-    """E minibatch prox-SGD steps (FedAvg mu=0 / FedProx mu>0 / Local)."""
+    """E minibatch prox-SGD steps (FedAvg mu=0 / FedProx mu>0 / Local).
+
+    Returns ``(params, train_loss)`` where the loss is the mean of the E
+    per-step pre-update losses — the forward pass already computes them
+    under ``value_and_grad`` (identical gradients to the old ``jax.grad``
+    form), so emitting the scalar for the engine's in-scan telemetry
+    costs nothing.
+    """
 
     def fn(params, anchor, xs, ys):
         def one(p, xy):
@@ -113,13 +120,13 @@ def sgd_epochs(model, cfg, mu: float = 0.0):
                 l, _ = model.loss(pp, {"x": x, "y": y, "task": cfg.task})
                 return l
 
-            g = jax.grad(loss)(p)
+            l, g = jax.value_and_grad(loss)(p)
             if mu > 0.0:
                 g = jax.tree.map(lambda gi, pi, ai: gi + mu * (pi - ai),
                                  g, p, anchor)
-            return tree_axpy(-cfg.eta, g, p), None
+            return tree_axpy(-cfg.eta, g, p), l
 
-        p, _ = jax.lax.scan(one, params, (xs, ys))
-        return p
+        p, ls = jax.lax.scan(one, params, (xs, ys))
+        return p, jnp.mean(ls)
 
     return fn

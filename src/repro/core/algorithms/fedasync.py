@@ -46,8 +46,9 @@ class FedAsyncStrategy(Strategy):
         sgd = sgd_epochs(model, cfg, mu=0.005)  # FedAsync regularized step
 
         def local(c, bcast, xs, ys, delay, n_vis, t_arr):
-            wk = sgd(c["w"], c["w"], xs, ys)
-            return c, {"wk": wk, "version": c["version"]}
+            wk, loss = sgd(c["w"], c["w"], xs, ys)
+            return (c, {"wk": wk, "version": c["version"]},
+                    {"train_loss": loss})
 
         return local
 

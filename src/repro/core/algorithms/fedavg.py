@@ -35,7 +35,8 @@ class FedAvgStrategy(Strategy):
         sgd = sgd_epochs(model, cfg, mu=self.mu(cfg))
 
         def local(c, w_bcast, xs, ys, delay, n_vis, t_arr):
-            return c, sgd(w_bcast, w_bcast, xs, ys)
+            wk, loss = sgd(w_bcast, w_bcast, xs, ys)
+            return c, wk, {"train_loss": loss}
 
         return local
 

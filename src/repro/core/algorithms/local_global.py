@@ -30,7 +30,8 @@ class LocalStrategy(Strategy):
         sgd = sgd_epochs(model, cfg)
 
         def local(c, bcast, xs, ys, delay, n_vis, t_arr):
-            return {"w": sgd(c["w"], c["w"], xs, ys)}, jnp.zeros(())
+            wk, loss = sgd(c["w"], c["w"], xs, ys)
+            return {"w": wk}, jnp.zeros(()), {"train_loss": loss}
 
         return local
 
@@ -51,7 +52,8 @@ class GlobalStrategy(Strategy):
         sgd = sgd_epochs(model, cfg)
 
         def local(c, bcast, xs, ys, delay, n_vis, t_arr):
-            return {"w": sgd(c["w"], c["w"], xs, ys)}, jnp.zeros(())
+            wk, loss = sgd(c["w"], c["w"], xs, ys)
+            return {"w": wk}, jnp.zeros(()), {"train_loss": loss}
 
         return local
 

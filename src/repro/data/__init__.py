@@ -1,6 +1,7 @@
 from repro.data.synthetic import (
     airquality_like,
     extrasensory_like,
+    extrasensory_multilabel_like,
     fitrec_like,
     fmnist_like,
     DATASETS,
@@ -11,6 +12,7 @@ from repro.data.lm import synthetic_token_stream, federated_token_clients
 __all__ = [
     "airquality_like",
     "extrasensory_like",
+    "extrasensory_multilabel_like",
     "fitrec_like",
     "fmnist_like",
     "DATASETS",

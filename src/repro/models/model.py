@@ -110,8 +110,11 @@ class Model:
     def loss(self, params, batch):
         if self.cfg.family == "lstm":
             pred = pn.lstm_forward(params, batch["x"])
-            if batch.get("task", "regression") == "classification":
+            task = batch.get("task", "regression")
+            if task == "classification":
                 l = pn.classification_loss(pred, batch["y"])
+            elif task == "multilabel":
+                l = pn.multilabel_loss(pred, batch["y"])
             else:
                 l = pn.regression_loss(pred, batch["y"])
             return l, {"loss": l}

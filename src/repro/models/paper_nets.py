@@ -123,6 +123,28 @@ def classification_loss(logits, labels):
     return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
 
 
+def multilabel_loss(logits, targets):
+    """Mean sigmoid binary cross-entropy over (B, C) multi-hot targets.
+
+    The ExtraSensory-like head: C independent sigmoid units on the LSTM's
+    last hidden state (one per activity — a user can walk *and* talk), so
+    the loss is per-class BCE, not the softmax CE of the single-label
+    head.  Computed in the stable ``max(z,0) − z·y + log(1+e^−|z|)`` form
+    — ``sigmoid`` followed by ``log`` would underflow for confident
+    logits.
+    """
+    z = logits
+    y = targets.astype(z.dtype)
+    return jnp.mean(jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def multilabel_predict(logits, threshold: float = 0.5):
+    """(B, C) bool predictions: sigmoid(z) >= threshold, computed in
+    logit space (z >= logit(threshold)) so no sigmoid is materialized."""
+    cut = jnp.log(threshold) - jnp.log1p(-threshold)
+    return logits >= cut
+
+
 def accuracy(logits, labels):
     return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
 

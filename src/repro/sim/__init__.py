@@ -15,9 +15,11 @@ from repro.sim.engine import (
     run_strategy,
     stack_batches,
 )
+from repro.sim.evaluation import Evaluator
 from repro.sim.prefetch import (
     PreparedTick,
     TickBuilder,
+    TickMeta,
     TickPrefetcher,
     bucket_size,
 )
@@ -33,9 +35,15 @@ from repro.sim.scheduler import (
     SweepScheduler,
     SyncScheduler,
     draw_dropouts,
-    mark_dropouts,
 )
 from repro.sim.streaming import OnlineStream
+from repro.sim.telemetry import TelemetryLog, TickRecord
+from repro.sim.workloads import (
+    WORKLOADS,
+    Workload,
+    get_workload,
+    resolve_eval_report,
+)
 from repro.sim.traces import (
     AvailabilityTrace,
     diurnal,
@@ -68,8 +76,15 @@ __all__ = [
     "SweepScheduler",
     "SyncScheduler",
     "draw_dropouts",
-    "mark_dropouts",
     "OnlineStream",
+    "Evaluator",
+    "TelemetryLog",
+    "TickMeta",
+    "TickRecord",
+    "WORKLOADS",
+    "Workload",
+    "get_workload",
+    "resolve_eval_report",
     "AvailabilityTrace",
     "diurnal",
     "flash_crowd",

@@ -1,0 +1,246 @@
+"""Compile layer of the cohort engine: traceable tick bodies + fn caches.
+
+This module owns everything between a :class:`~repro.sim.engine.Strategy`'s
+traceable pieces and a dispatched ``jax.jit`` callable:
+
+* :func:`tick_body` — the one-tick update ``(stacked, server, *inputs) ->
+  (stacked, server, telemetry_row)``: gather (+ codec decode), vmapped
+  local rounds (shard-mapped on a mesh), the sequential server fold scan,
+  merge, masked scatter write-back (+ codec encode), and the in-scan
+  telemetry reduction (masked cohort means of the per-client scalars the
+  strategy's ``local`` emits — computed from values the round already
+  produced, so the summaries cost no extra dispatches or transfers);
+* :func:`build_megastep_fn` — ``lax.scan`` of the tick body over a fused
+  ``[T_w]`` window axis, stacking one telemetry row per tick as the scan
+  output (the accumulator rides the same dispatch as the window itself);
+* the compiled-fn caches — one compilation per (model, strategy, config,
+  shapes), shared across runs, NOT rebuilt per runner invocation.
+
+Nothing here touches the scheduler, host staging buffers, or evaluation:
+tick *building* lives in ``repro.sim.prefetch``, dispatch orchestration in
+``repro.sim.engine``, metric extraction in ``repro.sim.telemetry`` /
+``repro.sim.evaluation``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common import sharding as sharding_lib
+from repro.common.compat import shard_map
+from repro.common.pytree import tree_take, tree_scatter, tree_where
+
+_TICK_CACHE: Dict[Any, Tuple[Any, Any]] = {}
+_PREDICT_CACHE: Dict[Any, Tuple[Any, Any]] = {}
+_INIT_CACHE: Dict[Any, Tuple[Any, Any]] = {}
+
+
+def mask_select(mask, new, old):
+    """Per-member select: mask (P,) broadcast against stacked leaves."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(mask.reshape(mask.shape + (1,) * (n.ndim - 1)),
+                               n, o),
+        new, old,
+    )
+
+
+def reduce_telemetry(tel, mask, slots: Sequence[str]):
+    """(n_slots,) masked cohort means of the per-client telemetry scalars.
+
+    One fixed reduction per tick, always at the tick's compile-time shape
+    bucket — so a tick emits bit-identical telemetry whether it runs
+    standalone or fused inside a window scan (the same invariance the
+    stacked-state write-back relies on).
+    """
+    if not slots:
+        return jnp.zeros((0,), jnp.float32)
+    m32 = mask.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(m32), 1.0)
+    return jnp.stack([
+        jnp.sum(jnp.where(mask, tel[s].astype(jnp.float32), 0.0)) / cnt
+        for s in slots
+    ])
+
+
+def tick_body(strategy, model, cfg_model, cfg, mesh: Optional[Mesh], codec,
+              slots: Tuple[str, ...]):
+    """The traceable one-tick update ``(stacked, server, *inputs) ->
+    (stacked, server, tel_row)`` — jitted standalone for sync/sweep
+    schedules, scanned over a window axis by the async megastep."""
+    local = strategy.build_local(model, cfg)
+    fold = strategy.build_fold(model, cfg_model, cfg)
+    merge = strategy.build_merge(model, cfg)
+    finalize = strategy.build_finalize(model, cfg)
+    vlocal = jax.vmap(local, in_axes=(0, None, 0, 0, 0, 0, 0))
+
+    def tick(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
+        enc0 = tree_take(stacked, idx)
+        # the stacked state may be delta-compressed: reconstruct the
+        # cohort's working (master-dtype) state right at the gather —
+        # identity (and fused away) for the fp32 codec
+        cohort0 = enc0 if codec is None else codec.decode(enc0)
+        bcast = strategy.server_broadcast(server)
+        # the vmapped local rounds are embarrassingly parallel over the
+        # cohort axis: on a mesh, run them as explicit SPMD shards (the
+        # compile-time bucket makes divisibility a trace-time property;
+        # non-divisible small buckets fall back to the single-program path)
+        if mesh is not None and idx.shape[0] % mesh.devices.size == 0:
+            sharded_local = shard_map(
+                vlocal, mesh=mesh,
+                in_specs=(P("data"), P(), P("data"), P("data"), P("data"),
+                          P("data"), P("data")),
+                out_specs=(P("data"), P("data"), P("data")),
+                check_vma=False,
+            )
+            cohort, uploads, tel = sharded_local(
+                cohort0, bcast, xs, ys, delays, n_vis, t_arr)
+            if fold is not None:
+                # one explicit all-gather here, so the sequential fold
+                # scan below runs replicated with no per-step collectives
+                rep = sharding_lib.replicated(mesh)
+                uploads = jax.lax.with_sharding_constraint(
+                    uploads, jax.tree.map(lambda _: rep, uploads))
+        else:
+            cohort, uploads, tel = vlocal(
+                cohort0, bcast, xs, ys, delays, n_vis, t_arr)
+        tel_row = reduce_telemetry(tel, mask, slots)
+        if fold is not None:
+            def step(sv, inp):
+                up, ix, nv, ta, mk = inp
+                sv2, received = fold(sv, up, ix, nv, ta)
+                # padded slots leave the server untouched
+                return tree_where(mk, sv2, sv), received
+            server, received = jax.lax.scan(
+                step, server, (uploads, idx, n_vis, t_arr, mask)
+            )
+            cohort = jax.vmap(merge)(cohort, received)
+        if finalize is not None:
+            server = finalize(server)
+        # masked write-back: padded slots target the scratch row and revert
+        # to their pre-tick (still-encoded) values, so real rows are
+        # written exactly once
+        enc = cohort if codec is None else codec.encode(cohort)
+        stacked = tree_scatter(stacked, idx, mask_select(mask, enc, enc0))
+        return stacked, server, tel_row
+
+    return tick
+
+
+# donate the carried state so XLA reuses its buffers for the outputs
+# (the per-tick/window input arrays can't alias either output shape, so
+# donating them would only produce unusable-donation warnings); no-op on
+# CPU, where donation is unsupported
+def _donate():
+    return (0, 1) if jax.default_backend() != "cpu" else ()
+
+
+def build_tick_fn(strategy, model, cfg_model, cfg, mesh: Optional[Mesh],
+                  codec=None, slots: Tuple[str, ...] = ()):
+    return jax.jit(
+        tick_body(strategy, model, cfg_model, cfg, mesh, codec, slots),
+        donate_argnums=_donate())
+
+
+def build_megastep_fn(strategy, model, cfg_model, cfg, mesh: Optional[Mesh],
+                      codec=None, slots: Tuple[str, ...] = ()):
+    """One fused dispatch per window: ``lax.scan`` of the tick body over
+    the leading ``[T_w]`` axis of the staged window block.  Tick ``j+1``'s
+    gather reads the rows tick ``j`` scattered (the scan carry), so a
+    client arriving twice in one window sees the mid-window server folds
+    exactly as it would across two separate dispatches — fully-masked
+    padding ticks leave both carries untouched.  The scan's stacked ys
+    are the ``[T_w, n_slots]`` telemetry block: one row per fused tick,
+    returned by the same dispatch that executes the window."""
+    tick = tick_body(strategy, model, cfg_model, cfg, mesh, codec, slots)
+
+    def megastep(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
+        def step(carry, inp):
+            stacked_, server_, tel_row = tick(*carry, *inp)
+            return (stacked_, server_), tel_row
+
+        (stacked, server), tel = jax.lax.scan(
+            step, (stacked, server), (idx, xs, ys, delays, n_vis, t_arr, mask)
+        )
+        return stacked, server, tel
+
+    return jax.jit(megastep, donate_argnums=_donate())
+
+
+def _cache_get(cache, key, anchors):
+    hit = cache.get(key)
+    if hit is not None and all(r() is a for r, a in zip(hit[0], anchors)):
+        return hit[1]
+    return None
+
+
+def _cache_put(cache, key, anchors, value):
+    if len(cache) > 64:  # unbounded model churn guard
+        cache.clear()
+    cache[key] = (tuple(weakref.ref(a) for a in anchors), value)
+
+
+def cfg_cache_key(cfg) -> Tuple:
+    """Runtime-only fields don't affect the traced computation: normalize
+    them out so e.g. benchmark sweeps over T (or prefetch/window/eval
+    toggles) reuse one compilation.  ``state_dtype`` stays in the key —
+    the codec changes the traced encode/decode ops — and so does ``task``
+    (the loss selector); ``workload`` only picks host-side metric bundles.
+    """
+    return dataclasses.astuple(dataclasses.replace(
+        cfg, T=0, sim_time_budget=None, eval_every=0, seed=0,
+        max_cohort=None, prefetch=None, window=1, workload=None,
+        eval_align=False,
+    ))
+
+
+def tick_fn(strategy, model, cfg_model, cfg, K: int, mesh: Optional[Mesh], *,
+            windowed: bool = False, codec=None,
+            slots: Tuple[str, ...] = ()):
+    # key by device ids, not just mesh shape: the compiled fn closes over
+    # the concrete Mesh, and two same-shape meshes over different devices
+    # must not share it.  A non-identity codec additionally closes over
+    # its anchor w0 = model.init(PRNGKey(cfg.seed)) — seed-dependent, so
+    # the seed (normalized out of the cfg key) must re-enter the key or a
+    # second seed's run would decode against the first seed's anchor.
+    mesh_key = (tuple(mesh.shape.items()),
+                tuple(d.id for d in mesh.devices.flat)) \
+        if mesh is not None else None
+    codec_key = cfg.seed if codec is not None and not codec.identity else None
+    key = (id(model), id(cfg_model), type(strategy).__name__, strategy.name,
+           cfg_cache_key(cfg), K, mesh_key, windowed, codec_key, slots)
+    fn = _cache_get(_TICK_CACHE, key, (model, cfg_model))
+    if fn is None:
+        build = build_megastep_fn if windowed else build_tick_fn
+        fn = build(strategy, model, cfg_model, cfg, mesh, codec, slots)
+        _cache_put(_TICK_CACHE, key, (model, cfg_model), fn)
+    return fn
+
+
+def batched_init_fn(strategy, model, cfg):
+    """Cached ``jit(vmap(init_one))`` for the stacked-state fast init, or
+    None when the strategy only provides the per-client path."""
+    init_one = strategy.build_init_client(model, cfg)
+    if init_one is None:
+        return None
+    key = (id(model), type(strategy).__name__, strategy.name,
+           cfg_cache_key(cfg))
+    fn = _cache_get(_INIT_CACHE, key, (model,))
+    if fn is None:
+        fn = jax.jit(jax.vmap(init_one, in_axes=(None, 0)))
+        _cache_put(_INIT_CACHE, key, (model,), fn)
+    return fn
+
+
+def predict_fn(model, per_client: bool):
+    key = (id(model), per_client)
+    fn = _cache_get(_PREDICT_CACHE, key, (model,))
+    if fn is None:
+        one = lambda p, x: model.predict(p, {"x": x})  # noqa: E731
+        fn = jax.jit(jax.vmap(one, in_axes=(0, 0) if per_client else (None, 0)))
+        _cache_put(_PREDICT_CACHE, key, (model,), fn)
+    return fn

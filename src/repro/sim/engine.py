@@ -14,13 +14,33 @@ pending arrivals with pairwise-distinct clients (capped at ``max_cohort``):
 3. evaluation is one batched/padded predict over all clients instead of
    K separate device round-trips.
 
+This module is the **orchestration layer** of a layered run-loop; the
+other layers are separable and individually tested:
+
+* tick *building* (staging buffers, prefetch thread, per-tick host
+  metadata) — ``repro.sim.prefetch``;
+* tick *compilation* (traceable tick body, fused megastep, compiled-fn
+  caches) — ``repro.sim.compile``;
+* *telemetry* (the scan-carried per-tick metric accumulator + log) —
+  ``repro.sim.telemetry``;
+* *evaluation* (batched predict + pluggable metric bundles) —
+  ``repro.sim.evaluation``;
+* *workloads* (model spec + loss + metrics + stream factory, registered
+  by name) — ``repro.sim.workloads``.
+
 The tick loop is **pipelined, device-resident, and windowed**: the async
 engine fuses a *window* of ``RunConfig.window`` consecutive ticks into one
 **megastep** — a single ``jit(lax.scan(tick))`` dispatch over a stacked
 ``[T_w, bucket, ...]`` staging block — eliminating T−1 of every T
-dispatches, host→device transfers, and ``block_until_ready`` syncs.  Host
-batch building runs on a prefetch thread (``repro.sim.prefetch``) that
-fills pre-allocated per-bucket staging buffers (speculating via
+dispatches, host→device transfers, and ``block_until_ready`` syncs.  Each
+fused tick emits one in-scan telemetry row (masked cohort means of the
+scalars the local rounds already compute), so per-tick train-loss /
+staleness / participation curves keep full resolution at any window size
+with zero extra dispatches; with ``RunConfig.eval_align`` windows are
+additionally split at ``eval_every`` fold boundaries so host evals land
+exactly where a ``window=1`` run would put them.  Host batch building
+runs on a prefetch thread (``repro.sim.prefetch``) that fills
+pre-allocated per-bucket staging buffers (speculating via
 ``AsyncScheduler.peek_window``/``commit``) and transfers them while the
 previous window executes, the stacked client state lives on device between
 windows (donated on accelerators), and on a multi-device ``data`` mesh the
@@ -28,9 +48,7 @@ client axis of the stacked state, the cohort inputs (window axis
 replicated), and the batched eval are sharded with the
 ``repro.common.sharding`` cohort rules (single device degrades to the
 plain path).  Evaluation metric extraction is deferred to the end of the
-run so eval dispatches never serialize the tick loop; with ``window > 1``
-evals (and ``trace`` samples) land on window boundaries — a coarser
-cadence, documented in the README.
+run so eval dispatches never serialize the tick loop.
 
 Per-client-state strategies can additionally store the stacked state
 **delta-compressed** (``RunConfig.state_dtype``): parameter-like slots are
@@ -56,23 +74,24 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-import weakref
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.common import dtypes as dtypes_lib
 from repro.common import sharding as sharding_lib
-from repro.common.compat import shard_map
-from repro.common.pytree import tree_stack, tree_take, tree_scatter, tree_where
+from repro.sim import compile as compile_lib
+from repro.sim.evaluation import Evaluator
 from repro.sim.prefetch import TickBuilder, TickPrefetcher, bucket_size
 from repro.sim.profiles import SimClient
 from repro.sim.scheduler import AsyncScheduler, SyncScheduler, SweepScheduler
 from repro.sim.streaming import OnlineStream
+from repro.sim.telemetry import TelemetryLog, split_at_evals
 from repro.sim.traces import utilization as availability_utilization
+from repro.sim.workloads import resolve_eval_report
 
 Array = np.ndarray
 
@@ -91,7 +110,12 @@ class RunConfig:
     eta: float = 0.01  # eta_bar (paper used 0.001 with many more iters)
     lam: float = 1.0  # prox coefficient lambda
     beta: float = 0.001  # decay coefficient
-    task: str = "regression"  # or "classification"
+    # the traceable loss selector ("regression" | "classification" |
+    # "multilabel"); `workload`, when set, names a registered
+    # repro.sim.workloads entry whose metric bundle replaces the
+    # task-string default at eval time (the pair must agree)
+    task: str = "regression"
+    workload: Optional[str] = None
     eval_every: int = 10
     seed: int = 0
     # ablations / robustness knobs
@@ -112,12 +136,17 @@ class RunConfig:
     # thread would steal cycles from XLA; bit-identical either way)
     prefetch: Optional[bool] = None
     # megastep: fuse `window` consecutive async ticks into one
-    # jit(lax.scan) dispatch (1 = per-tick dispatch; evals/trace samples
-    # land on window boundaries).  `state_dtype` selects the storage dtype
-    # of the delta-compressed stacked client state for strategies with a
-    # ClientStateCodec ("fp32"/None = identity, bitwise; "bf16" halves
-    # stacked-state memory, tolerance-equal trajectories).
+    # jit(lax.scan) dispatch (1 = per-tick dispatch).  `eval_align` splits
+    # windows at `eval_every` fold boundaries so evals land exactly where
+    # a window=1 run would put them (full loss-curve resolution at the
+    # price of extra dispatches; off = PR-4 behavior, evals on window
+    # boundaries — per-tick *train*-loss telemetry is free either way).
+    # `state_dtype` selects the storage dtype of the delta-compressed
+    # stacked client state for strategies with a ClientStateCodec
+    # ("fp32"/None = identity, bitwise; "bf16" halves stacked-state
+    # memory, tolerance-equal trajectories).
     window: int = 1
+    eval_align: bool = False
     state_dtype: Optional[str] = None
     # feature pass lowering: None = auto (Pallas kernel above the ops.py
     # size threshold on TPU, jnp otherwise); True/False force it.  The
@@ -146,7 +175,11 @@ class Strategy:
     ``build_*`` methods return *traceable* functions (no ``jax.jit`` — the
     engine jits the whole tick).  Per-member signatures:
 
-    * local(carry, bcast, xs, ys, delay, n_vis, t_arr) -> (carry', upload)
+    * local(carry, bcast, xs, ys, delay, n_vis, t_arr)
+          -> (carry', upload, telemetry)
+      where ``telemetry`` maps each name in :meth:`telemetry_slots` to a
+      per-client scalar (the engine reduces them to masked cohort means
+      inside the tick — the in-scan telemetry rows)
     * fold(server, upload, idx, n_vis, t_arr) -> (server', received)
     * merge(carry, received) -> carry   (post-fold download to the client)
     * finalize(server) -> server        (sync barrier, e.g. FedAvg average)
@@ -157,6 +190,15 @@ class Strategy:
     uses_dropout: bool = True
     pooled: bool = False  # Global baseline: one virtual member, pooled data
     eval_per_client: bool = False  # Local baseline: per-client eval params
+
+    # -- telemetry -------------------------------------------------------
+    def telemetry_slots(self, cfg: RunConfig) -> Tuple[str, ...]:
+        """Names of the per-client scalars ``local`` emits for the
+        in-scan telemetry accumulator.  Every strategy's local round
+        already computes its training loss, so ``train_loss`` is the
+        default slot; override to add algorithm-specific signals (the
+        values must be keys of the telemetry dict ``local`` returns)."""
+        return ("train_loss",)
 
     # -- state construction ---------------------------------------------
     def init_client(self, model, cfg: RunConfig, w0,
@@ -254,242 +296,6 @@ def stack_batches(stream: OnlineStream, t: int, batch_size: int,
 
 
 # ---------------------------------------------------------------------------
-# Compiled-fn caches: one compilation per (model, strategy, config, shapes)
-# — shared across runs, NOT rebuilt per runner invocation.
-# ---------------------------------------------------------------------------
-
-_TICK_CACHE: Dict[Any, Tuple[Any, Any]] = {}
-_PREDICT_CACHE: Dict[Any, Tuple[Any, Any]] = {}
-_INIT_CACHE: Dict[Any, Tuple[Any, Any]] = {}
-
-
-def _mask_select(mask, new, old):
-    """Per-member select: mask (P,) broadcast against stacked leaves."""
-    return jax.tree.map(
-        lambda n, o: jnp.where(mask.reshape(mask.shape + (1,) * (n.ndim - 1)),
-                               n, o),
-        new, old,
-    )
-
-
-def _tick_body(strategy: Strategy, model, cfg_model, cfg: RunConfig,
-               mesh: Optional[Mesh], codec):
-    """The traceable one-tick update ``(stacked, server, *inputs) ->
-    (stacked, server)`` — jitted standalone for sync/sweep schedules,
-    scanned over a window axis by the async megastep."""
-    local = strategy.build_local(model, cfg)
-    fold = strategy.build_fold(model, cfg_model, cfg)
-    merge = strategy.build_merge(model, cfg)
-    finalize = strategy.build_finalize(model, cfg)
-    vlocal = jax.vmap(local, in_axes=(0, None, 0, 0, 0, 0, 0))
-
-    def tick(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
-        enc0 = tree_take(stacked, idx)
-        # the stacked state may be delta-compressed: reconstruct the
-        # cohort's working (master-dtype) state right at the gather —
-        # identity (and fused away) for the fp32 codec
-        cohort0 = enc0 if codec is None else codec.decode(enc0)
-        bcast = strategy.server_broadcast(server)
-        # the vmapped local rounds are embarrassingly parallel over the
-        # cohort axis: on a mesh, run them as explicit SPMD shards (the
-        # compile-time bucket makes divisibility a trace-time property;
-        # non-divisible small buckets fall back to the single-program path)
-        if mesh is not None and idx.shape[0] % mesh.devices.size == 0:
-            sharded_local = shard_map(
-                vlocal, mesh=mesh,
-                in_specs=(P("data"), P(), P("data"), P("data"), P("data"),
-                          P("data"), P("data")),
-                out_specs=(P("data"), P("data")),
-                check_vma=False,
-            )
-            cohort, uploads = sharded_local(
-                cohort0, bcast, xs, ys, delays, n_vis, t_arr)
-            if fold is not None:
-                # one explicit all-gather here, so the sequential fold
-                # scan below runs replicated with no per-step collectives
-                rep = sharding_lib.replicated(mesh)
-                uploads = jax.lax.with_sharding_constraint(
-                    uploads, jax.tree.map(lambda _: rep, uploads))
-        else:
-            cohort, uploads = vlocal(
-                cohort0, bcast, xs, ys, delays, n_vis, t_arr)
-        if fold is not None:
-            def step(sv, inp):
-                up, ix, nv, ta, mk = inp
-                sv2, received = fold(sv, up, ix, nv, ta)
-                # padded slots leave the server untouched
-                return tree_where(mk, sv2, sv), received
-            server, received = jax.lax.scan(
-                step, server, (uploads, idx, n_vis, t_arr, mask)
-            )
-            cohort = jax.vmap(merge)(cohort, received)
-        if finalize is not None:
-            server = finalize(server)
-        # masked write-back: padded slots target the scratch row and revert
-        # to their pre-tick (still-encoded) values, so real rows are
-        # written exactly once
-        enc = cohort if codec is None else codec.encode(cohort)
-        stacked = tree_scatter(stacked, idx, _mask_select(mask, enc, enc0))
-        return stacked, server
-
-    return tick
-
-
-# donate the carried state so XLA reuses its buffers for the outputs
-# (the per-tick/window input arrays can't alias either output shape, so
-# donating them would only produce unusable-donation warnings); no-op on
-# CPU, where donation is unsupported
-def _donate():
-    return (0, 1) if jax.default_backend() != "cpu" else ()
-
-
-def _build_tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig,
-                   mesh: Optional[Mesh], codec=None):
-    return jax.jit(_tick_body(strategy, model, cfg_model, cfg, mesh, codec),
-                   donate_argnums=_donate())
-
-
-def _build_megastep_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig,
-                       mesh: Optional[Mesh], codec=None):
-    """One fused dispatch per window: ``lax.scan`` of the tick body over
-    the leading ``[T_w]`` axis of the staged window block.  Tick ``j+1``'s
-    gather reads the rows tick ``j`` scattered (the scan carry), so a
-    client arriving twice in one window sees the mid-window server folds
-    exactly as it would across two separate dispatches — fully-masked
-    padding ticks leave both carries untouched."""
-    tick = _tick_body(strategy, model, cfg_model, cfg, mesh, codec)
-
-    def megastep(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
-        def step(carry, inp):
-            return tick(*carry, *inp), None
-
-        (stacked, server), _ = jax.lax.scan(
-            step, (stacked, server), (idx, xs, ys, delays, n_vis, t_arr, mask)
-        )
-        return stacked, server
-
-    return jax.jit(megastep, donate_argnums=_donate())
-
-
-def _cache_get(cache, key, anchors):
-    hit = cache.get(key)
-    if hit is not None and all(r() is a for r, a in zip(hit[0], anchors)):
-        return hit[1]
-    return None
-
-
-def _cache_put(cache, key, anchors, value):
-    if len(cache) > 64:  # unbounded model churn guard
-        cache.clear()
-    cache[key] = (tuple(weakref.ref(a) for a in anchors), value)
-
-
-def _cfg_cache_key(cfg: RunConfig) -> Tuple:
-    """Runtime-only fields don't affect the traced computation: normalize
-    them out so e.g. benchmark sweeps over T (or prefetch/window toggles)
-    reuse one compilation.  ``state_dtype`` stays in the key — the codec
-    changes the traced encode/decode ops."""
-    return dataclasses.astuple(dataclasses.replace(
-        cfg, T=0, sim_time_budget=None, eval_every=0, seed=0,
-        max_cohort=None, prefetch=None, window=1,
-    ))
-
-
-def _tick_fn(strategy: Strategy, model, cfg_model, cfg: RunConfig, K: int,
-             mesh: Optional[Mesh], *, windowed: bool = False, codec=None):
-    # key by device ids, not just mesh shape: the compiled fn closes over
-    # the concrete Mesh, and two same-shape meshes over different devices
-    # must not share it.  A non-identity codec additionally closes over
-    # its anchor w0 = model.init(PRNGKey(cfg.seed)) — seed-dependent, so
-    # the seed (normalized out of the cfg key) must re-enter the key or a
-    # second seed's run would decode against the first seed's anchor.
-    mesh_key = (tuple(mesh.shape.items()),
-                tuple(d.id for d in mesh.devices.flat)) \
-        if mesh is not None else None
-    codec_key = cfg.seed if codec is not None and not codec.identity else None
-    key = (id(model), id(cfg_model), type(strategy).__name__, strategy.name,
-           _cfg_cache_key(cfg), K, mesh_key, windowed, codec_key)
-    fn = _cache_get(_TICK_CACHE, key, (model, cfg_model))
-    if fn is None:
-        build = _build_megastep_fn if windowed else _build_tick_fn
-        fn = build(strategy, model, cfg_model, cfg, mesh, codec)
-        _cache_put(_TICK_CACHE, key, (model, cfg_model), fn)
-    return fn
-
-
-def _batched_init_fn(strategy: Strategy, model, cfg: RunConfig):
-    """Cached ``jit(vmap(init_one))`` for the stacked-state fast init, or
-    None when the strategy only provides the per-client path."""
-    init_one = strategy.build_init_client(model, cfg)
-    if init_one is None:
-        return None
-    key = (id(model), type(strategy).__name__, strategy.name,
-           _cfg_cache_key(cfg))
-    fn = _cache_get(_INIT_CACHE, key, (model,))
-    if fn is None:
-        fn = jax.jit(jax.vmap(init_one, in_axes=(None, 0)))
-        _cache_put(_INIT_CACHE, key, (model,), fn)
-    return fn
-
-
-def _predict_fn(model, per_client: bool):
-    key = (id(model), per_client)
-    fn = _cache_get(_PREDICT_CACHE, key, (model,))
-    if fn is None:
-        one = lambda p, x: model.predict(p, {"x": x})  # noqa: E731
-        fn = jax.jit(jax.vmap(one, in_axes=(0, 0) if per_client else (None, 0)))
-        _cache_put(_PREDICT_CACHE, key, (model,), fn)
-    return fn
-
-
-# ---------------------------------------------------------------------------
-# Batched evaluation: one padded predict over every client's test split
-# ---------------------------------------------------------------------------
-
-
-class _Evaluator:
-    """Batched eval in two phases: ``predict_device`` dispatches one padded
-    predict and returns the device array (cheap, non-serializing);
-    ``metrics_from`` pulls it to host and reduces — deferred to the end of
-    the run so eval never stalls the tick pipeline."""
-
-    def __init__(self, model, clients: Sequence[SimClient], task: str,
-                 per_client: bool):
-        self.task = task
-        self.per_client = per_client
-        self.predict = _predict_fn(model, per_client)
-        self.lens = [len(c.test_x) for c in clients]
-        n_max = max(self.lens)
-        K = len(clients)
-        self.K = K
-        x0 = clients[0].test_x
-        X = np.zeros((K, n_max) + x0.shape[1:], x0.dtype)
-        for k, c in enumerate(clients):
-            X[k, : self.lens[k]] = c.test_x
-        self.X = jnp.asarray(X)
-        self.targets = np.concatenate([c.test_y for c in clients])
-
-    def predict_device(self, params):
-        return self.predict(params, self.X)
-
-    def metrics_from(self, preds_device) -> Dict[str, float]:
-        # deferred import: repro.core packages the algorithm layer above
-        # this engine; importing it at module scope would be circular
-        from repro.core import metrics as M
-
-        preds = np.asarray(preds_device)[: self.K]
-        pred = np.concatenate([preds[k, :n] for k, n in enumerate(self.lens)])
-        if self.task == "classification":
-            return M.classification_report(pred, self.targets)
-        return M.regression_report(
-            pred[..., 0] if pred.ndim > 1 else pred, self.targets
-        )
-
-    def __call__(self, params) -> Dict[str, float]:
-        return self.metrics_from(self.predict_device(params))
-
-
-# ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
 
@@ -514,6 +320,7 @@ def run_strategy(
     max_cohort: Optional[int] = None,
     trace: Optional[List] = None,
     stats: Optional[Dict] = None,
+    telemetry: Optional[TelemetryLog] = None,
     prefetch: Optional[bool] = None,
     window: Optional[int] = None,
     mesh: Union[str, None, Mesh] = "auto",
@@ -524,18 +331,23 @@ def run_strategy(
     dispatch pattern; None batches every pending arrival).  ``window``
     overrides ``cfg.window``: the number of consecutive async ticks fused
     into one megastep dispatch (``jit(lax.scan(tick))`` over a stacked
-    window block); evals and ``trace`` samples land on window boundaries.
-    ``trace``, when a list, receives ``(t, eval-params-as-numpy)`` after
-    every dispatch — the hook the equivalence tests use.  ``stats``, when
-    a dict, is filled with ``{"ticks", "windows", "iters", "sim_time"}``
-    counters plus the per-phase wall breakdown ``{"host_build_s",
-    "device_s", "eval_s"}``, the ``{"prefetch", "devices", "window",
-    "state_dtype", "tick_cache_size"}`` run descriptors, and the
-    ``{"stacked_state_bytes", "peak_live_device_bytes"}`` memory columns
-    (benchmark hooks).  ``prefetch`` overrides ``cfg.prefetch`` (None →
-    adaptive: on for accelerators and >=4-core hosts).  ``mesh="auto"``
-    shards the client axis over
-    every local device (``repro.common.sharding.data_mesh``); pass None to
+    window block); evals and ``trace`` samples land on window boundaries
+    unless ``cfg.eval_align`` splits windows at the eval cadence.
+    ``telemetry``, when a :class:`~repro.sim.telemetry.TelemetryLog`, is
+    filled with one per-tick record (in-scan train-loss + participation /
+    staleness) regardless of window size — finalized when the run
+    returns.  ``trace``, when a list, receives ``(t,
+    eval-params-as-numpy)`` after every dispatch — the hook the
+    equivalence tests use.  ``stats``, when a dict, is filled with
+    ``{"ticks", "windows", "iters", "sim_time"}`` counters plus the
+    per-phase wall breakdown ``{"host_build_s", "device_s", "eval_s"}``,
+    the ``{"prefetch", "devices", "window", "state_dtype",
+    "tick_cache_size"}`` run descriptors, the ``{"stacked_state_bytes",
+    "peak_live_device_bytes"}`` memory columns (benchmark hooks), and the
+    telemetry summary (``train_loss_final`` etc.).  ``prefetch``
+    overrides ``cfg.prefetch`` (None → adaptive: on for accelerators and
+    >=4-core hosts).  ``mesh="auto"`` shards the client axis over every
+    local device (``repro.common.sharding.data_mesh``); pass None to
     force the single-device path or an explicit 1-D ``data`` Mesh.
     """
     clients = list(clients)
@@ -553,11 +365,14 @@ def run_strategy(
     E, B = cfg.local_epochs, cfg.batch_size
     max_cohort = max_cohort if max_cohort is not None else cfg.max_cohort
     W = max(1, int(window if window is not None else cfg.window))
-    # validate up front even for codec-less strategies: a typo'd dtype
-    # must raise, not ride silently into the stats/BENCH columns
+    # fail-fast validation before any compile/run cost: a typo'd dtype,
+    # task, or workload name must raise readably, not ride silently into
+    # the stats/BENCH columns (or report the wrong task's metrics)
     dtypes_lib.resolve_state_dtype(cfg.state_dtype)
+    eval_report = resolve_eval_report(cfg)
     w0 = model.init(jax.random.PRNGKey(cfg.seed))
     codec = strategy.state_codec(model, cfg, w0)
+    slots = tuple(strategy.telemetry_slots(cfg))
     drop = cfg.dropout_frac if strategy.uses_dropout else 0.0
     skip = cfg.periodic_dropout if strategy.uses_dropout else 0.0
 
@@ -592,12 +407,14 @@ def run_strategy(
     def _n0(c: Optional[SimClient]) -> float:
         return float(c.stream.visible(0)) if c is not None else 0.0
 
-    init_batched = _batched_init_fn(strategy, model, cfg)
+    init_batched = compile_lib.batched_init_fn(strategy, model, cfg)
     if init_batched is not None:
         n0s = np.array([_n0(c) for c in members]
                        + [_n0(members[0])] * (n_rows - n_members), np.float32)
         stacked = init_batched(w0, jnp.asarray(n0s))
     else:
+        from repro.common.pytree import tree_stack
+
         states = [strategy.init_client(model, cfg, w0, c) for c in members]
         states += [strategy.init_client(model, cfg, w0, members[0])
                    ] * (n_rows - n_members)
@@ -610,9 +427,13 @@ def run_strategy(
             lambda x: sharding_lib.client_sharding(x.shape, mesh), stacked))
         server = jax.device_put(server, sharding_lib.replicated(mesh))
     windowed = strategy.schedule == "async"
-    tick_fn = _tick_fn(strategy, model, cfg_model, cfg, K, mesh,
-                       windowed=windowed, codec=codec)
-    evaluator = _Evaluator(model, clients, cfg.task, strategy.eval_per_client)
+    tick_fn = compile_lib.tick_fn(strategy, model, cfg_model, cfg, K, mesh,
+                                  windowed=windowed, codec=codec, slots=slots)
+    evaluator = Evaluator(model, clients, eval_report,
+                          strategy.eval_per_client)
+    telem = telemetry if telemetry is not None else TelemetryLog(slots)
+    if telem.slots != slots:
+        telem.slots = slots  # caller-constructed logs adopt the run's slots
     by_id = {c.cid: c for c in clients}
 
     def transfer(name, arr):
@@ -656,8 +477,9 @@ def run_strategy(
     def dispatch(pt):
         nonlocal stacked, server, device_s, n_ticks, n_windows, peak_live
         d0 = time.perf_counter()
-        stacked, server = tick_fn(stacked, server, *pt.arrays)
+        stacked, server, tel = tick_fn(stacked, server, *pt.arrays)
         jax.block_until_ready((stacked, server))
+        telem.append(pt, tel)
         device_s += time.perf_counter() - d0
         n_ticks += pt.n_ticks
         n_windows += 1
@@ -701,7 +523,12 @@ def run_strategy(
             replay.  In the steady state arrivals-per-tick is stable, so
             runs span whole windows; bucket switches (the first
             full-cohort tick, the drained tail, churn) cost one extra
-            dispatch each — never a wrong bit.
+            dispatch each — never a wrong bit.  With ``cfg.eval_align``
+            windows are first split at ``eval_every`` fold boundaries
+            (``repro.sim.telemetry.split_at_evals``), so the consuming
+            loop's eval check fires at exactly the ticks a window=1 run
+            would evaluate after — a dispatch-count trade, still never a
+            wrong bit.
             """
             tp = 0
             # the iteration budget advances per *fold*: charge it only
@@ -722,31 +549,38 @@ def run_strategy(
                     sched.commit()
                     continue  # window held only empty-split clients
                 sched.commit()
-                groups: List[Tuple[int, List]] = []
-                for tk in kept:
-                    b = bucket_size(len(tk), pad)
-                    if groups and groups[-1][0] == b:
-                        groups[-1][1].append(tk)
-                    else:
-                        groups.append((b, [tk]))
-                # each same-bucket run is split greedily into exact
-                # power-of-two chunks (8+2 instead of 16 with 6 masked
-                # ticks): a fully-masked padding tick costs a whole
-                # bucket's compute, an extra dispatch costs microseconds.
-                # Blocks are built only as the queue drains: the staging
-                # slots rotate over NSLOTS buffers, so at most (consumer's
-                # current + queued + being-built) blocks are in flight.
-                for _, g in groups:
-                    i = 0
-                    while i < len(g):
-                        n = 1 << ((len(g) - i).bit_length() - 1)
-                        chunk = g[i:i + n]
-                        i += n
-                        pt = builder.build_window(
-                            chunk, t_start=tp, window=W,
-                            sim_time=chunk[-1][-1].time)
-                        tp = pt.t_end
-                        yield pt
+                if cfg.eval_align and W > 1:
+                    segments = split_at_evals(kept, tp, cfg.eval_every,
+                                              count=kept_count)
+                else:
+                    segments = [kept]
+                for seg in segments:
+                    groups: List[Tuple[int, List]] = []
+                    for tk in seg:
+                        b = bucket_size(len(tk), pad)
+                        if groups and groups[-1][0] == b:
+                            groups[-1][1].append(tk)
+                        else:
+                            groups.append((b, [tk]))
+                    # each same-bucket run is split greedily into exact
+                    # power-of-two chunks (8+2 instead of 16 with 6
+                    # masked ticks): a fully-masked padding tick costs a
+                    # whole bucket's compute, an extra dispatch costs
+                    # microseconds.  Blocks are built only as the queue
+                    # drains: the staging slots rotate over NSLOTS
+                    # buffers, so at most (consumer's current + queued +
+                    # being-built) blocks are in flight.
+                    for _, g in groups:
+                        i = 0
+                        while i < len(g):
+                            n = 1 << ((len(g) - i).bit_length() - 1)
+                            chunk = g[i:i + n]
+                            i += n
+                            pt = builder.build_window(
+                                chunk, t_start=tp, window=W,
+                                sim_time=chunk[-1][-1].time)
+                            tp = pt.t_end
+                            yield pt
 
         if not trainable:
             source = iter(())
@@ -788,8 +622,10 @@ def run_strategy(
                       if strategy.pooled else None)
             if strategy.pooled:
                 arrivals = arrivals[:1]
+            # advance=False: a sync/sweep round's telemetry stamp is the
+            # round index t itself, matching the eval history points
             pt = builder.build(arrivals, [t] * len(arrivals), sim_time,
-                               pooled_batch=pooled)
+                               pooled_batch=pooled, advance=False)
             dispatch(pt)
             sim_time = sim_time + round_time if strategy.schedule == "sync" \
                 else float(t)
@@ -802,6 +638,7 @@ def run_strategy(
     for (te, ste, we, preds) in pending_evals:
         history.append(HistoryPoint(te, ste, we, evaluator.metrics_from(preds)))
     eval_s += time.perf_counter() - e0
+    telem.finalize()
     peak_live = max(peak_live, _live_device_bytes())
     if stats is not None:
         stats.update(
@@ -827,6 +664,8 @@ def run_strategy(
             deferred_arrivals=int(getattr(sched, "deferred", 0)),
             retired_clients=int(getattr(sched, "retired", 0)),
         )
+        for k, v in telem.summary().items():
+            stats[k] = round(v, 6) if isinstance(v, float) else v
         if hasattr(tick_fn, "_cache_size"):
             stats["tick_cache_size"] = int(tick_fn._cache_size())
     return history

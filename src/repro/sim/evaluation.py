@@ -1,0 +1,112 @@
+"""Batched evaluation for the cohort engine.
+
+:class:`Evaluator` runs one padded predict over every client's test split
+and reduces it with a **metric bundle** — a plain ``(preds, targets) ->
+{name: value}`` function supplied by the run's workload
+(``repro.sim.workloads``) instead of the historical ``RunConfig.task``
+string-switch.  The three stock bundles (regression / single-label
+classification / multi-label classification) live here so workload
+definitions and the legacy task-string path share one implementation.
+
+The evaluator is the engine's host-side **oracle**: the in-scan telemetry
+accumulator (``repro.sim.telemetry``) emits per-tick summaries from
+inside the megastep, and the equivalence tests check them against this
+path.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.compile import predict_fn
+
+Array = np.ndarray
+ReportFn = Callable[[Array, Array], Dict[str, float]]
+
+
+# ---------------------------------------------------------------------------
+# Stock metric bundles (deferred metrics import: repro.core packages the
+# algorithm layer above the sim engine; importing it at module scope
+# would be circular)
+# ---------------------------------------------------------------------------
+
+
+def regression_report(preds: Array, targets: Array) -> Dict[str, float]:
+    """MAE / SMAPE over flattened predictions (paper Table 5.1 columns)."""
+    from repro.core import metrics as M
+
+    return M.regression_report(
+        preds[..., 0] if preds.ndim > 1 else preds, targets)
+
+
+def classification_report(preds: Array, targets: Array) -> Dict[str, float]:
+    """Single-label F1/precision/recall/BA/accuracy from (n, C) logits."""
+    from repro.core import metrics as M
+
+    return M.classification_report(preds, targets)
+
+
+def multilabel_report(preds: Array, targets: Array) -> Dict[str, float]:
+    """Multi-label micro/macro-F1, subset accuracy, Hamming loss from
+    (n, C) logits against multi-hot targets."""
+    from repro.core import metrics as M
+
+    return M.multilabel_report(preds, targets)
+
+
+TASK_REPORTS: Dict[str, ReportFn] = {
+    "regression": regression_report,
+    "classification": classification_report,
+    "multilabel": multilabel_report,
+}
+
+
+def task_report(task: str) -> ReportFn:
+    """The metric bundle for a bare task string (no workload attached)."""
+    if task not in TASK_REPORTS:
+        raise ValueError(
+            f"unknown task {task!r}; expected one of "
+            f"{sorted(TASK_REPORTS)} (or set RunConfig.workload to a "
+            "registered workload name)")
+    return TASK_REPORTS[task]
+
+
+# ---------------------------------------------------------------------------
+# Batched evaluation: one padded predict over every client's test split
+# ---------------------------------------------------------------------------
+
+
+class Evaluator:
+    """Batched eval in two phases: ``predict_device`` dispatches one padded
+    predict and returns the device array (cheap, non-serializing);
+    ``metrics_from`` pulls it to host and reduces with the metric bundle —
+    deferred to the end of the run so eval never stalls the tick pipeline."""
+
+    def __init__(self, model, clients: Sequence, report: ReportFn,
+                 per_client: bool):
+        self.report = report
+        self.per_client = per_client
+        self.predict = predict_fn(model, per_client)
+        self.lens = [len(c.test_x) for c in clients]
+        n_max = max(self.lens)
+        K = len(clients)
+        self.K = K
+        x0 = clients[0].test_x
+        X = np.zeros((K, n_max) + x0.shape[1:], x0.dtype)
+        for k, c in enumerate(clients):
+            X[k, : self.lens[k]] = c.test_x
+        self.X = jnp.asarray(X)
+        self.targets = np.concatenate([c.test_y for c in clients])
+
+    def predict_device(self, params):
+        return self.predict(params, self.X)
+
+    def metrics_from(self, preds_device) -> Dict[str, float]:
+        preds = np.asarray(preds_device)[: self.K]
+        pred = np.concatenate([preds[k, :n] for k, n in enumerate(self.lens)])
+        return self.report(pred, self.targets)
+
+    def __call__(self, params) -> Dict[str, float]:
+        return self.metrics_from(self.predict_device(params))

@@ -56,12 +56,14 @@ class StalenessMeter:
         self.n = 0
         self._last: Dict[int, int] = {}
 
-    def observe(self, cid: int, t: int) -> None:
+    def observe(self, cid: int, t: int) -> int:
+        """Record one arrival; returns its staleness (telemetry hook)."""
         stal = t - self._last.get(cid, 0)
         self._last[cid] = t
         self.sum += stal
         self.max = max(self.max, stal)
         self.n += 1
+        return stal
 
     @property
     def mean(self) -> float:
@@ -84,6 +86,20 @@ def bucket_size(n_real: int, pad: int) -> int:
     return min(_pow2(max(pad, 1)), _pow2(max(n_real, 1)))
 
 
+@dataclasses.dataclass(frozen=True)
+class TickMeta:
+    """Host-side per-tick bookkeeping recorded by the builder in fold
+    order: the telemetry layer joins these rows with the in-scan metric
+    block the dispatch returns (``repro.sim.telemetry``), so per-tick
+    participation/staleness summaries cost no device work at all."""
+
+    t_end: int  # global iteration after this tick's folds
+    sim_time: float  # arrival instant of the tick's last fold
+    n_folds: int  # arrivals folded (participation)
+    staleness_sum: int  # sum over the tick's arrivals
+    staleness_max: int
+
+
 @dataclasses.dataclass
 class PreparedTick:
     """One tick's (or one fused window's) device-resident inputs plus its
@@ -94,6 +110,7 @@ class PreparedTick:
     (and, on a mesh, sharded) by the builder.  For a megastep window
     every array carries an extra leading ``[T_w]`` axis (one slice per
     fused tick) and ``n_ticks`` counts the real (non-padding) ticks.
+    ``ticks_meta`` carries one :class:`TickMeta` per real tick.
     """
 
     arrivals: List[Arrival]  # trainable arrivals, in fold order
@@ -102,6 +119,7 @@ class PreparedTick:
     sim_time: float  # simulated time of the last arrival
     arrays: Tuple  # (idx, xs, ys, delays, n_vis, t_arr, mask)
     n_ticks: int = 1  # real scheduler ticks fused into this dispatch
+    ticks_meta: Tuple[TickMeta, ...] = ()
 
 
 class TickBuilder:
@@ -188,14 +206,17 @@ class TickBuilder:
         return self._tmpl
 
     def build(self, arrivals: Sequence[Arrival], times: Sequence[int],
-              sim_time: float, pooled_batch=None) -> PreparedTick:
+              sim_time: float, pooled_batch=None, *,
+              advance: bool = True) -> PreparedTick:
         """Fill one tick's staging buffers and transfer them to device.
 
         ``times`` gives the global-iteration stamp of each arrival (the
         fold order t, t+1, ... for async schedules; a constant round index
-        for sync ones).  Minibatches are drawn in arrival order, exactly
-        as the inline loop did — the per-client stream rngs advance
-        identically, which the prefetch determinism tests pin down.
+        for sync ones — those pass ``advance=False`` so the tick's
+        telemetry stamp is the round itself, not round+1).  Minibatches
+        are drawn in arrival order, exactly as the inline loop did — the
+        per-client stream rngs advance identically, which the prefetch
+        determinism tests pin down.
         """
         t0 = time.perf_counter()
         n_real = len(arrivals)
@@ -210,9 +231,12 @@ class TickBuilder:
         meta["mask"].fill(False)
         tx, ty = self._slot_template(pooled_batch)
         xs, ys = self._data_slot((P,), slot, tx, ty)
+        stal_sum, stal_max = 0, 0
         for i, a in enumerate(arrivals):
             t_i = times[i]
-            self.staleness.observe(a.cid, t_i)
+            stal = self.staleness.observe(a.cid, t_i)
+            stal_sum += stal
+            stal_max = max(stal_max, stal)
             meta["idx"][i] = 0 if self.pooled else a.cid
             meta["delays"][i] = a.delay
             meta["t_arr"][i] = t_i
@@ -234,13 +258,17 @@ class TickBuilder:
             self.transfer("mask", meta["mask"]),
         )
         self.host_build_s += time.perf_counter() - t0
+        t_end = (times[-1] + (1 if advance else 0)) if len(times) else 0
         return PreparedTick(
             arrivals=list(arrivals),
             t_start=times[0] if len(times) else 0,
             # async fold order stamps t, t+1, ...; sync rounds stamp a
-            # constant t and ignore t_end
-            t_end=(times[-1] + 1) if len(times) else 0,
+            # constant t (advance=False) and ignore t_end
+            t_end=t_end,
             sim_time=sim_time, arrays=arrays,
+            ticks_meta=(TickMeta(t_end=t_end, sim_time=sim_time,
+                                 n_folds=n_real, staleness_sum=stal_sum,
+                                 staleness_max=stal_max),),
         )
 
     def build_window(self, ticks: Sequence[Sequence[Arrival]], *,
@@ -276,9 +304,13 @@ class TickBuilder:
         xs, ys = self._data_slot((Tw, P), slot, tx, ty)
         t_run = t_start
         flat: List[Arrival] = []
+        ticks_meta: List[TickMeta] = []
         for j, tk in enumerate(ticks):
+            stal_sum, stal_max = 0, 0
             for i, a in enumerate(tk):
-                self.staleness.observe(a.cid, t_run)
+                stal = self.staleness.observe(a.cid, t_run)
+                stal_sum += stal
+                stal_max = max(stal_max, stal)
                 meta["idx"][j, i] = a.cid
                 meta["delays"][j, i] = a.delay
                 meta["t_arr"][j, i] = t_run
@@ -289,6 +321,9 @@ class TickBuilder:
                     c.stream.batch_into(t_run, xs[j, i, e], ys[j, i, e])
                 t_run += 1
                 flat.append(a)
+            ticks_meta.append(TickMeta(
+                t_end=t_run, sim_time=tk[-1].time, n_folds=len(tk),
+                staleness_sum=stal_sum, staleness_max=stal_max))
         arrays = (
             self.window_transfer("idx", meta["idx"]),
             self.window_transfer("xs", xs),
@@ -302,6 +337,7 @@ class TickBuilder:
         return PreparedTick(
             arrivals=flat, t_start=t_start, t_end=t_run,
             sim_time=sim_time, arrays=arrays, n_ticks=len(ticks),
+            ticks_meta=tuple(ticks_meta),
         )
 
 

@@ -25,6 +25,7 @@ from repro.sim.engine import RunConfig, stack_batches
 from repro.sim.prefetch import StalenessMeter
 from repro.sim.scheduler import AsyncScheduler, SyncScheduler
 from repro.sim.traces import utilization
+from repro.sim.workloads import resolve_eval_report
 
 
 class _ChurnStats:
@@ -52,20 +53,16 @@ class _ChurnStats:
         )
 
 
-def _eval_all_per_client(model, params, clients, task: str):
-    """The seed's ``_eval_all``: K separate predict round-trips."""
-    from repro.core import metrics as M
-
+def _eval_all_per_client(model, params, clients, cfg: RunConfig):
+    """The seed's ``_eval_all``: K separate predict round-trips, reduced
+    with the run's metric bundle (workload-aware, like the engine)."""
     preds, targets = [], []
     for c in clients:
         p = np.asarray(model.predict(params, {"x": jnp.asarray(c.test_x)}))
         preds.append(p)
         targets.append(c.test_y)
-    pred = np.concatenate(preds)
-    tgt = np.concatenate(targets)
-    if task == "classification":
-        return M.classification_report(pred, tgt)
-    return M.regression_report(pred[..., 0] if pred.ndim > 1 else pred, tgt)
+    return resolve_eval_report(cfg)(np.concatenate(preds),
+                                    np.concatenate(targets))
 
 
 def _make_scheduler(clients, cfg: RunConfig) -> AsyncScheduler:
@@ -79,8 +76,15 @@ def _make_scheduler(clients, cfg: RunConfig) -> AsyncScheduler:
 
 def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
                          collect_trace: bool = True,
-                         stats: Optional[Dict] = None) -> Dict[int, object]:
-    """ASO-Fed, one arrival at a time.  Returns {t: server w (numpy)}."""
+                         stats: Optional[Dict] = None,
+                         losses: Optional[Dict[int, float]] = None
+                         ) -> Dict[int, object]:
+    """ASO-Fed, one arrival at a time.  Returns {t: server w (numpy)}.
+
+    ``losses``, when a dict, receives the per-arrival surrogate train
+    loss keyed by the fold's global iteration — the host-side oracle the
+    engine's in-scan telemetry accumulator is tested against.
+    """
     w0 = model.init(jax.random.PRNGKey(cfg.seed))
     sched = _make_scheduler(clients, cfg)
     active = sched.active
@@ -94,7 +98,7 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
 
     @jax.jit
     def local_round(st, xs, ys, delay, n_new):
-        g, _ = grad_fn(st.params, st.server_params, xs, ys)
+        g, loss = grad_fn(st.params, st.server_params, xs, ys)
         zeta = jax.tree.map(lambda gs, vp, hp: gs - vp + hp, g, st.v, st.h)
         r = (client_lib.dynamic_multiplier(st.delay_sum, st.rounds, delay)
              if cfg.dynamic_lr else jnp.ones(()))
@@ -106,7 +110,7 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
             st, params=new_params, h=new_h, v=g,
             delay_sum=st.delay_sum + delay, rounds=st.rounds + 1.0,
             n_samples=st.n_samples + n_new,
-        )
+        ), loss
 
     trainable = {c.cid for c in active if c.stream.n > 0}
     traj: Dict[int, object] = {}
@@ -126,8 +130,10 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
         n_new = max(n_vis - float(st.n_samples), 0.0)  # blocking host read
         xs, ys = stack_batches(c.stream, t, cfg.batch_size, cfg.local_epochs)
         st_before = st.params
-        st = local_round(st, jnp.asarray(xs), jnp.asarray(ys),
-                         jnp.float32(a.delay), jnp.float32(n_new))
+        st, loss = local_round(st, jnp.asarray(xs), jnp.asarray(ys),
+                               jnp.float32(a.delay), jnp.float32(n_new))
+        if losses is not None:
+            losses[t] = float(loss)  # keyed by the pre-fold iteration stamp
         server = aggregate(  # eager delta + second dispatch, as in the seed
             server, a.cid, tree_sub(st_before, st.params), n_vis, cfg_model,
             upload_is_delta=True, feature_learning=cfg.feature_learning,
@@ -138,7 +144,7 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
             traj[t] = jax.tree.map(np.asarray, server.w)
         if t % cfg.eval_every == 0 or t == cfg.T:
             n_evals += 1
-            _eval_all_per_client(model, server.w, clients, cfg.task)
+            _eval_all_per_client(model, server.w, clients, cfg)
     if stats is not None:
         stats.update(iters=t, ticks=t, evals=n_evals)
         churn.update(stats, sched)
@@ -147,8 +153,14 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
 
 def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
                            collect_trace: bool = True,
-                           stats: Optional[Dict] = None) -> Dict[int, object]:
-    """FedAsync, one arrival at a time.  Returns {t: server w (numpy)}."""
+                           stats: Optional[Dict] = None,
+                           losses: Optional[Dict[int, float]] = None
+                           ) -> Dict[int, object]:
+    """FedAsync, one arrival at a time.  Returns {t: server w (numpy)}.
+
+    ``losses`` collects the per-arrival mean epoch loss (telemetry
+    oracle), keyed like the asofed reference.
+    """
     w = model.init(jax.random.PRNGKey(cfg.seed))
     sched = _make_scheduler(clients, cfg)
     sgd = jax.jit(sgd_epochs(model, cfg, mu=0.005))
@@ -168,8 +180,10 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
         churn.arrival(a.cid, t, a.time)
         c = sched.by_id[a.cid]
         xs, ys = stack_batches(c.stream, t, cfg.batch_size, cfg.local_epochs)
-        wk = sgd(local_w[a.cid], local_w[a.cid],
-                 jnp.asarray(xs), jnp.asarray(ys))
+        wk, loss = sgd(local_w[a.cid], local_w[a.cid],
+                       jnp.asarray(xs), jnp.asarray(ys))
+        if losses is not None:
+            losses[t] = float(loss)
         staleness = t - version[a.cid]
         alpha_t = cfg.fedasync_alpha * (1.0 + staleness) ** (
             -cfg.fedasync_staleness_exp
@@ -182,7 +196,7 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
             traj[t] = jax.tree.map(np.asarray, w)
         if t % cfg.eval_every == 0 or t == cfg.T:
             n_evals += 1
-            _eval_all_per_client(model, w, clients, cfg.task)
+            _eval_all_per_client(model, w, clients, cfg)
     if stats is not None:
         stats.update(iters=t, ticks=t, evals=n_evals)
         churn.update(stats, sched)
@@ -225,7 +239,7 @@ def run_fedavg_reference(model, cfg_model, clients, cfg: RunConfig, *,
             c = by_id[a.cid]
             xs, ys = stack_batches(c.stream, t, cfg.batch_size,
                                    cfg.local_epochs)
-            new_ws.append(sgd(w, w, jnp.asarray(xs), jnp.asarray(ys)))
+            new_ws.append(sgd(w, w, jnp.asarray(xs), jnp.asarray(ys))[0])
             weights.append(c.stream.visible(t))
         sim_time += round_time
         tot = sum(weights)
@@ -237,7 +251,7 @@ def run_fedavg_reference(model, cfg_model, clients, cfg: RunConfig, *,
             traj[t] = jax.tree.map(np.asarray, w)
         if t % cfg.eval_every == 0 or t == cfg.T:
             n_evals += 1
-            _eval_all_per_client(model, w, clients, cfg.task)
+            _eval_all_per_client(model, w, clients, cfg)
     if stats is not None:
         stats.update(iters=t, ticks=t, evals=n_evals)
     return traj

@@ -38,7 +38,6 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-import warnings
 from typing import FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -64,33 +63,13 @@ def draw_dropouts(n: int, frac: float,
                   rng: np.random.Generator) -> FrozenSet[int]:
     """Positions of the ``frac * n`` permanently-dropped clients (Fig. 4).
 
-    One ``rng.choice`` draw, identical to the stream the old mutating
-    ``mark_dropouts`` consumed; the caller owns the returned set, so two
+    One ``rng.choice`` draw, identical to the rng stream every seeded
+    run has consumed since PR 2; the caller owns the returned set, so two
     schedulers seeded differently over the same client list each get
     their own draw without stepping on each other.
     """
     k = int(n * frac)
     return frozenset(int(i) for i in rng.choice(n, size=k, replace=False))
-
-
-def mark_dropouts(clients: Sequence[SimClient], frac: float,
-                  rng: np.random.Generator) -> None:
-    """Deprecated mutating form: stamps ``SimClient.dropped`` in place.
-
-    Dropout state is scheduler-local now — draw positions with
-    :func:`draw_dropouts` (same rng stream) and keep the set on the
-    caller's side instead of mutating the shared client list.
-    """
-    warnings.warn(
-        "mark_dropouts is deprecated: dropout state is scheduler-local — "
-        "use draw_dropouts(n, frac, rng) and keep the returned positions "
-        "instead of mutating SimClient.dropped",
-        DeprecationWarning, stacklevel=2,
-    )
-    for c in clients:
-        c.dropped = False
-    for i in draw_dropouts(len(clients), frac, rng):
-        clients[i].dropped = True
 
 
 def _split_active(clients: Sequence[SimClient], frac: float,

@@ -11,7 +11,7 @@ import numpy as np
 from hypothesis import given, settings
 
 from repro.core.client import dynamic_multiplier
-from repro.core.streaming import OnlineStream
+from repro.sim.streaming import OnlineStream
 from repro.data.partition import dirichlet_partition, label_sorted_partition
 from repro.kernels.feature_attention.ref import feature_attention_ref
 from repro.kernels.linear_scan.ref import linear_scan_ref

@@ -11,7 +11,7 @@ import pytest
 from repro.configs import get_arch
 from repro.core import RunConfig, aggregate, init_server, make_sim_clients, run
 from repro.common.pytree import tree_stack, tree_take, tree_unstack
-from repro.core.streaming import OnlineStream
+from repro.sim.streaming import OnlineStream
 from repro.data import airquality_like
 from repro.models import LOCAL, build_model
 from repro.sim.engine import run_strategy, stack_batches

@@ -9,7 +9,7 @@ from repro.sim.engine import pad_batch, stack_batches
 from repro.sim.prefetch import bucket_size
 from repro.sim.profiles import DeviceProfile, SimClient
 from repro.sim.scheduler import (AsyncScheduler, SweepScheduler,
-                                 SyncScheduler, draw_dropouts, mark_dropouts)
+                                 SyncScheduler, draw_dropouts)
 from repro.sim.streaming import OnlineStream
 
 
@@ -115,34 +115,29 @@ def test_dropout_state_is_scheduler_local():
     assert s1b.dropped_cids == s1.dropped_cids
 
 
-def test_draw_dropouts_matches_legacy_mark():
-    """draw_dropouts consumes the exact rng stream the old mutating
-    mark_dropouts did, so seeded runs reproduce PR-2 event streams —
-    and the legacy mutating form now warns on use."""
+def test_draw_dropouts_seeded_and_manual_marking():
+    """draw_dropouts consumes exactly one rng.choice draw (the stream
+    every seeded run has replayed since PR 2: same seed, same positions);
+    a caller who wants explicit fleet-wide marking stamps the returned
+    positions itself (the deprecated mutating API is gone)."""
     clients = _clients(10)
     drawn = draw_dropouts(10, 0.3, np.random.default_rng(9))
-    with pytest.deprecated_call():
-        mark_dropouts(clients, 0.3, np.random.default_rng(9))
-    assert drawn == {c.cid for c in clients if c.dropped}
+    assert drawn == draw_dropouts(10, 0.3, np.random.default_rng(9))
+    assert len(drawn) == 3
+    # one rng.choice(n, size=k) draw, nothing more: an identically-seeded
+    # generator stays in lockstep after the draw
+    r1, r2 = np.random.default_rng(9), np.random.default_rng(9)
+    draw_dropouts(10, 0.3, r1)
+    r2.choice(10, size=3, replace=False)
+    assert r1.integers(1 << 30) == r2.integers(1 << 30)
     # manual (pre-set) dropped flags are still honored by schedulers
+    for i in drawn:
+        clients[i].dropped = True
     s = AsyncScheduler(clients, seed=0)
     assert {c.cid for c in s.active} == {c.cid for c in clients
                                          if not c.dropped}
     for c in clients:
         c.dropped = False
-
-
-def test_manual_dropped_flags_via_draw_dropouts():
-    """The migration path off mark_dropouts: a caller who wants explicit
-    fleet-wide marking draws positions and stamps them itself, consuming
-    the identical rng stream (no deprecated API involved)."""
-    clients = _clients(10)
-    legacy = _clients(10)
-    with pytest.deprecated_call():
-        mark_dropouts(legacy, 0.3, np.random.default_rng(4))
-    for i in draw_dropouts(len(clients), 0.3, np.random.default_rng(4)):
-        clients[i].dropped = True
-    assert [c.dropped for c in clients] == [c.dropped for c in legacy]
 
 
 def test_budget_checked_before_trace_normalization():

@@ -1,0 +1,189 @@
+"""Workload subsystem tests: registry resolution, the three shipped
+workloads end-to-end through the cohort engine, the multi-label head /
+metric bundle, and the fail-fast task/workload validation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core.algorithms import get_strategy
+from repro.data import extrasensory_multilabel_like, fmnist_like
+from repro.models import paper_nets as pn
+from repro.sim.engine import RunConfig, run_strategy
+from repro.sim.evaluation import task_report
+from repro.sim.reference import run_asofed_reference
+from repro.sim.telemetry import TelemetryLog
+from repro.sim.workloads import (WORKLOADS, get_workload,
+                                 resolve_eval_report)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_ships_three_workloads():
+    assert WORKLOADS.names() == [
+        "cnn_classification", "lstm_multilabel", "lstm_regression"]
+    for name in WORKLOADS:
+        wl = get_workload(name)
+        assert wl.name == name
+        assert wl.task in ("regression", "classification", "multilabel")
+
+
+def test_unknown_workload_error_lists_known_names():
+    with pytest.raises(KeyError, match="cnn_classification"):
+        get_workload("lstm_regresion")  # typo
+
+
+def test_resolve_eval_report_validates():
+    wl = get_workload("lstm_regression")
+    cfg = wl.run_config()
+    assert resolve_eval_report(cfg) is wl.eval_report
+    with pytest.raises(ValueError, match="does not match workload"):
+        resolve_eval_report(dataclasses.replace(cfg, task="classification"))
+    with pytest.raises(KeyError, match="unknown workload"):
+        resolve_eval_report(RunConfig(workload="nope"))
+    with pytest.raises(ValueError, match="unknown task"):
+        task_report("clasification")  # typo
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: every registered workload through the engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_workload_runs_through_engine(name):
+    wl = get_workload(name)
+    cfg_model, model = wl.build()
+    clients = wl.make_clients(4, n_per=40, seed=0)
+    cfg = wl.run_config(T=16, batch_size=4, local_epochs=1, eta=0.02,
+                        eval_every=8, seed=0)
+    tel = TelemetryLog()
+    stats = {}
+    hist = run_strategy(get_strategy("asofed"), model, cfg_model, clients,
+                        cfg, telemetry=tel, stats=stats, window=4)
+    assert hist, f"{name}: no history points"
+    last = hist[-1].metrics
+    assert wl.headline in last, (name, last)
+    assert np.isfinite(last[wl.headline])
+    # in-scan telemetry works for every workload's loss
+    ts, ls = tel.loss_curve()
+    assert len(ts) >= 2 and np.all(np.isfinite(ls))
+    assert np.isfinite(stats["train_loss_final"])
+
+
+def test_multilabel_engine_matches_reference_oracle():
+    """The new task threads identically through the vectorized engine and
+    the sequential per-arrival oracle (loss + trajectory)."""
+    wl = get_workload("lstm_multilabel")
+    cfg_model, model = wl.build()
+    cfg = wl.run_config(T=20, batch_size=4, local_epochs=2, eta=0.02,
+                        eval_every=10, seed=0)
+    ref = run_asofed_reference(model, cfg_model,
+                               wl.make_clients(4, n_per=40, seed=0), cfg)
+    trace = []
+    run_strategy(get_strategy("asofed"), model, cfg_model,
+                 wl.make_clients(4, n_per=40, seed=0), cfg, trace=trace,
+                 window=4)
+    assert trace
+    for t, w in trace:
+        assert t in ref
+        for a, b in zip(jax.tree.leaves(w), jax.tree.leaves(ref[t])):
+            np.testing.assert_allclose(a, b, atol=3e-4, rtol=3e-3,
+                                       err_msg=f"divergence at t={t}")
+
+
+def test_multilabel_learns_label_structure():
+    """Smoke-scale learning check: micro-F1 beats the all-positive /
+    all-negative degenerate baselines after a short run."""
+    wl = get_workload("lstm_multilabel")
+    cfg_model, model = wl.build(hidden=16)
+    clients = wl.make_clients(4, n_per=120, seed=0)
+    cfg = wl.run_config(T=120, batch_size=8, local_epochs=2, eta=0.05,
+                        lam=0.8, eval_every=60, seed=0)
+    hist = run_strategy(get_strategy("asofed"), model, cfg_model, clients,
+                        cfg, window=8)
+    first, last = hist[0].metrics, hist[-1].metrics
+    assert last["hamming"] <= first["hamming"] * 1.1
+    assert last["micro_f1"] > 0.3
+    assert 0.0 <= last["subset_accuracy"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Multi-label head + metric bundle units
+# ---------------------------------------------------------------------------
+
+
+def test_multilabel_loss_matches_naive_bce():
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(0, 2.0, size=(5, 4)).astype(np.float32))
+    y = jnp.asarray((rng.uniform(size=(5, 4)) < 0.4).astype(np.float32))
+    p = jax.nn.sigmoid(z)
+    naive = -jnp.mean(y * jnp.log(p) + (1 - y) * jnp.log1p(-p))
+    np.testing.assert_allclose(pn.multilabel_loss(z, y), naive,
+                               rtol=1e-5, atol=1e-6)
+    # stable at extreme logits where the naive form is not
+    z_ext = jnp.asarray([[40.0, -40.0]])
+    y_ext = jnp.asarray([[1.0, 0.0]])
+    assert float(pn.multilabel_loss(z_ext, y_ext)) == pytest.approx(0.0,
+                                                                    abs=1e-6)
+
+
+def test_multilabel_predict_threshold():
+    z = jnp.asarray([[-1.0, 0.0, 1.0]])
+    np.testing.assert_array_equal(
+        np.asarray(pn.multilabel_predict(z)), [[False, True, True]])
+    np.testing.assert_array_equal(
+        np.asarray(pn.multilabel_predict(z, threshold=0.8)),
+        [[False, False, False]])
+
+
+def test_multilabel_report_known_values():
+    # logits decide sigmoid(z) >= .5 i.e. z >= 0
+    logits = np.array([[1.0, 1.0, -1.0],    # pred {0,1}, true {0,1}: exact
+                       [1.0, -1.0, -1.0],   # pred {0},   true {0,2}: fn on 2
+                       [-1.0, 1.0, -1.0]])  # pred {1},   true {0}:  fp+fn
+    targets = np.array([[1, 1, 0], [1, 0, 1], [1, 0, 0]], np.float32)
+    rep = M.multilabel_report(logits, targets)
+    # tp=3 (r0c0, r0c1, r1c0), fp=1 (r2c1), fn=2 (r1c2, r2c0)
+    assert rep["micro_f1"] == pytest.approx(2 * 3 / (2 * 3 + 1 + 2))
+    # per-class F1: c0: tp2 fn1 -> 4/5; c1: tp1 fp1 -> 2/3; c2: tp0 fn1 -> 0
+    assert rep["macro_f1"] == pytest.approx((0.8 + 2 / 3 + 0.0) / 3)
+    assert rep["subset_accuracy"] == pytest.approx(1 / 3)
+    assert rep["hamming"] == pytest.approx(3 / 9)
+
+
+# ---------------------------------------------------------------------------
+# Data generators
+# ---------------------------------------------------------------------------
+
+
+def test_extrasensory_multilabel_like_shapes_and_skew():
+    data = extrasensory_multilabel_like(n_clients=6, n_per=40, n_classes=6)
+    assert len(data) == 6
+    for xtr, ytr, xte, yte in data:
+        assert ytr.shape[1] == 6 and yte.shape[1] == 6
+        active = ytr.sum(axis=1)
+        assert np.all(active >= 1) and np.all(active <= 3)  # 1-3 activities
+        # per-user label skew: each user performs at most 4 of 6 classes
+        assert (ytr.any(axis=0) | yte.any(axis=0)).sum() <= 4
+
+
+@pytest.mark.parametrize("n_clients", [6, 20, 33])
+def test_fmnist_like_arbitrary_client_counts(n_clients):
+    data = fmnist_like(n_clients=n_clients, scale=0.01)
+    assert len(data) == n_clients
+    for xtr, ytr, xte, yte in data:
+        assert xtr.shape[1:] == (28, 28, 1)
+        assert ytr.dtype == np.int32
+        assert 1 <= len(np.unique(np.concatenate([ytr, yte]))) <= 2  # shards
+    # label-minor cycling: even small cohorts span all 10 classes (a
+    # label-major prefix would hand a 6-client fleet only labels 0-2)
+    fleet_labels = np.unique(np.concatenate(
+        [np.concatenate([ytr, yte]) for (_, ytr, _, yte) in data]))
+    assert len(fleet_labels) == 10
