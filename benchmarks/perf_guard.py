@@ -12,6 +12,9 @@ always-on record — the ``--clients`` sweep row of the sweep workload
 *and* each small-cohort workload-smoke row (one per registered workload)
 — gets its own floor, so a regression confined to e.g. the CNN
 classification path can't hide behind a healthy LSTM sweep number.
+``kind=fold_mode`` rows (the sequential-vs-associative server-fold
+pair) are keyed by their ``fold_mode`` too, each mode with its own
+floor; the guard reruns the pair at the guarded ``--clients`` cohort.
 
     PYTHONPATH=src python -m benchmarks.perf_guard
     PYTHONPATH=src python -m benchmarks.perf_guard --clients 256 --tolerance 0.2
@@ -41,15 +44,19 @@ from benchmarks.sim_bench import OUT_PATH, bench_sim
 _GUARDED = ("cohort", "always_on")
 
 
-Key = Tuple[str, int, str]
+Key = Tuple[str, int, str, str]
 
 
 def _key(rec: dict) -> Key:
     # `kind` separates the per-workload smoke rows (short runs, their own
     # T / eval cadence) from sweep rows — the two shapes must never share
-    # a floor, even at the same (workload, clients)
+    # a floor, even at the same (workload, clients).  `fold_mode` splits
+    # the kind=fold_mode pair (and any non-sequential sweep) the same
+    # way: the sequential and associative runs of one cohort each get
+    # their own floor, so an associative-only regression can't hide
+    # behind the healthy sequential twin (or vice versa)
     return (rec.get("workload", "lstm_regression"), rec.get("clients", 0),
-            rec.get("kind", "sweep"))
+            rec.get("kind", "sweep"), rec.get("fold_mode", "sequential"))
 
 
 def _guardable(payload: dict, window: int
@@ -111,40 +118,43 @@ def main() -> None:
         print("perf_guard: no checked-in comparable cohort records to "
               "guard against; running the sweep to mint them", flush=True)
     else:
-        for (wl, K, kind), rec in sorted(baseline.items()):
-            print(f"perf_guard: baseline {wl}@{K} clients [{kind}] = "
+        for (wl, K, kind, fm), rec in sorted(baseline.items()):
+            print(f"perf_guard: baseline {wl}@{K} clients [{kind}/{fm}] = "
                   f"{rec['iters_per_s']} iters/s", flush=True)
 
     # only the guarded slices: one sweep client count, no K=1024 memory
     # pair, a token per-arrival budget (the guard never reads that
-    # record), plus the per-workload smoke rows
+    # record), plus the per-workload smoke rows and the fold pair at the
+    # same guarded cohort (committed fold records at other cohorts are
+    # simply skipped, like a removed workload)
     bench_sim(counts=(args.clients,), baseline_iters=8,
               window=args.window, mem_cohort=0,
-              workload_smoke=True)  # overwrites BENCH_sim.json
+              workload_smoke=True,
+              fold_cohorts=(args.clients,))  # overwrites BENCH_sim.json
 
     with open(OUT_PATH) as f:
         fresh, _ = _guardable(json.load(f), args.window)
-    main_key = ("lstm_regression", args.clients, "sweep")
+    main_key = ("lstm_regression", args.clients, "sweep", "sequential")
     if main_key not in fresh:
         print("perf_guard: rerun produced no comparable main record",
               file=sys.stderr)
         sys.exit(2)
     if not baseline:
-        summary = {f"{w}@{k}[{kind}]": r["iters_per_s"]
-                   for (w, k, kind), r in sorted(fresh.items())}
+        summary = {f"{w}@{k}[{kind}/{fm}]": r["iters_per_s"]
+                   for (w, k, kind, fm), r in sorted(fresh.items())}
         print(f"perf_guard: fresh records {summary} (no baseline to "
               "compare — commit BENCH_sim.json to arm the guard)")
         sys.exit(0)
 
     failed = False
     for key, base_rec in sorted(baseline.items()):
-        wl, K, kind = key
+        wl, K, kind, fm = key
         fresh_rec: Optional[dict] = fresh.get(key)
         if fresh_rec is None:
             # a workload removed from the registry (or a different
             # --clients) simply stops being guarded; the committed file
             # gets refreshed by the same nightly run
-            print(f"perf_guard: {wl}@{K} [{kind}]: no rerun record — "
+            print(f"perf_guard: {wl}@{K} [{kind}/{fm}]: no rerun record — "
                   "skipped")
             continue
         tol = (args.tolerance if key == main_key
@@ -152,7 +162,7 @@ def main() -> None:
         base_ips, new_ips = base_rec["iters_per_s"], fresh_rec["iters_per_s"]
         floor = (1.0 - tol) * base_ips
         verdict = "OK" if new_ips >= floor else "REGRESSION"
-        print(f"perf_guard: {verdict} — {wl}@{K} [{kind}]: rerun "
+        print(f"perf_guard: {verdict} — {wl}@{K} [{kind}/{fm}]: rerun "
               f"{new_ips} iters/s vs baseline {base_ips} "
               f"(floor {floor:.2f} at {tol:.0%})")
         failed = failed or new_ips < floor

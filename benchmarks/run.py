@@ -60,6 +60,15 @@ def main() -> None:
     ap.add_argument("--mem-cohort", type=int, default=1024,
                     help="with --smoke: cohort size for the fp32-vs-bf16 "
                          "stacked-state memory pair (0 disables)")
+    ap.add_argument("--fold-mode", default="sequential",
+                    help="with --smoke: server-fold evaluation order of "
+                         "the engine modes (sequential|associative|auto; "
+                         "non-sequential sweeps drop asofed's non-affine "
+                         "feature pass)")
+    ap.add_argument("--fold-cohorts", default="256,1024",
+                    help="with --smoke: comma-separated cohort sizes for "
+                         "the sequential-vs-associative fold pair "
+                         "('none' or '' disables)")
     args = ap.parse_args()
     quick = not args.full
     want = lambda s: args.only is None or args.only in s  # noqa: E731
@@ -80,11 +89,15 @@ def main() -> None:
     if args.smoke or (args.only and want("sim")):
         from benchmarks.sim_bench import bench_sim
 
+        fold_cohorts = (tuple(int(k) for k in args.fold_cohorts.split(","))
+                        if args.fold_cohorts not in ("", "none") else ())
         for r in bench_sim(scenario=args.scenario, window=args.window,
                            state_dtype=args.state_dtype,
                            mem_cohort=args.mem_cohort,
                            workload=args.workload,
-                           workload_smoke=not args.no_workload_smoke):
+                           workload_smoke=not args.no_workload_smoke,
+                           fold_mode=args.fold_mode,
+                           fold_cohorts=fold_cohorts):
             rows.append(r)
             print(_fmt(*r), flush=True)
         if args.smoke:  # smoke mode runs only the sim sweep

@@ -107,16 +107,18 @@ _STAT_COLS = ("host_build_s", "device_s", "eval_s", "prefetch", "devices",
               "peak_live_device_bytes", "tick_cache_size", "staleness_mean",
               "staleness_max", "availability_utilization",
               "deferred_arrivals", "retired_clients", "train_loss_final",
-              "participation_mean")
+              "participation_mean", "folds_per_tick_mean")
 
 
 def _record(K: int, mode: str, scenario: str, s: Dict, *,
-            workload: str = "lstm_regression") -> Dict:
+            workload: str = "lstm_regression",
+            fold_mode: str = "sequential") -> Dict:
     rec = {
         "clients": K,
         "mode": mode,
         "scenario": scenario,
         "workload": workload,
+        "fold_mode": fold_mode,
         "iters": s["iters"],
         "ticks": s["ticks"],
         "wall_time_s": round(s["wall_time_s"], 4),
@@ -135,7 +137,9 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
               state_dtype: str = None,
               mem_cohort: int = 1024,
               workload: str = "lstm_regression",
-              workload_smoke: bool = True) -> List[Tuple[str, float, str]]:
+              workload_smoke: bool = True,
+              fold_mode: str = "sequential",
+              fold_cohorts=(256, 1024)) -> List[Tuple[str, float, str]]:
     """Smoke sweep: pipelined/serialized/unfused engine vs per-arrival.
 
     ``scenario`` (``diurnal`` / ``bursty`` / ``churn`` / ``flash`` /
@@ -150,6 +154,16 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
     registered workload; ``workload_smoke`` appends one small-cohort
     pipelined record *per registered workload* (the task-diversity floor
     the perf guard keys on).
+
+    ``fold_mode`` selects the server-fold evaluation order of the engine
+    modes (``sequential`` / ``associative`` / ``auto``; a non-sequential
+    sweep drops asofed's non-affine feature pass so the fold stays
+    affine).  ``fold_cohorts`` (empty/falsy disables) additionally runs a
+    sequential-vs-associative pair at each listed cohort size — same
+    config, only the fold order differs — and records
+    ``speedup_fold[K] = associative / sequential`` iters/s.  The larger
+    default cohort (1024) is the heavy-fold regime where the prefix scan
+    must at least hold the line.
     """
     from repro.sim.traces import scenario_traces, with_traces
 
@@ -157,6 +171,14 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
     # always-on sweep burns minutes of JIT + bench time
     validate_bench_args(workload=workload, state_dtype=state_dtype,
                         scenario=scenario)
+    if fold_mode not in ("sequential", "associative", "auto"):
+        raise ValueError(f"unknown fold_mode {fold_mode!r}; accepted: "
+                         "'sequential' | 'associative' | 'auto'")
+    # asofed's Eq. 5-6 feature pass is not affine: any non-sequential
+    # sweep (and the fold pair below) runs with it off so the fold admits
+    # the prefix-scan form
+    fold_kw = ({} if fold_mode == "sequential"
+               else {"fold_mode": fold_mode, "feature_learning": False})
 
     rows: List[Tuple[str, float, str]] = []
     records: List[Dict] = []
@@ -169,7 +191,7 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
         base = wl.run_config(
             T=iters_per_client * K, batch_size=8, local_epochs=2, eta=0.02,
             lam=1.0, beta=0.001, eval_every=50, seed=0,
-            window=window, state_dtype=state_dtype,
+            window=window, state_dtype=state_dtype, **fold_kw,
         )
         per_mode = {}
         for mode, T in (
@@ -194,7 +216,8 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                     s = s2
             else:
                 s = _run(model, cfg_model, mk(), cfg, mode)
-            rec = _record(K, mode, "always_on", s, workload=workload)
+            rec = _record(K, mode, "always_on", s, workload=workload,
+                          fold_mode=fold_mode)
             records.append(rec)
             per_mode[mode] = rec
             rows.append((
@@ -208,7 +231,8 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
             mk_churn = lambda: with_traces(mk(), traces)  # noqa: E731
             _run(model, cfg_model, mk_churn(), base, "cohort")  # warmup
             s = _run(model, cfg_model, mk_churn(), base, "cohort")
-            rec = _record(K, "cohort", scenario, s, workload=workload)
+            rec = _record(K, "cohort", scenario, s, workload=workload,
+                          fold_mode=fold_mode)
             records.append(rec)
             churn_at[K] = rec
             rows.append((
@@ -244,13 +268,14 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
         mem_cfg = wl.run_config(
             T=2 * K, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
             beta=0.001, eval_every=K, seed=0,
-            window=window,
+            window=window, **fold_kw,
         )
         memory_at = {}
         for dt in ("fp32", "bf16"):
             cfg = dataclasses.replace(mem_cfg, state_dtype=dt)
             s = _run(model, cfg_model, mk(), cfg, "cohort")
-            rec = _record(K, "cohort", "always_on", s, workload=workload)
+            rec = _record(K, "cohort", "always_on", s, workload=workload,
+                          fold_mode=fold_mode)
             records.append(rec)
             memory_at[dt] = rec
             rows.append((
@@ -274,14 +299,15 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
             cfg = wl.run_config(
                 T=iters_per_client * K * 2, batch_size=8, local_epochs=2,
                 eta=0.02, lam=1.0, beta=0.001, eval_every=32, seed=0,
-                window=window,
+                window=window, **fold_kw,
             )
             _run(model, cfg_model, mk(), cfg, "cohort")  # warmup
             s = _run(model, cfg_model, mk(), cfg, "cohort")
             s2 = _run(model, cfg_model, mk(), cfg, "cohort")
             if s2["wall_time_s"] < s["wall_time_s"]:
                 s = s2
-            rec = _record(K, "cohort", "always_on", s, workload=name)
+            rec = _record(K, "cohort", "always_on", s, workload=name,
+                          fold_mode=fold_mode)
             # smoke rows have a different run shape (T, eval cadence)
             # than sweep rows: the kind column keeps the perf guard from
             # ever comparing one against the other
@@ -294,6 +320,46 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 f"iters_per_s={rec['iters_per_s']};train_loss_final="
                 f"{rec.get('train_loss_final')}",
             ))
+    fold_at = {}
+    speedup_fold = {}
+    if fold_cohorts:
+        # sequential-vs-associative server-fold pair: identical runs up
+        # to the fold evaluation order (asofed, affine form — feature
+        # pass off).  The large cohort folds ~window arrivals per tick:
+        # the regime where the prefix scan has depth to parallelize and
+        # must at minimum not regress the sequential lax.scan.
+        for K in fold_cohorts:
+            wl, cfg_model, model, mk = _build(K, workload)
+            pair_cfg = wl.run_config(
+                T=2 * K, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
+                beta=0.001, eval_every=K, seed=0,
+                window=window, feature_learning=False,
+            )
+            ips = {}
+            for fm in ("sequential", "associative"):
+                cfg = dataclasses.replace(pair_cfg, fold_mode=fm)
+                _run(model, cfg_model, mk(), cfg, "cohort")  # warmup
+                s = _run(model, cfg_model, mk(), cfg, "cohort")
+                s2 = _run(model, cfg_model, mk(), cfg, "cohort")
+                if s2["wall_time_s"] < s["wall_time_s"]:
+                    s = s2
+                rec = _record(K, "cohort", "always_on", s,
+                              workload=workload, fold_mode=fm)
+                # pair rows have their own run shape (2K iters, eval at
+                # K, feature pass off): the kind column keeps the perf
+                # guard from comparing them against sweep rows
+                rec["kind"] = "fold_mode"
+                records.append(rec)
+                fold_at.setdefault(K, {})[fm] = rec
+                ips[fm] = rec["iters_per_s"]
+                rows.append((
+                    f"sim/fold_{fm}/{K}clients",
+                    s["wall_time_s"] / max(s["iters"], 1) * 1e6,
+                    f"iters_per_s={rec['iters_per_s']};folds_per_tick_mean="
+                    f"{rec.get('folds_per_tick_mean')}",
+                ))
+            speedup_fold[K] = round(
+                ips["associative"] / max(ips["sequential"], 1e-9), 2)
     payload = {
         "benchmark": "cohort simulation engine throughput (asofed)",
         "metric": ("iters = global iterations (client arrivals folded); "
@@ -335,13 +401,32 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                    "sweep runs one workload, the workload-smoke records "
                    "run every registered workload once at a small cohort "
                    "(train_loss_final = last tick's in-scan telemetry "
-                   "loss)."),
+                   "loss).  fold_mode = server-fold evaluation order "
+                   "(sequential lax.scan vs associative prefix scan); "
+                   "kind=fold_mode records are the sequential-vs-"
+                   "associative pair at each fold cohort (asofed affine "
+                   "form, feature pass off, 2K iters, eval at K); "
+                   "speedup_fold = associative / sequential iters_per_s; "
+                   "folds_per_tick_mean = fold-weighted mean of the "
+                   "engine's in-scan fold-depth slot."),
         "records": records,
         "sweep_workload": workload,
+        "sweep_fold_mode": fold_mode,
         "speedup_cohort_vs_per_arrival": speedup_at,
         "speedup_megastep": fusion_at,
         "prefetch_overlap_s": overlap_at,
     }
+    if fold_at:
+        # associative / sequential iters-per-s at each fold cohort: > 1
+        # means the prefix scan pays; the acceptance bar is "no
+        # regression" at the heavy-fold cohort
+        payload["speedup_fold"] = speedup_fold
+        payload["fold_mode_pair"] = {
+            K: {fm: {"iters_per_s": rec["iters_per_s"],
+                     "folds_per_tick_mean": rec.get("folds_per_tick_mean")}
+                for fm, rec in per.items()}
+            for K, per in fold_at.items()
+        }
     if workload_at:
         payload["workload_smoke"] = {
             name: {"iters_per_s": rec["iters_per_s"],
@@ -376,4 +461,9 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
         "sim/speedup_vs_per_arrival", 0.0,
         ";".join(f"{k}clients={v}x" for k, v in speedup_at.items()),
     ))
+    if speedup_fold:
+        rows.append((
+            "sim/speedup_fold", 0.0,
+            ";".join(f"{k}clients={v}x" for k, v in speedup_fold.items()),
+        ))
     return rows

@@ -12,6 +12,7 @@ from repro.core.algorithms.asofed import AsoFedStrategy
 from repro.core.algorithms.common import ClientStateCodec
 from repro.core.algorithms.fedasync import FedAsyncStrategy
 from repro.core.algorithms.fedavg import FedAvgStrategy, FedProxStrategy
+from repro.core.algorithms.fedbuff import FedBuffStrategy
 from repro.core.algorithms.local_global import GlobalStrategy, LocalStrategy
 from repro.sim.engine import Strategy
 
@@ -20,6 +21,7 @@ STRATEGIES: Dict[str, Type[Strategy]] = {
     "fedavg": FedAvgStrategy,
     "fedprox": FedProxStrategy,
     "fedasync": FedAsyncStrategy,
+    "fedbuff": FedBuffStrategy,
     "local": LocalStrategy,
     "global": GlobalStrategy,
 }
@@ -38,6 +40,7 @@ __all__ = [
     "FedAvgStrategy",
     "FedProxStrategy",
     "FedAsyncStrategy",
+    "FedBuffStrategy",
     "LocalStrategy",
     "GlobalStrategy",
 ]

@@ -17,7 +17,7 @@ from repro.common.dtypes import resolve_state_dtype
 from repro.common.pytree import tree_axpy, tree_sub, tree_zeros_like
 from repro.core import client as client_lib
 from repro.core.algorithms.common import (ClientStateCodec, avg_surrogate_grad,
-                                          bool_tree)
+                                          bcast_rows, bool_tree)
 from repro.core.feature_learning import apply_feature_learning
 from repro.sim.engine import Strategy
 
@@ -115,6 +115,38 @@ class AsoFedStrategy(Strategy):
             return {"w": w, "n": n}, w
 
         return fold
+
+    def build_fold_affine(self, model, cfg_model, cfg):
+        # Eq. (4) alone is affine in w with a = 1 (a weighted-delta
+        # subtraction); the Eq. (5)-(6) feature pass is NOT affine, so
+        # ASO-Fed only qualifies with feature_learning off (ASO-Fed(-F)).
+        if cfg.feature_learning:
+            return None
+
+        def carrier(server):
+            return server["w"]
+
+        def coeffs(server, delta, idx, n_vis, t_arr, mask):
+            m32 = mask.astype(jnp.float32)
+            n0 = server["n"]
+            # tick clients are pairwise distinct, so each fold's
+            # n.at[idx].set(n_vis) is a pure replacement: the running
+            # total N'_s after fold s is sum(n0) plus the cumulative
+            # masked per-slot increments (inclusive — the sequential fold
+            # counts its own client's update in the denominator)
+            Ns = jnp.sum(n0) + jnp.cumsum(m32 * (n_vis - n0[idx]))
+            weight = jnp.where(mask, n_vis / jnp.maximum(Ns, 1e-9), 0.0)
+            b = jax.tree.map(lambda d: bcast_rows(-weight, d) * d, delta)
+            # byproduct: the post-tick count vector (padded slots write
+            # their own old value back — a no-op, scratch row included)
+            n_new = n0.at[idx].set(jnp.where(mask, n_vis, n0[idx]))
+            return jnp.ones_like(weight), b, n_new
+
+        def unfold(server, h, n_new, delta, idx, n_vis, t_arr, mask):
+            server2 = {"w": jax.tree.map(lambda x: x[-1], h), "n": n_new}
+            return server2, h
+
+        return carrier, coeffs, unfold
 
     def build_merge(self, model, cfg):
         def merge(st, w_received):

@@ -77,6 +77,12 @@ def bool_tree(tree, flag: bool):
     return jax.tree.map(lambda _: flag, tree)
 
 
+def bcast_rows(v, x):
+    """A per-arrival ``(S,)`` coefficient broadcast against an ``(S, ...)``
+    leaf — the shape gymnastics every ``build_fold_affine`` needs."""
+    return v.reshape(v.shape + (1,) * (x.ndim - 1))
+
+
 def avg_surrogate_grad(model, cfg):
     """Average grad of s_k over E minibatches (the per-round grad_s_k).
 

@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.dtypes import resolve_state_dtype
-from repro.core.algorithms.common import (ClientStateCodec, bool_tree,
-                                          sgd_epochs)
+from repro.core.algorithms.common import (ClientStateCodec, bcast_rows,
+                                          bool_tree, sgd_epochs)
 from repro.sim.engine import Strategy
 
 
@@ -63,6 +63,30 @@ class FedAsyncStrategy(Strategy):
             return {"w": w}, {"w": w, "version": t_arr + 1.0}
 
         return fold
+
+    def build_fold_affine(self, model, cfg_model, cfg):
+        # the fold is exactly affine in the server weights:
+        # w_s = (1 - a_s) w_{s-1} + a_s wk_s, so a = 1 - a_t, b = a_t wk.
+        # For a single-fold tick the prefix scan evaluates the identical
+        # mul/mul/add sequence — bitwise equal to the sequential step.
+        def carrier(server):
+            return server["w"]
+
+        def coeffs(server, up, idx, n_vis, t_arr, mask):
+            staleness = t_arr - up["version"]
+            alpha_t = cfg.fedasync_alpha * (1.0 + staleness) ** (
+                -cfg.fedasync_staleness_exp
+            )
+            alpha_t = jnp.where(mask, alpha_t, 0.0)  # padded slot: identity
+            b = jax.tree.map(lambda wk: bcast_rows(alpha_t, wk) * wk,
+                             up["wk"])
+            return 1.0 - alpha_t, b, None
+
+        def unfold(server, h, aux, up, idx, n_vis, t_arr, mask):
+            return ({"w": jax.tree.map(lambda x: x[-1], h)},
+                    {"w": h, "version": t_arr + 1.0})
+
+        return carrier, coeffs, unfold
 
     def build_merge(self, model, cfg):
         return lambda c, received: received

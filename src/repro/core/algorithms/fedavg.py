@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.pytree import tree_zeros_like
-from repro.core.algorithms.common import sgd_epochs
+from repro.core.algorithms.common import bcast_rows, sgd_epochs
 from repro.sim.engine import Strategy
 
 
@@ -47,6 +47,27 @@ class FedAvgStrategy(Strategy):
                      "tot": server["tot"] + n_vis}, jnp.zeros(()))
 
         return fold
+
+    def build_fold_affine(self, model, cfg_model, cfg):
+        # the accumulate fold is a plain prefix sum (a = 1) over the
+        # sample-weighted uploads; the central model rides outside the
+        # recurrence and finalize applies the synchronous average
+        def carrier(server):
+            return {"acc": server["acc"], "tot": server["tot"]}
+
+        def coeffs(server, wk, idx, n_vis, t_arr, mask):
+            nv = jnp.where(mask, n_vis, 0.0)
+            b = {"acc": jax.tree.map(lambda x: bcast_rows(nv, x) * x, wk),
+                 "tot": nv}
+            return jnp.ones_like(nv), b, None
+
+        def unfold(server, h, aux, wk, idx, n_vis, t_arr, mask):
+            server2 = {"w": server["w"],
+                       "acc": jax.tree.map(lambda x: x[-1], h["acc"]),
+                       "tot": h["tot"][-1]}
+            return server2, jnp.zeros_like(n_vis)
+
+        return carrier, coeffs, unfold
 
     def build_finalize(self, model, cfg):
         def finalize(server):

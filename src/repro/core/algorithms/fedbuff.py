@@ -1,0 +1,158 @@
+"""FedBuff-style buffered asynchronous aggregation as a cohort strategy.
+
+Buffered async aggregation (Nguyen et al. 2022; see also FAVANO, arXiv
+2305.16099) decouples client arrivals from server steps: every arrival
+deposits a staleness-weighted delta into a server-side buffer, and only
+when the buffer holds ``RunConfig.buffer_size`` (M) contributions does
+the server apply ONE fused step ``w <- w - fedbuff_lr/M * buf`` and
+clear the buffer.  Clients always download the current central model.
+
+Local rule: plain E-epoch SGD from the client's stale copy; the upload
+is the pre-minus-post delta plus the copy's version, and the staleness
+weight is the FedBuff paper's ``1/sqrt(1 + staleness)``.
+
+The buffered fold is a natural fit for the engine's megastep window —
+M arrivals collapse into one server step — and the whole tick collapses
+into one log-depth prefix scan under ``fold_mode="associative"``: the
+per-arrival recurrence has a = 1 throughout (the buffer is a masked
+prefix sum, flush points are a cummax over crossing indices, and the
+weight stream is already vmapped), so :meth:`build_fold_affine` emits a
+closed form whose ``b_s`` is nonzero only at flush arrivals.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.dtypes import resolve_state_dtype
+from repro.common.pytree import (tree_axpy, tree_sub, tree_where,
+                                 tree_zeros_like)
+from repro.core.algorithms.common import (ClientStateCodec, bcast_rows,
+                                          bool_tree, sgd_epochs)
+from repro.sim.engine import Strategy
+
+
+class FedBuffStrategy(Strategy):
+    name = "fedbuff"
+    schedule = "async"
+
+    def telemetry_slots(self, cfg):
+        return ("train_loss",)
+
+    def server_telemetry_slots(self, cfg):
+        # post-tick buffer occupancy (0..M-1): how close the next fused
+        # server step is — the knob-tuning signal for buffer_size
+        return ("buffer_fill",)
+
+    def build_server_telemetry(self, model, cfg):
+        return lambda server: {"buffer_fill": server["count"]}
+
+    def init_client(self, model, cfg, w0, client):
+        return {"w": w0, "version": jnp.zeros((), jnp.float32)}
+
+    def build_init_client(self, model, cfg):
+        return lambda w0, n0: {"w": w0, "version": jnp.zeros((), jnp.float32)}
+
+    def state_codec(self, model, cfg, w0):
+        # identical layout to fedasync: stale model copies as reduced-dtype
+        # deltas from w0, the version counter untouched fp32
+        dt = resolve_state_dtype(cfg.state_dtype)
+        if dt is None or dt == jnp.float32:
+            return None  # identity: master fp32 stored directly (bitwise)
+        return ClientStateCodec(
+            dtype=dt,
+            anchor={"w": w0, "version": jnp.zeros((), jnp.float32)},
+            mask={"w": bool_tree(w0, True), "version": False},
+        )
+
+    def init_server(self, model, cfg_model, cfg, w0, clients, active):
+        if cfg.buffer_size < 1:
+            raise ValueError(
+                f"RunConfig.buffer_size must be >= 1, got {cfg.buffer_size}")
+        return {"w": w0, "buf": tree_zeros_like(w0),
+                "count": jnp.zeros((), jnp.float32)}
+
+    def build_local(self, model, cfg):
+        sgd = sgd_epochs(model, cfg, mu=0.0)
+
+        def local(c, bcast, xs, ys, delay, n_vis, t_arr):
+            wk, loss = sgd(c["w"], c["w"], xs, ys)
+            return (c, {"delta": tree_sub(c["w"], wk), "version": c["version"]},
+                    {"train_loss": loss})
+
+        return local
+
+    def build_fold(self, model, cfg_model, cfg):
+        M = float(cfg.buffer_size)
+
+        def fold(server, up, idx, n_vis, t_arr):
+            staleness = t_arr - up["version"]
+            s_w = 1.0 / jnp.sqrt(1.0 + staleness)
+            buf = tree_axpy(s_w, up["delta"], server["buf"])
+            count = server["count"] + 1.0
+            flush = count >= M
+            w = tree_where(
+                flush,
+                tree_axpy(-cfg.fedbuff_lr / M, buf, server["w"]),
+                server["w"])
+            buf = tree_where(flush, tree_zeros_like(buf), buf)
+            count = jnp.where(flush, 0.0, count)
+            return ({"w": w, "buf": buf, "count": count},
+                    {"w": w, "version": t_arr + 1.0})
+
+        return fold
+
+    def build_fold_affine(self, model, cfg_model, cfg):
+        M = float(cfg.buffer_size)
+        scale = cfg.fedbuff_lr / M
+
+        def carrier(server):
+            return server["w"]
+
+        def coeffs(server, up, idx, n_vis, t_arr, mask):
+            m32 = mask.astype(jnp.float32)
+            S = m32.shape[0]
+            staleness = t_arr - up["version"]
+            s_w = m32 / jnp.sqrt(1.0 + staleness)
+            # c_s: cumulative fold count ignoring resets.  The stored
+            # count always sits in [0, M-1], so a flush fires at exactly
+            # the real arrivals whose c_s crosses a multiple of M.
+            c_s = server["count"] + jnp.cumsum(m32)
+            flush = mask & (jnp.mod(c_s, M) == 0.0)
+            sidx = jnp.arange(S)
+            lf = jax.lax.cummax(jnp.where(flush, sidx, -1))  # last flush <= s
+            take = jnp.maximum(lf, 0)
+            live = (lf >= 0).astype(jnp.float32)  # 0 until the first flush
+
+            # W_s: buffer content ignoring resets (a masked prefix sum of
+            # the weighted deltas on top of the carried-in buffer); the
+            # server weight after fold s is w_0 - scale * W_{lf(s)}, so
+            # the per-arrival affine increment b_s is the (scaled) jump of
+            # W_lf — nonzero only at flush arrivals.
+            def W_of(d, buf0):
+                return buf0[None] + jnp.cumsum(bcast_rows(s_w, d) * d, axis=0)
+
+            W = jax.tree.map(W_of, up["delta"], server["buf"])
+            Wlf = jax.tree.map(
+                lambda Wl: bcast_rows(live, Wl) * jnp.take(Wl, take, axis=0),
+                W)
+            b = jax.tree.map(
+                lambda Wl: -scale * jnp.diff(
+                    Wl, axis=0, prepend=jnp.zeros_like(Wl[:1])),
+                Wlf)
+            # post-tick byproducts: what survived the last flush
+            buf_new = jax.tree.map(lambda Wl, Wf: Wl[-1] - Wf[-1], W, Wlf)
+            count_new = jnp.mod(c_s[-1], M)
+            return jnp.ones(S, jnp.float32), b, (buf_new, count_new)
+
+        def unfold(server, h, aux, up, idx, n_vis, t_arr, mask):
+            buf_new, count_new = aux
+            server2 = {"w": jax.tree.map(lambda x: x[-1], h),
+                       "buf": buf_new, "count": count_new}
+            return server2, {"w": h, "version": t_arr + 1.0}
+
+        return carrier, coeffs, unfold
+
+    def build_merge(self, model, cfg):
+        # the client downloads the central model as of its own fold
+        return lambda c, received: received

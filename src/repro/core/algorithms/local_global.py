@@ -17,6 +17,9 @@ from repro.sim.engine import Strategy, pad_batch
 
 
 class LocalStrategy(Strategy):
+    # no server fold at all (build_fold is None), so the base-class
+    # build_fold_affine decline is the right answer for both baselines:
+    # every fold_mode degrades to "nothing to parallelize" here
     name = "local"
     schedule = "sweep"
     uses_dropout = False

@@ -60,8 +60,10 @@ def rglru_forward(params, x, cfg: ModelConfig, dist: DistContext,
     if dist.scan_impl in ("pallas", "pallas_interpret"):
         from repro.kernels.linear_scan import ops as scan_ops
 
+        # scan_impl explicitly asked for the kernel: bypass the size auto
         h, h_last = scan_ops.linear_scan(
-            a, b, interpret=(dist.scan_impl == "pallas_interpret")
+            a, b, use_kernel=True,
+            interpret=(dist.scan_impl == "pallas_interpret")
         )
     else:
         h, h_last = chunked_linear_scan(a, b)  # (B,S,w)

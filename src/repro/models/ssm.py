@@ -126,8 +126,10 @@ def mamba_forward(params, x, cfg: ModelConfig, dist: DistContext,
         from repro.kernels.linear_scan import ops as scan_ops
 
         dA, dBx, Cc = _ssm_coeffs(params, xh)
+        # scan_impl explicitly asked for the kernel: bypass the size auto
         h, h_last = scan_ops.linear_scan(
-            dA, dBx, interpret=(dist.scan_impl == "pallas_interpret")
+            dA, dBx, use_kernel=True,
+            interpret=(dist.scan_impl == "pallas_interpret")
         )
         y = jnp.einsum("bsdn,bsn->bsd", h.astype(jnp.float32),
                        Cc.astype(jnp.float32))

@@ -34,6 +34,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.common import sharding as sharding_lib
 from repro.common.compat import shard_map
 from repro.common.pytree import tree_take, tree_scatter, tree_where
+from repro.kernels.linear_scan import ops as scan_ops
 
 _TICK_CACHE: Dict[Any, Tuple[Any, Any]] = {}
 _PREDICT_CACHE: Dict[Any, Tuple[Any, Any]] = {}
@@ -67,15 +68,60 @@ def reduce_telemetry(tel, mask, slots: Sequence[str]):
     ])
 
 
+def resolve_fold_affine(strategy, model, cfg_model, cfg):
+    """The affine fold triple to execute this run, or None for the
+    sequential arrival-order scan.  Raises readably on an unknown
+    ``fold_mode`` and on a forced-associative run whose strategy declines
+    the affine form — the engine calls this in its fail-fast validation
+    before any compile cost is paid.
+
+    ``"auto"`` is conservative: associative only when the strategy
+    provides the affine form AND the backend is an accelerator — on CPU
+    the sequential scan is the bitwise contract and small fold streams
+    don't pay for the log-depth reshuffle.
+    """
+    mode = getattr(cfg, "fold_mode", "sequential")
+    if mode not in ("sequential", "associative", "auto"):
+        raise ValueError(
+            f"unknown fold_mode {mode!r}; accepted: "
+            "'sequential' | 'associative' | 'auto'")
+    if mode == "sequential":
+        return None
+    if strategy.build_fold(model, cfg_model, cfg) is None:
+        return None  # no server fold at all: nothing to parallelize
+    affine = strategy.build_fold_affine(model, cfg_model, cfg)
+    if affine is None:
+        if mode == "associative":
+            raise ValueError(
+                f"fold_mode='associative' but strategy {strategy.name!r} "
+                "declines the affine fold form (build_fold_affine returned "
+                "None) — use fold_mode='sequential' or 'auto', or drop the "
+                "non-affine piece (asofed: feature_learning=False)")
+        return None
+    if mode == "auto" and jax.default_backend() == "cpu":
+        return None
+    return affine
+
+
 def tick_body(strategy, model, cfg_model, cfg, mesh: Optional[Mesh], codec,
-              slots: Tuple[str, ...]):
+              slots: Tuple[str, ...], server_slots: Tuple[str, ...] = ()):
     """The traceable one-tick update ``(stacked, server, *inputs) ->
     (stacked, server, tel_row)`` — jitted standalone for sync/sweep
-    schedules, scanned over a window axis by the async megastep."""
+    schedules, scanned over a window axis by the async megastep.
+
+    ``slots`` are the strategy's per-client telemetry names;
+    ``server_slots`` the post-fold server scalars.  The emitted row is
+    ``slots + ("folds_per_tick",) + server_slots`` — the engine-owned
+    fold-depth slot (the quantity the associative fold path speeds up)
+    always rides in the middle.
+    """
     local = strategy.build_local(model, cfg)
     fold = strategy.build_fold(model, cfg_model, cfg)
+    affine = resolve_fold_affine(strategy, model, cfg_model, cfg)
     merge = strategy.build_merge(model, cfg)
     finalize = strategy.build_finalize(model, cfg)
+    server_tel = (strategy.build_server_telemetry(model, cfg)
+                  if server_slots else None)
     vlocal = jax.vmap(local, in_axes=(0, None, 0, 0, 0, 0, 0))
 
     def tick(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
@@ -110,17 +156,38 @@ def tick_body(strategy, model, cfg_model, cfg, mesh: Optional[Mesh], codec,
                 cohort0, bcast, xs, ys, delays, n_vis, t_arr)
         tel_row = reduce_telemetry(tel, mask, slots)
         if fold is not None:
-            def step(sv, inp):
-                up, ix, nv, ta, mk = inp
-                sv2, received = fold(sv, up, ix, nv, ta)
-                # padded slots leave the server untouched
-                return tree_where(mk, sv2, sv), received
-            server, received = jax.lax.scan(
-                step, server, (uploads, idx, n_vis, t_arr, mask)
-            )
+            if affine is not None:
+                # parallel fast path: the tick's folds as one log-depth
+                # affine prefix scan over the coefficient stream (masked
+                # slots are identity by the coeffs contract)
+                carrier, coeffs, unfold = affine
+                a_s, b_s, aux = coeffs(server, uploads, idx, n_vis, t_arr,
+                                       mask)
+                h = scan_ops.fold_prefix(
+                    a_s, b_s, carrier(server),
+                    use_kernel=cfg.fold_kernel,
+                    interpret=cfg.fold_kernel_interpret)
+                server, received = unfold(server, h, aux, uploads, idx,
+                                          n_vis, t_arr, mask)
+            else:
+                def step(sv, inp):
+                    up, ix, nv, ta, mk = inp
+                    sv2, received = fold(sv, up, ix, nv, ta)
+                    # padded slots leave the server untouched
+                    return tree_where(mk, sv2, sv), received
+                server, received = jax.lax.scan(
+                    step, server, (uploads, idx, n_vis, t_arr, mask)
+                )
             cohort = jax.vmap(merge)(cohort, received)
         if finalize is not None:
             server = finalize(server)
+        # engine-owned fold-depth slot + post-fold server scalars
+        extras = [jnp.sum(mask.astype(jnp.float32))]
+        if server_tel is not None:
+            sv_tel = server_tel(server)
+            extras += [jnp.asarray(sv_tel[s], jnp.float32)
+                       for s in server_slots]
+        tel_row = jnp.concatenate([tel_row, jnp.stack(extras)])
         # masked write-back: padded slots target the scratch row and revert
         # to their pre-tick (still-encoded) values, so real rows are
         # written exactly once
@@ -140,14 +207,17 @@ def _donate():
 
 
 def build_tick_fn(strategy, model, cfg_model, cfg, mesh: Optional[Mesh],
-                  codec=None, slots: Tuple[str, ...] = ()):
+                  codec=None, slots: Tuple[str, ...] = (),
+                  server_slots: Tuple[str, ...] = ()):
     return jax.jit(
-        tick_body(strategy, model, cfg_model, cfg, mesh, codec, slots),
+        tick_body(strategy, model, cfg_model, cfg, mesh, codec, slots,
+                  server_slots),
         donate_argnums=_donate())
 
 
 def build_megastep_fn(strategy, model, cfg_model, cfg, mesh: Optional[Mesh],
-                      codec=None, slots: Tuple[str, ...] = ()):
+                      codec=None, slots: Tuple[str, ...] = (),
+                      server_slots: Tuple[str, ...] = ()):
     """One fused dispatch per window: ``lax.scan`` of the tick body over
     the leading ``[T_w]`` axis of the staged window block.  Tick ``j+1``'s
     gather reads the rows tick ``j`` scattered (the scan carry), so a
@@ -156,7 +226,8 @@ def build_megastep_fn(strategy, model, cfg_model, cfg, mesh: Optional[Mesh],
     padding ticks leave both carries untouched.  The scan's stacked ys
     are the ``[T_w, n_slots]`` telemetry block: one row per fused tick,
     returned by the same dispatch that executes the window."""
-    tick = tick_body(strategy, model, cfg_model, cfg, mesh, codec, slots)
+    tick = tick_body(strategy, model, cfg_model, cfg, mesh, codec, slots,
+                     server_slots)
 
     def megastep(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
         def step(carry, inp):
@@ -200,7 +271,8 @@ def cfg_cache_key(cfg) -> Tuple:
 
 def tick_fn(strategy, model, cfg_model, cfg, K: int, mesh: Optional[Mesh], *,
             windowed: bool = False, codec=None,
-            slots: Tuple[str, ...] = ()):
+            slots: Tuple[str, ...] = (),
+            server_slots: Tuple[str, ...] = ()):
     # key by device ids, not just mesh shape: the compiled fn closes over
     # the concrete Mesh, and two same-shape meshes over different devices
     # must not share it.  A non-identity codec additionally closes over
@@ -212,11 +284,13 @@ def tick_fn(strategy, model, cfg_model, cfg, K: int, mesh: Optional[Mesh], *,
         if mesh is not None else None
     codec_key = cfg.seed if codec is not None and not codec.identity else None
     key = (id(model), id(cfg_model), type(strategy).__name__, strategy.name,
-           cfg_cache_key(cfg), K, mesh_key, windowed, codec_key, slots)
+           cfg_cache_key(cfg), K, mesh_key, windowed, codec_key, slots,
+           server_slots)
     fn = _cache_get(_TICK_CACHE, key, (model, cfg_model))
     if fn is None:
         build = build_megastep_fn if windowed else build_tick_fn
-        fn = build(strategy, model, cfg_model, cfg, mesh, codec, slots)
+        fn = build(strategy, model, cfg_model, cfg, mesh, codec, slots,
+                   server_slots)
         _cache_put(_TICK_CACHE, key, (model, cfg_model), fn)
     return fn
 

@@ -129,6 +129,9 @@ class RunConfig:
     # FedAsync
     fedasync_alpha: float = 0.6
     fedasync_staleness_exp: float = 0.5
+    # FedBuff (buffered async aggregation)
+    buffer_size: int = 8  # M: staleness-weighted deltas per server flush
+    fedbuff_lr: float = 1.0  # server step applied to the buffered mean
     # engine
     max_cohort: Optional[int] = None  # cap on clients per tick (None: all)
     # build ticks on a side thread (None: adaptive — on for accelerators
@@ -154,6 +157,19 @@ class RunConfig:
     # CPU-CI hook for exercising the kernel path in equivalence tests.
     feature_kernel: Optional[bool] = None
     feature_kernel_interpret: bool = False
+    # server-fold lowering: "sequential" replays the per-arrival fold scan
+    # (the bitwise oracle and the default); "associative" requires the
+    # strategy's affine fold form (`Strategy.build_fold_affine`) and runs
+    # the tick's folds as one log-depth prefix scan — same math, fp
+    # reassociation aside; "auto" picks associative on accelerators when
+    # the strategy provides the affine form, sequential otherwise.
+    # `fold_kernel` mirrors `feature_kernel` for the linear-scan lowering
+    # of the affine fold (None = per-leaf auto via
+    # kernels.linear_scan.ops.use_kernel_default; the interpret flag is
+    # the CPU-CI hook for the Pallas path).
+    fold_mode: str = "sequential"
+    fold_kernel: Optional[bool] = None
+    fold_kernel_interpret: bool = False
 
 
 @dataclasses.dataclass
@@ -200,6 +216,19 @@ class Strategy:
         values must be keys of the telemetry dict ``local`` returns)."""
         return ("train_loss",)
 
+    def server_telemetry_slots(self, cfg: RunConfig) -> Tuple[str, ...]:
+        """Names of post-fold *server* scalars appended to the in-scan
+        telemetry row (e.g. fedbuff's buffer fill).  The engine inserts
+        its own ``folds_per_tick`` slot between the client slots and
+        these; values come from :meth:`build_server_telemetry`."""
+        return ()
+
+    def build_server_telemetry(self, model, cfg: RunConfig):
+        """Optional traceable ``server -> {slot: scalar}`` evaluated after
+        the tick's folds.  Required (non-None) exactly when
+        :meth:`server_telemetry_slots` is non-empty."""
+        return None
+
     # -- state construction ---------------------------------------------
     def init_client(self, model, cfg: RunConfig, w0,
                     client: Optional[SimClient]):
@@ -233,6 +262,31 @@ class Strategy:
 
     def build_fold(self, model, cfg_model, cfg: RunConfig):
         return None  # no server (Local baseline)
+
+    def build_fold_affine(self, model, cfg_model, cfg: RunConfig):
+        """Optional *parallel form* of :meth:`build_fold` for strategies
+        whose fold is affine in the server weights: return None to
+        decline (the sequential scan is always available), else a triple
+        ``(carrier, coeffs, unfold)`` of traceables —
+
+        * ``carrier(server) -> h0``: the affine part of the server state
+          (a pytree; the recurrence ``h_s = a_s * h_{s-1} + b_s`` runs
+          over its leaves);
+        * ``coeffs(server, uploads, idx, n_vis, t_arr, mask) ->
+          (a, b, aux)``: per-arrival coefficients computed from the
+          already-vmapped upload stream — ``a`` is ``(S,)``, ``b`` a
+          pytree of ``(S, ...)`` leaves matching ``carrier``'s structure,
+          and masked padding slots MUST be the identity (a=1, b=0);
+          ``aux`` carries any closed-form byproducts to ``unfold``;
+        * ``unfold(server, h, aux, uploads, idx, n_vis, t_arr, mask) ->
+          (server', received)``: rebuild the post-tick server from the
+          inclusive prefix states ``h`` (pytree of ``(S, ...)``) and the
+          per-arrival ``received`` stream consumed by the vmapped merge.
+
+        The engine executes the recurrence with
+        ``repro.kernels.linear_scan.ops.fold_prefix`` (associative scan /
+        Pallas kernel) when ``RunConfig.fold_mode`` asks for it."""
+        return None
 
     def build_merge(self, model, cfg: RunConfig):
         return lambda carry, received: carry
@@ -370,9 +424,15 @@ def run_strategy(
     # the stats/BENCH columns (or report the wrong task's metrics)
     dtypes_lib.resolve_state_dtype(cfg.state_dtype)
     eval_report = resolve_eval_report(cfg)
+    # ... and so must an unknown fold_mode, or fold_mode="associative"
+    # with a strategy that declines the affine fold form
+    compile_lib.resolve_fold_affine(strategy, model, cfg_model, cfg)
     w0 = model.init(jax.random.PRNGKey(cfg.seed))
     codec = strategy.state_codec(model, cfg, w0)
-    slots = tuple(strategy.telemetry_slots(cfg))
+    client_slots = tuple(strategy.telemetry_slots(cfg))
+    server_slots = tuple(strategy.server_telemetry_slots(cfg))
+    # the engine-owned fold-depth slot rides between the two blocks
+    slots = client_slots + ("folds_per_tick",) + server_slots
     drop = cfg.dropout_frac if strategy.uses_dropout else 0.0
     skip = cfg.periodic_dropout if strategy.uses_dropout else 0.0
 
@@ -428,7 +488,9 @@ def run_strategy(
         server = jax.device_put(server, sharding_lib.replicated(mesh))
     windowed = strategy.schedule == "async"
     tick_fn = compile_lib.tick_fn(strategy, model, cfg_model, cfg, K, mesh,
-                                  windowed=windowed, codec=codec, slots=slots)
+                                  windowed=windowed, codec=codec,
+                                  slots=client_slots,
+                                  server_slots=server_slots)
     evaluator = Evaluator(model, clients, eval_report,
                           strategy.eval_per_client)
     telem = telemetry if telemetry is not None else TelemetryLog(slots)

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import tree_axpy, tree_sub
+from repro.common.pytree import tree_axpy, tree_sub, tree_zeros_like
 from repro.core import client as client_lib
 from repro.core.algorithms.common import avg_surrogate_grad, sgd_epochs
 from repro.core.server import aggregate, init_server
@@ -189,6 +189,67 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
             -cfg.fedasync_staleness_exp
         )
         w = jax.tree.map(lambda x, y: (1 - alpha_t) * x + alpha_t * y, w, wk)
+        t += 1
+        version[a.cid] = t
+        local_w[a.cid] = w
+        if collect_trace:
+            traj[t] = jax.tree.map(np.asarray, w)
+        if t % cfg.eval_every == 0 or t == cfg.T:
+            n_evals += 1
+            _eval_all_per_client(model, w, clients, cfg)
+    if stats is not None:
+        stats.update(iters=t, ticks=t, evals=n_evals)
+        churn.update(stats, sched)
+    return traj
+
+
+def run_fedbuff_reference(model, cfg_model, clients, cfg: RunConfig, *,
+                          collect_trace: bool = True,
+                          stats: Optional[Dict] = None,
+                          losses: Optional[Dict[int, float]] = None
+                          ) -> Dict[int, object]:
+    """FedBuff, one arrival at a time.  Returns {t: server w (numpy)}.
+
+    Mirrors the engine's sequential fold exactly: every arrival deposits
+    a ``1/sqrt(1+staleness)``-weighted delta into a host-held buffer;
+    every ``cfg.buffer_size``-th deposit flushes one fused server step
+    ``w <- w - fedbuff_lr/M * buf`` and clears the buffer.  Clients
+    always download the current central model.
+    """
+    w = model.init(jax.random.PRNGKey(cfg.seed))
+    sched = _make_scheduler(clients, cfg)
+    sgd = jax.jit(sgd_epochs(model, cfg, mu=0.0))
+    version = {c.cid: 0 for c in sched.active}
+    local_w = {c.cid: w for c in sched.active}
+    trainable = {c.cid for c in sched.active if c.stream.n > 0}
+    M = int(cfg.buffer_size)
+    buf = tree_zeros_like(w)
+    count = 0
+    traj: Dict[int, object] = {}
+    churn = _ChurnStats()
+    t, n_evals = 0, 0
+    while t < cfg.T and trainable:
+        tick = sched.next_tick(1)
+        if not tick:
+            break
+        (a,) = tick
+        if a.cid not in trainable:  # empty split: engine drops it too
+            continue
+        churn.arrival(a.cid, t, a.time)
+        c = sched.by_id[a.cid]
+        xs, ys = stack_batches(c.stream, t, cfg.batch_size, cfg.local_epochs)
+        wk, loss = sgd(local_w[a.cid], local_w[a.cid],
+                       jnp.asarray(xs), jnp.asarray(ys))
+        if losses is not None:
+            losses[t] = float(loss)
+        staleness = t - version[a.cid]
+        s_w = float(1.0 / np.sqrt(1.0 + np.float32(staleness)))
+        buf = tree_axpy(s_w, tree_sub(local_w[a.cid], wk), buf)
+        count += 1
+        if count >= M:
+            w = tree_axpy(-cfg.fedbuff_lr / M, buf, w)
+            buf = tree_zeros_like(w)
+            count = 0
         t += 1
         version[a.cid] = t
         local_w[a.cid] = w

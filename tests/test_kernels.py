@@ -1,12 +1,14 @@
 """Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.kernels.feature_attention.ops import feature_attention
 from repro.kernels.feature_attention.ref import feature_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.linear_scan.ops import linear_scan
+from repro.kernels.linear_scan import ops as scan_ops
+from repro.kernels.linear_scan.ops import fold_prefix, linear_scan
 from repro.kernels.linear_scan.ref import linear_scan_ref
 from repro.models.scan_utils import chunked_linear_scan
 
@@ -113,3 +115,76 @@ def test_linear_scan_4d_mamba_layout():
     assert h.shape == (2, 64, 16, 4) and hl.shape == (2, 16, 4)
     h2, hl2 = chunked_linear_scan(a, b, chunk=16)
     assert float(jnp.max(jnp.abs(h - h2))) < 1e-5
+
+
+def test_linear_scan_auto_dispatch():
+    """use_kernel=None resolves via the feature_attention-style size/
+    backend heuristic: off-TPU it lowers to the sequential reference."""
+    assert scan_ops.KERNEL_MIN_ELEMS & (scan_ops.KERNEL_MIN_ELEMS - 1) == 0
+    if jax.default_backend() != "tpu":
+        assert not scan_ops.use_kernel_default(scan_ops.KERNEL_MIN_ELEMS * 2)
+    k1, k2 = jax.random.split(KEY)
+    a = jax.random.uniform(k1, (2, 64, 16), jnp.float32, 0.5, 0.999)
+    b = jax.random.normal(k2, (2, 64, 16))
+    h_auto, hl_auto = linear_scan(a, b)  # use_kernel=None
+    h_ref, hl_ref = linear_scan(a, b, use_kernel=False)
+    assert float(jnp.max(jnp.abs(h_auto - h_ref))) < 2e-5
+    assert float(jnp.max(jnp.abs(hl_auto - hl_ref))) < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# fold_prefix (the server-fold adapter: B=1, S=folds, C=param-leaf size)
+# ---------------------------------------------------------------------------
+
+
+def _fold_prefix_oracle(a, b, h0):
+    """Sequential numpy replay of h_s = a_s * h_{s-1} + b_s."""
+    out = {k: np.zeros_like(v) for k, v in b.items()}
+    h = dict(h0)
+    for s in range(a.shape[0]):
+        for k in b:
+            h[k] = a[s] * h[k] + b[k][s]
+            out[k][s] = h[k]
+    return out
+
+
+@pytest.mark.parametrize("S", [1, 3, 8, 13])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_fold_prefix_matches_sequential(S, use_kernel):
+    """Both lowerings (shared associative_scan / Pallas kernel via the
+    interpreter) reproduce the sequential fold recurrence, mixed leaf
+    ranks and non-power-of-two S included."""
+    rng = np.random.default_rng(3)
+    a = rng.uniform(0.5, 1.0, S).astype(np.float32)
+    b = {"m": rng.normal(size=(S, 6, 4)).astype(np.float32),
+         "v": rng.normal(size=(S,)).astype(np.float32)}
+    h0 = {"m": rng.normal(size=(6, 4)).astype(np.float32),
+          "v": np.float32(rng.normal())}
+    want = _fold_prefix_oracle(a, b, h0)
+    got = fold_prefix(jnp.asarray(a), jax.tree.map(jnp.asarray, b),
+                      jax.tree.map(jnp.asarray, h0),
+                      use_kernel=use_kernel, interpret=use_kernel)
+    for k in b:
+        np.testing.assert_allclose(np.asarray(got[k]), want[k],
+                                   atol=2e-5, rtol=2e-5, err_msg=k)
+
+
+def test_fold_prefix_identity_stream():
+    """a=1, b=0 (a fully-masked padding tick) returns h0 at every step."""
+    h0 = {"w": jnp.arange(12.0).reshape(3, 4)}
+    got = fold_prefix(jnp.ones(5), {"w": jnp.zeros((5, 3, 4))}, h0)
+    np.testing.assert_allclose(np.asarray(got["w"]),
+                               np.broadcast_to(np.asarray(h0["w"]),
+                                               (5, 3, 4)))
+
+
+def test_fold_prefix_zero_seed_default():
+    """h0=None seeds at zero — the raw kernel convention."""
+    rng = np.random.default_rng(5)
+    a = rng.uniform(0.5, 1.0, 6).astype(np.float32)
+    b = rng.normal(size=(6, 8)).astype(np.float32)
+    want = _fold_prefix_oracle(a, {"x": b},
+                               {"x": np.zeros(8, np.float32)})["x"]
+    got = fold_prefix(jnp.asarray(a), {"x": jnp.asarray(b)})
+    np.testing.assert_allclose(np.asarray(got["x"]), want,
+                               atol=2e-5, rtol=2e-5)

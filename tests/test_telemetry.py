@@ -109,7 +109,8 @@ def test_telemetry_summary_and_stats():
     tel = TelemetryLog()
     run_strategy(get_strategy("asofed"), model, cfg_model, mk(), CFG,
                  telemetry=tel, stats=stats, window=6)
-    assert tel.slots == ("train_loss", "step_mult")
+    # strategy client slots + the engine-owned fold-depth slot
+    assert tel.slots == ("train_loss", "step_mult", "folds_per_tick")
     # stats columns are rounded for the bench tables; the log keeps the
     # exact fp32 values
     assert stats["train_loss_final"] == pytest.approx(
@@ -121,6 +122,9 @@ def test_telemetry_summary_and_stats():
     assert stal == pytest.approx(stats["staleness_mean"], abs=1e-3)
     assert stats["participation_mean"] == pytest.approx(
         folds / len(tel.records))
+    # the in-scan fold-depth slot agrees with the host-side tick metadata
+    _, fp = tel.curve("folds_per_tick")
+    assert [int(v) for v in fp] == [r.n_folds for r in tel.records]
     with pytest.raises(KeyError):
         tel.curve("nope")
 
