@@ -44,7 +44,7 @@ from benchmarks.sim_bench import OUT_PATH, bench_sim
 _GUARDED = ("cohort", "always_on")
 
 
-Key = Tuple[str, int, str, str]
+Key = Tuple[str, int, str, str, str]
 
 
 def _key(rec: dict) -> Key:
@@ -54,9 +54,14 @@ def _key(rec: dict) -> Key:
     # the kind=fold_mode pair (and any non-sequential sweep) the same
     # way: the sequential and associative runs of one cohort each get
     # their own floor, so an associative-only regression can't hide
-    # behind the healthy sequential twin (or vice versa)
+    # behind the healthy sequential twin (or vice versa).  `upload_codec`
+    # splits identity and compressed rows likewise: the compressed tick
+    # pays an in-tick encode, so identity and e.g. topk_sparse runs of
+    # one cohort (and the kind=upload_frontier rows, one per codec) each
+    # hold their own floor
     return (rec.get("workload", "lstm_regression"), rec.get("clients", 0),
-            rec.get("kind", "sweep"), rec.get("fold_mode", "sequential"))
+            rec.get("kind", "sweep"), rec.get("fold_mode", "sequential"),
+            rec.get("upload_codec", "identity"))
 
 
 def _guardable(payload: dict, window: int
@@ -118,51 +123,54 @@ def main() -> None:
         print("perf_guard: no checked-in comparable cohort records to "
               "guard against; running the sweep to mint them", flush=True)
     else:
-        for (wl, K, kind, fm), rec in sorted(baseline.items()):
-            print(f"perf_guard: baseline {wl}@{K} clients [{kind}/{fm}] = "
-                  f"{rec['iters_per_s']} iters/s", flush=True)
+        for (wl, K, kind, fm, uc), rec in sorted(baseline.items()):
+            print(f"perf_guard: baseline {wl}@{K} clients [{kind}/{fm}/{uc}]"
+                  f" = {rec['iters_per_s']} iters/s", flush=True)
 
     # only the guarded slices: one sweep client count, no K=1024 memory
     # pair, a token per-arrival budget (the guard never reads that
-    # record), plus the per-workload smoke rows and the fold pair at the
-    # same guarded cohort (committed fold records at other cohorts are
-    # simply skipped, like a removed workload)
+    # record), plus the per-workload smoke rows, the fold pair at the
+    # same guarded cohort, and the per-codec upload frontier (committed
+    # fold records at other cohorts are simply skipped, like a removed
+    # workload)
     bench_sim(counts=(args.clients,), baseline_iters=8,
               window=args.window, mem_cohort=0,
               workload_smoke=True,
-              fold_cohorts=(args.clients,))  # overwrites BENCH_sim.json
+              fold_cohorts=(args.clients,),
+              frontier_cohort=16)  # overwrites BENCH_sim.json
 
     with open(OUT_PATH) as f:
         fresh, _ = _guardable(json.load(f), args.window)
-    main_key = ("lstm_regression", args.clients, "sweep", "sequential")
+    main_key = ("lstm_regression", args.clients, "sweep", "sequential",
+                "identity")
     if main_key not in fresh:
         print("perf_guard: rerun produced no comparable main record",
               file=sys.stderr)
         sys.exit(2)
     if not baseline:
-        summary = {f"{w}@{k}[{kind}/{fm}]": r["iters_per_s"]
-                   for (w, k, kind, fm), r in sorted(fresh.items())}
+        summary = {f"{w}@{k}[{kind}/{fm}/{uc}]": r["iters_per_s"]
+                   for (w, k, kind, fm, uc), r in sorted(fresh.items())}
         print(f"perf_guard: fresh records {summary} (no baseline to "
               "compare — commit BENCH_sim.json to arm the guard)")
         sys.exit(0)
 
     failed = False
     for key, base_rec in sorted(baseline.items()):
-        wl, K, kind, fm = key
+        wl, K, kind, fm, uc = key
         fresh_rec: Optional[dict] = fresh.get(key)
         if fresh_rec is None:
             # a workload removed from the registry (or a different
             # --clients) simply stops being guarded; the committed file
             # gets refreshed by the same nightly run
-            print(f"perf_guard: {wl}@{K} [{kind}/{fm}]: no rerun record — "
-                  "skipped")
+            print(f"perf_guard: {wl}@{K} [{kind}/{fm}/{uc}]: no rerun "
+                  "record — skipped")
             continue
         tol = (args.tolerance if key == main_key
                else args.workload_tolerance)
         base_ips, new_ips = base_rec["iters_per_s"], fresh_rec["iters_per_s"]
         floor = (1.0 - tol) * base_ips
         verdict = "OK" if new_ips >= floor else "REGRESSION"
-        print(f"perf_guard: {verdict} — {wl}@{K} [{kind}/{fm}]: rerun "
+        print(f"perf_guard: {verdict} — {wl}@{K} [{kind}/{fm}/{uc}]: rerun "
               f"{new_ips} iters/s vs baseline {base_ips} "
               f"(floor {floor:.2f} at {tol:.0%})")
         failed = failed or new_ips < floor

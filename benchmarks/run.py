@@ -69,6 +69,15 @@ def main() -> None:
                     help="with --smoke: comma-separated cohort sizes for "
                          "the sequential-vs-associative fold pair "
                          "('none' or '' disables)")
+    ap.add_argument("--upload-codec", default="identity",
+                    help="with --smoke: client->server upload codec the "
+                         "sweep runs under (identity|topk_sparse|"
+                         "random_mask|quantized_delta); validated before "
+                         "the sweep")
+    ap.add_argument("--frontier-cohort", type=int, default=16,
+                    help="with --smoke: cohort size for the per-codec "
+                         "accuracy-vs-bytes upload frontier records "
+                         "(0 disables)")
     args = ap.parse_args()
     quick = not args.full
     want = lambda s: args.only is None or args.only in s  # noqa: E731
@@ -97,7 +106,9 @@ def main() -> None:
                            workload=args.workload,
                            workload_smoke=not args.no_workload_smoke,
                            fold_mode=args.fold_mode,
-                           fold_cohorts=fold_cohorts):
+                           fold_cohorts=fold_cohorts,
+                           upload_codec=args.upload_codec,
+                           frontier_cohort=args.frontier_cohort):
             rows.append(r)
             print(_fmt(*r), flush=True)
         if args.smoke:  # smoke mode runs only the sim sweep

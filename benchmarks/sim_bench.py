@@ -54,12 +54,14 @@ from typing import Dict, List, Tuple
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
 
 
-def validate_bench_args(workload=None, state_dtype=None, scenario=None):
+def validate_bench_args(workload=None, state_dtype=None, scenario=None,
+                        upload_codec=None):
     """Fail fast on typo'd names with the registry's known lists —
     *before* the sweep burns minutes of JIT + bench time.  Choices come
-    from the workload registry / dtype table / scenario dispatcher, never
-    a hand-maintained list here."""
+    from the workload registry / dtype table / scenario dispatcher /
+    upload-codec table, never a hand-maintained list here."""
     from repro.common.dtypes import resolve_state_dtype
+    from repro.core.algorithms.common import resolve_upload_codec
     from repro.sim.traces import scenario_traces
     from repro.sim.workloads import get_workload
 
@@ -68,9 +70,14 @@ def validate_bench_args(workload=None, state_dtype=None, scenario=None):
     resolve_state_dtype(state_dtype)  # ValueError lists accepted dtypes
     if scenario and scenario != "always_on":
         scenario_traces(scenario, 0, seed=0)  # ValueError lists scenarios
+    if upload_codec is not None:
+        from repro.sim.engine import RunConfig
+
+        resolve_upload_codec(RunConfig(upload_codec=upload_codec))
 
 
-def _build(n_clients: int, workload: str = "lstm_regression"):
+def _build(n_clients: int, workload: str = "lstm_regression",
+           bandwidth_range=None):
     from repro.sim.workloads import get_workload
 
     wl = get_workload(workload)
@@ -78,10 +85,35 @@ def _build(n_clients: int, workload: str = "lstm_regression"):
     data = wl.make_data(n_clients)
     from repro.sim.profiles import make_sim_clients
 
-    return wl, cfg_model, model, lambda: make_sim_clients(data, seed=0)
+    return wl, cfg_model, model, lambda: make_sim_clients(
+        data, seed=0, bandwidth_range=bandwidth_range)
 
 
-def _run(model, cfg_model, clients, cfg, mode: str) -> Dict:
+def _lower_better(headline: str) -> bool:
+    return any(s in headline for s in ("smape", "mae", "rmse", "loss",
+                                       "hamming"))
+
+
+def _time_to_loss(history, headline: str) -> Dict:
+    """``simulated_time_to_loss``: the simulated time at which the run's
+    headline eval metric first lands within 5% (relative) of its own
+    final value — the convergence-speed axis of the accuracy-vs-bytes
+    frontier (compression trades per-upload wire time against noisier
+    steps; this column shows where the trade nets out)."""
+    final = float(history[-1].metrics[headline])
+    lb = _lower_better(headline)
+    tol = abs(final) * 0.05
+    for h in history:
+        m = float(h.metrics[headline])
+        if (m <= final + tol) if lb else (m >= final - tol):
+            return {"simulated_time_to_loss": round(float(h.sim_time), 4),
+                    "final_metric": round(final, 6)}
+    return {"simulated_time_to_loss": round(float(history[-1].sim_time), 4),
+            "final_metric": round(final, 6)}
+
+
+def _run(model, cfg_model, clients, cfg, mode: str,
+         headline: str = None) -> Dict:
     from repro.core.algorithms import get_strategy
     from repro.sim.engine import run_strategy
     from repro.sim.reference import run_asofed_reference
@@ -91,10 +123,13 @@ def _run(model, cfg_model, clients, cfg, mode: str) -> Dict:
     if mode.startswith("cohort"):
         # "cohort" rides the adaptive prefetch default (on where the
         # overlap pays, off on <4-core hosts); serial pins it off
-        run_strategy(get_strategy("asofed"), model, cfg_model, clients, cfg,
-                     stats=stats,
-                     prefetch=False if mode == "cohort_serial" else None,
-                     window=1 if mode == "cohort_unfused" else None)
+        history = run_strategy(
+            get_strategy("asofed"), model, cfg_model, clients, cfg,
+            stats=stats,
+            prefetch=False if mode == "cohort_serial" else None,
+            window=1 if mode == "cohort_unfused" else None)
+        if headline and history:
+            stats.update(_time_to_loss(history, headline))
     else:  # the seed per-arrival loop
         run_asofed_reference(model, cfg_model, clients, cfg,
                              collect_trace=False, stats=stats)
@@ -107,7 +142,9 @@ _STAT_COLS = ("host_build_s", "device_s", "eval_s", "prefetch", "devices",
               "peak_live_device_bytes", "tick_cache_size", "staleness_mean",
               "staleness_max", "availability_utilization",
               "deferred_arrivals", "retired_clients", "train_loss_final",
-              "participation_mean", "folds_per_tick_mean")
+              "participation_mean", "folds_per_tick_mean", "sim_time",
+              "upload_codec", "upload_bytes", "upload_bytes_total",
+              "simulated_time_to_loss", "final_metric")
 
 
 def _record(K: int, mode: str, scenario: str, s: Dict, *,
@@ -139,7 +176,9 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
               workload: str = "lstm_regression",
               workload_smoke: bool = True,
               fold_mode: str = "sequential",
-              fold_cohorts=(256, 1024)) -> List[Tuple[str, float, str]]:
+              fold_cohorts=(256, 1024),
+              upload_codec: str = "identity",
+              frontier_cohort: int = 16) -> List[Tuple[str, float, str]]:
     """Smoke sweep: pipelined/serialized/unfused engine vs per-arrival.
 
     ``scenario`` (``diurnal`` / ``bursty`` / ``churn`` / ``flash`` /
@@ -164,13 +203,22 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
     ``speedup_fold[K] = associative / sequential`` iters/s.  The larger
     default cohort (1024) is the heavy-fold regime where the prefix scan
     must at least hold the line.
+
+    ``upload_codec`` threads ``RunConfig.upload_codec`` into the sweep
+    and churn configs (per-codec perf floors — compressed ticks pay the
+    in-tick encode).  ``frontier_cohort`` (0 disables) runs the
+    **accuracy-vs-bytes frontier**: one bandwidth-metered cohort run per
+    registered upload codec at that client count, recording
+    ``upload_bytes`` / ``simulated_time_to_loss`` / ``final_metric`` per
+    codec (kind=``upload_frontier``) so BENCH_sim.json can guard the
+    compression tradeoff itself, not just throughput.
     """
     from repro.sim.traces import scenario_traces, with_traces
 
     # fail fast on typo'd workload/scenario/dtype names — before the
     # always-on sweep burns minutes of JIT + bench time
     validate_bench_args(workload=workload, state_dtype=state_dtype,
-                        scenario=scenario)
+                        scenario=scenario, upload_codec=upload_codec)
     if fold_mode not in ("sequential", "associative", "auto"):
         raise ValueError(f"unknown fold_mode {fold_mode!r}; accepted: "
                          "'sequential' | 'associative' | 'auto'")
@@ -191,7 +239,8 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
         base = wl.run_config(
             T=iters_per_client * K, batch_size=8, local_epochs=2, eta=0.02,
             lam=1.0, beta=0.001, eval_every=50, seed=0,
-            window=window, state_dtype=state_dtype, **fold_kw,
+            window=window, state_dtype=state_dtype,
+            upload_codec=upload_codec, **fold_kw,
         )
         per_mode = {}
         for mode, T in (
@@ -210,8 +259,10 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 # mode comparisons would otherwise be dominated by host
                 # scheduling noise on small shared boxes
                 _run(model, cfg_model, mk(), cfg, mode)
-                s = _run(model, cfg_model, mk(), cfg, mode)
-                s2 = _run(model, cfg_model, mk(), cfg, mode)
+                s = _run(model, cfg_model, mk(), cfg, mode,
+                         headline=wl.headline)
+                s2 = _run(model, cfg_model, mk(), cfg, mode,
+                          headline=wl.headline)
                 if s2["wall_time_s"] < s["wall_time_s"]:
                     s = s2
             else:
@@ -360,6 +411,42 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 ))
             speedup_fold[K] = round(
                 ips["associative"] / max(ips["sequential"], 1e-9), 2)
+    frontier_at = {}
+    if frontier_cohort:
+        # accuracy-vs-bytes frontier: the same bandwidth-metered run per
+        # upload codec — compression shrinks per-upload wire time (faster
+        # simulated arrivals) but adds reconstruction noise; the
+        # (upload_bytes, simulated_time_to_loss, final_metric) triple per
+        # codec is the tradeoff record BENCH_sim.json guards
+        from repro.core.algorithms.common import UPLOAD_CODECS
+
+        K = frontier_cohort
+        wl, cfg_model, model, mk = _build(
+            K, workload, bandwidth_range=(2000.0, 20000.0))
+        for codec in UPLOAD_CODECS:
+            cfg = wl.run_config(
+                T=8 * K, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
+                beta=0.001, eval_every=2 * K, seed=0, window=window,
+                upload_codec=codec, **fold_kw,
+            )
+            _run(model, cfg_model, mk(), cfg, "cohort")  # warmup
+            s = _run(model, cfg_model, mk(), cfg, "cohort",
+                     headline=wl.headline)
+            rec = _record(K, "cohort", "always_on", s, workload=workload,
+                          fold_mode=fold_mode)
+            # frontier rows have their own run shape (8K iters, metered
+            # bandwidth): the kind column keeps the perf guard from
+            # comparing them against sweep rows
+            rec["kind"] = "upload_frontier"
+            records.append(rec)
+            frontier_at[codec] = rec
+            rows.append((
+                f"sim/upload_{codec}/{K}clients",
+                s["wall_time_s"] / max(s["iters"], 1) * 1e6,
+                f"upload_bytes={rec.get('upload_bytes')};sim_time_to_loss="
+                f"{rec.get('simulated_time_to_loss')};final="
+                f"{rec.get('final_metric')}",
+            ))
     payload = {
         "benchmark": "cohort simulation engine throughput (asofed)",
         "metric": ("iters = global iterations (client arrivals folded); "
@@ -408,7 +495,20 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                    "form, feature pass off, 2K iters, eval at K); "
                    "speedup_fold = associative / sequential iters_per_s; "
                    "folds_per_tick_mean = fold-weighted mean of the "
-                   "engine's in-scan fold-depth slot."),
+                   "engine's in-scan fold-depth slot.  Resource columns: "
+                   "upload_codec = RunConfig.upload_codec of the run; "
+                   "upload_bytes = simulated wire bytes of one arrival's "
+                   "encoded upload (a pure function of codec config and "
+                   "model leaf shapes); upload_bytes_total = upload_bytes "
+                   "x folded arrivals; simulated_time_to_loss = simulated "
+                   "seconds until the headline eval metric first lands "
+                   "within 5% (relative) of its own final value; "
+                   "final_metric = that final headline value.  "
+                   "kind=upload_frontier records are the accuracy-vs-"
+                   "bytes frontier: one bandwidth-metered run per upload "
+                   "codec (bandwidth_bytes_per_s ~ U[2e3, 2e4] per "
+                   "client), identical otherwise — compression trades "
+                   "per-upload wire time against reconstruction noise."),
         "records": records,
         "sweep_workload": workload,
         "sweep_fold_mode": fold_mode,
@@ -426,6 +526,19 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                      "folds_per_tick_mean": rec.get("folds_per_tick_mean")}
                 for fm, rec in per.items()}
             for K, per in fold_at.items()
+        }
+    if frontier_at:
+        # per-codec (bytes, simulated-time-to-loss, final metric): the
+        # accuracy-vs-bytes frontier at the bandwidth-metered cohort
+        payload["upload_frontier"] = {
+            codec: {
+                "upload_bytes": rec.get("upload_bytes"),
+                "upload_bytes_total": rec.get("upload_bytes_total"),
+                "simulated_time_to_loss": rec.get("simulated_time_to_loss"),
+                "final_metric": rec.get("final_metric"),
+                "iters_per_s": rec["iters_per_s"],
+            }
+            for codec, rec in frontier_at.items()
         }
     if workload_at:
         payload["workload_smoke"] = {

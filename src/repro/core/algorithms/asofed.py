@@ -61,6 +61,12 @@ class AsoFedStrategy(Strategy):
         )
         return ClientStateCodec(dtype=dt, anchor=anchor, mask=mask)
 
+    def upload_codec_view(self, model, cfg):
+        # the upload IS the wire delta already (params - new_params): the
+        # codec round-trips it in place, no rebuild plumbing needed
+        return (lambda up, c0, bcast: up,
+                lambda up, d, c0, bcast: d)
+
     def init_server(self, model, cfg_model, cfg, w0, clients, active):
         # per-client online sample counts n'_k, indexed by cid; one extra
         # scratch slot absorbs padded-slot writes.  Dropped clients hold 0

@@ -6,6 +6,7 @@ the stacked client axis and jits the whole tick, so no ``jax.jit`` here.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -70,6 +71,141 @@ class ClientStateCodec:
             lambda x, a, m: a + x.astype(a.dtype) if m else x,
             state, self.anchor, self.mask,
         )
+
+
+# ---------------------------------------------------------------------------
+# Lossy upload compression (the client -> server wire delta)
+# ---------------------------------------------------------------------------
+
+UPLOAD_CODECS = ("identity", "topk_sparse", "random_mask", "quantized_delta")
+
+
+@dataclasses.dataclass(frozen=True)
+class UploadCodec:
+    """Lossy compressor for the client→server upload stream.
+
+    Where :class:`ClientStateCodec` compresses state *at rest* (the
+    stacked per-client pytree between ticks), this codec compresses the
+    *wire delta* each arrival uploads: the engine applies ``encode``
+    inside the jitted tick (vmapped over the cohort axis, right between
+    the local rounds and the server fold), and the per-arrival reference
+    oracles apply the identical traceable function one arrival at a time
+    — so engine == oracle holds per codec, like every other engine
+    contract.  The simulator models compress-then-decompress in one
+    step: the fold consumes the lossily reconstructed dense delta, while
+    ``leaf_bytes``/``tree_bytes`` account what the compressed form would
+    have cost on the wire.  Bytes are a **pure function of codec config
+    and leaf shapes** — no randomness — so feeding them into the
+    scheduler's bandwidth-metered delay draws preserves pop-time-draw
+    determinism, chunk-invariance, and the peek/commit contract.
+
+    Codecs (``frac`` = kept-coordinate fraction, ``bits`` = integer
+    width):
+
+    * ``identity``        — passthrough (bitwise); full fp32 wire cost;
+    * ``topk_sparse``     — keep the ``ceil(frac·n)`` largest-|x| coords
+      per leaf, zero the rest; wire cost = k · (value + index);
+    * ``random_mask``     — keep a seeded-uniform ``k``-subset, rescaled
+      by ``n/k`` (unbiased); the mask regenerates from an 8-byte seed,
+      so wire cost = k values + the seed.  The mask PRNG is keyed by
+      (run seed, arrival stamp, client row) via the ``key`` argument —
+      deterministic, fold-invariant, consuming no host randomness;
+    * ``quantized_delta`` — per-leaf symmetric uniform quantization to
+      ``bits``-bit integers (scale = max|x| / (2^(bits-1) − 1)); wire
+      cost = n · bits/8 + the fp32 scale.
+    """
+
+    name: str = "identity"
+    frac: float = 0.1  # kept-coordinate fraction (topk_sparse/random_mask)
+    bits: int = 8  # quantized_delta integer width
+
+    @property
+    def identity(self) -> bool:
+        return self.name == "identity"
+
+    @property
+    def uses_rng(self) -> bool:
+        """True when ``encode`` consumes the PRNG key — the tick cache
+        must then re-key on the run seed (the key constant is baked into
+        the trace, like the state codec's anchor)."""
+        return self.name == "random_mask"
+
+    def _k(self, n: int) -> int:
+        return max(1, min(n, int(math.ceil(self.frac * n))))
+
+    def encode(self, delta, key):
+        """Lossy round-trip of one arrival's wire delta (traceable).
+
+        ``key`` is a jax PRNG key, consumed only by ``random_mask``
+        (per-leaf subkeys via ``fold_in`` of the flatten position, so
+        structurally identical pytrees mask identically).
+        """
+        if self.identity:
+            return delta
+        leaves, treedef = jax.tree.flatten(delta)
+        out = [self._encode_leaf(x, jax.random.fold_in(key, i))
+               for i, x in enumerate(leaves)]
+        return jax.tree.unflatten(treedef, out)
+
+    def _encode_leaf(self, x, key):
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        if self.name == "topk_sparse":
+            _, keep = jax.lax.top_k(jnp.abs(flat), self._k(n))
+            out = jnp.zeros_like(flat).at[keep].set(flat[keep])
+        elif self.name == "random_mask":
+            k = self._k(n)
+            keep = jax.random.permutation(key, n)[:k]
+            # rescale by n/k so the masked delta is unbiased in
+            # expectation (the standard rand-k estimator)
+            out = jnp.zeros_like(flat).at[keep].set(flat[keep] * (n / k))
+        else:  # quantized_delta
+            levels = float(2 ** (self.bits - 1) - 1)
+            amax = jnp.max(jnp.abs(flat))
+            scale = jnp.where(amax > 0.0, amax / levels, 1.0)
+            out = jnp.clip(jnp.round(flat / scale), -levels, levels) * scale
+        return out.reshape(x.shape)
+
+    # -- wire-cost accounting (host-side, pure) --------------------------
+    def leaf_bytes(self, size: int, itemsize: int = 4) -> float:
+        """Simulated wire bytes of one encoded leaf of ``size`` elems."""
+        if self.name == "identity":
+            return float(size * itemsize)
+        k = self._k(size)
+        if self.name == "topk_sparse":
+            return float(k * (itemsize + 4))  # (value, index) pairs
+        if self.name == "random_mask":
+            return float(k * itemsize + 8)  # values + the mask seed
+        return float(size) * self.bits / 8.0 + itemsize  # codes + scale
+
+    def tree_bytes(self, tree) -> float:
+        """Simulated wire bytes of one arrival's encoded delta pytree —
+        the per-arrival ``upload_bytes`` the scheduler meters against
+        ``DeviceProfile.bandwidth_bytes_per_s``."""
+        return float(sum(
+            self.leaf_bytes(int(x.size), jnp.dtype(x.dtype).itemsize)
+            for x in jax.tree.leaves(tree)))
+
+
+def resolve_upload_codec(cfg) -> UploadCodec:
+    """The run's :class:`UploadCodec` from ``RunConfig.upload_codec`` /
+    ``upload_frac`` / ``upload_bits``, failing fast (readably) on an
+    unknown codec name or out-of-range knobs — the engine calls this in
+    its pre-compile validation, mirroring ``resolve_state_dtype``."""
+    name = getattr(cfg, "upload_codec", None) or "identity"
+    if name not in UPLOAD_CODECS:
+        raise ValueError(
+            f"unknown upload_codec {name!r}; accepted: "
+            + " | ".join(repr(n) for n in UPLOAD_CODECS))
+    frac = float(getattr(cfg, "upload_frac", 0.1))
+    bits = int(getattr(cfg, "upload_bits", 8))
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(
+            f"upload_frac must be in (0, 1], got {frac}")
+    if not 2 <= bits <= 16:
+        raise ValueError(
+            f"upload_bits must be in [2, 16], got {bits}")
+    return UploadCodec(name=name, frac=frac, bits=bits)
 
 
 def bool_tree(tree, flag: bool):

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.dtypes import resolve_state_dtype
+from repro.common.pytree import tree_sub
 from repro.core.algorithms.common import (ClientStateCodec, bcast_rows,
                                           bool_tree, sgd_epochs)
 from repro.sim.engine import Strategy
@@ -38,6 +39,19 @@ class FedAsyncStrategy(Strategy):
             anchor={"w": w0, "version": jnp.zeros((), jnp.float32)},
             mask={"w": bool_tree(w0, True), "version": False},
         )
+
+    def upload_codec_view(self, model, cfg):
+        # the wire delta is the local progress wk - w_stale (the client's
+        # pre-round copy is the model the server already knows about from
+        # its last download); the version stamp passes through untouched
+        def extract(up, c0, bcast):
+            return tree_sub(up["wk"], c0["w"])
+
+        def rebuild(up, d, c0, bcast):
+            return {"wk": jax.tree.map(jnp.add, c0["w"], d),
+                    "version": up["version"]}
+
+        return extract, rebuild
 
     def init_server(self, model, cfg_model, cfg, w0, clients, active):
         return {"w": w0}

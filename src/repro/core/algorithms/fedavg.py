@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.common.pytree import tree_zeros_like
+from repro.common.pytree import tree_sub, tree_zeros_like
 from repro.core.algorithms.common import bcast_rows, sgd_epochs
 from repro.sim.engine import Strategy
 
@@ -30,6 +30,17 @@ class FedAvgStrategy(Strategy):
 
     def server_broadcast(self, server):
         return server["w"]
+
+    def upload_codec_view(self, model, cfg):
+        # the upload is the full local model; its wire delta is measured
+        # against the round's broadcast (what the server just sent down)
+        def extract(wk, c0, bcast):
+            return tree_sub(wk, bcast)
+
+        def rebuild(wk, d, c0, bcast):
+            return jax.tree.map(jnp.add, bcast, d)
+
+        return extract, rebuild
 
     def build_local(self, model, cfg):
         sgd = sgd_epochs(model, cfg, mu=self.mu(cfg))

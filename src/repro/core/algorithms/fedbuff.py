@@ -65,6 +65,17 @@ class FedBuffStrategy(Strategy):
             mask={"w": bool_tree(w0, True), "version": False},
         )
 
+    def upload_codec_view(self, model, cfg):
+        # the upload already carries its wire delta (pre - post SGD);
+        # the version stamp rides through untouched
+        def extract(up, c0, bcast):
+            return up["delta"]
+
+        def rebuild(up, d, c0, bcast):
+            return {"delta": d, "version": up["version"]}
+
+        return extract, rebuild
+
     def init_server(self, model, cfg_model, cfg, w0, clients, active):
         if cfg.buffer_size < 1:
             raise ValueError(

@@ -122,6 +122,19 @@ def tick_body(strategy, model, cfg_model, cfg, mesh: Optional[Mesh], codec,
     finalize = strategy.build_finalize(model, cfg)
     server_tel = (strategy.build_server_telemetry(model, cfg)
                   if server_slots else None)
+    # lazy: the strategy modules import Strategy from repro.sim.engine,
+    # so a top-level repro.core import from the sim side would be circular
+    from repro.core.algorithms.common import resolve_upload_codec
+
+    ucodec = resolve_upload_codec(cfg)
+    uview = (strategy.upload_codec_view(model, cfg)
+             if not ucodec.identity else None)
+    if not ucodec.identity and uview is None:
+        # the engine fail-fasts this before compiling; repeated here so
+        # tick_body can't silently no-op if reached through another door
+        raise ValueError(
+            f"upload_codec={ucodec.name!r} requires an upload_codec_view "
+            f"from strategy {strategy.name!r}")
     vlocal = jax.vmap(local, in_axes=(0, None, 0, 0, 0, 0, 0))
 
     def tick(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask):
@@ -154,6 +167,24 @@ def tick_body(strategy, model, cfg_model, cfg, mesh: Optional[Mesh], codec,
         else:
             cohort, uploads, tel = vlocal(
                 cohort0, bcast, xs, ys, delays, n_vis, t_arr)
+        if uview is not None:
+            # lossy upload compression: round-trip each arrival's wire
+            # delta through the UploadCodec before the fold consumes it.
+            # The PRNG key (random_mask only) is a pure function of (run
+            # seed, arrival stamp, client row) — the per-arrival oracle
+            # derives the identical key, so engine == oracle stays exact.
+            # Masked padding slots encode garbage that mask_select /
+            # tree_where discard, same as the local rounds themselves.
+            extract, rebuild = uview
+
+            def encode_one(up, c0, t_i, ix):
+                key = jax.random.fold_in(jax.random.fold_in(
+                    jax.random.PRNGKey(cfg.seed), t_i.astype(jnp.int32)),
+                    ix.astype(jnp.int32))
+                d = ucodec.encode(extract(up, c0, bcast), key)
+                return rebuild(up, d, c0, bcast)
+
+            uploads = jax.vmap(encode_one)(uploads, cohort0, t_arr, idx)
         tel_row = reduce_telemetry(tel, mask, slots)
         if fold is not None:
             if affine is not None:
@@ -282,7 +313,12 @@ def tick_fn(strategy, model, cfg_model, cfg, K: int, mesh: Optional[Mesh], *,
     mesh_key = (tuple(mesh.shape.items()),
                 tuple(d.id for d in mesh.devices.flat)) \
         if mesh is not None else None
-    codec_key = cfg.seed if codec is not None and not codec.identity else None
+    # ... and a random_mask upload codec closes over PRNGKey(cfg.seed)
+    # the same way (the mask key constant is baked into the trace)
+    from repro.core.algorithms.common import resolve_upload_codec
+
+    codec_key = cfg.seed if ((codec is not None and not codec.identity)
+                             or resolve_upload_codec(cfg).uses_rng) else None
     key = (id(model), id(cfg_model), type(strategy).__name__, strategy.name,
            cfg_cache_key(cfg), K, mesh_key, windowed, codec_key, slots,
            server_slots)

@@ -170,6 +170,17 @@ class RunConfig:
     fold_mode: str = "sequential"
     fold_kernel: Optional[bool] = None
     fold_kernel_interpret: bool = False
+    # upload compression: the client→server wire delta of each arrival is
+    # passed through an UploadCodec ("identity" | "topk_sparse" |
+    # "random_mask" | "quantized_delta" — repro.core.algorithms.common)
+    # inside the jitted tick, and its simulated wire cost feeds the
+    # scheduler's bandwidth-metered delay draws (DeviceProfile.
+    # bandwidth_bytes_per_s).  `upload_frac` is the kept-coordinate
+    # fraction (topk_sparse / random_mask); `upload_bits` the
+    # quantized_delta integer width.  "identity" is bitwise passthrough.
+    upload_codec: str = "identity"
+    upload_frac: float = 0.1
+    upload_bits: int = 8
 
 
 @dataclasses.dataclass
@@ -254,6 +265,27 @@ class Strategy:
         (``repro.core.algorithms.common``).  None (the default, and the
         required answer for ``state_dtype in (None, "fp32")``) stores the
         fp32 master state directly — the bitwise-replayable path."""
+        return None
+
+    def upload_codec_view(self, model, cfg: RunConfig):
+        """Optional ``(extract, rebuild)`` pair exposing the strategy's
+        *wire delta* — the model-parameter-shaped pytree each arrival
+        actually transmits — for lossy upload compression
+        (``RunConfig.upload_codec``):
+
+        * ``extract(upload, carry0, bcast) -> delta``: the transmitted
+          delta, as a pytree shaped like the model parameters
+          (``carry0`` is the client's pre-round carry, ``bcast`` the
+          tick's server broadcast — whichever baseline the upload is
+          relative to);
+        * ``rebuild(upload, delta, carry0, bcast) -> upload'``: the
+          upload with its delta replaced by the lossily reconstructed
+          one (non-delta fields, e.g. version stamps, pass through).
+
+        Both must be traceable and per-arrival (the engine vmaps them
+        over the cohort axis).  Return None (the default) when the
+        strategy has no compressible upload (the Local/Global sweep
+        baselines) — a non-identity ``upload_codec`` then fails fast."""
         return None
 
     # -- traceable pieces ------------------------------------------------
@@ -427,8 +459,27 @@ def run_strategy(
     # ... and so must an unknown fold_mode, or fold_mode="associative"
     # with a strategy that declines the affine fold form
     compile_lib.resolve_fold_affine(strategy, model, cfg_model, cfg)
+    # ... and an unknown upload codec / out-of-range knobs, or a lossy
+    # codec on a strategy with no compressible upload.  (Imported here:
+    # the strategy modules import Strategy from this module, so a
+    # top-level import of repro.core would be circular.)
+    from repro.core.algorithms.common import resolve_upload_codec
+
+    ucodec = resolve_upload_codec(cfg)
+    uview = strategy.upload_codec_view(model, cfg)
+    if not ucodec.identity and uview is None:
+        raise ValueError(
+            f"upload_codec={cfg.upload_codec!r} requires a strategy with "
+            f"a compressible upload, but {strategy.name!r} provides no "
+            "upload_codec_view (the Local/Global sweep baselines upload "
+            "nothing)")
     w0 = model.init(jax.random.PRNGKey(cfg.seed))
     codec = strategy.state_codec(model, cfg, w0)
+    # simulated wire cost of one arrival's (encoded) upload — a pure
+    # function of codec config and model leaf shapes, fed to the
+    # schedulers' bandwidth-metered delay draws.  Strategies without an
+    # upload (sweep baselines) transmit nothing.
+    upload_bytes = ucodec.tree_bytes(w0) if uview is not None else 0.0
     client_slots = tuple(strategy.telemetry_slots(cfg))
     server_slots = tuple(strategy.server_telemetry_slots(cfg))
     # the engine-owned fold-depth slot rides between the two blocks
@@ -440,6 +491,7 @@ def run_strategy(
         sched = AsyncScheduler(
             clients, seed=cfg.seed, dropout_frac=drop, skip_prob=skip,
             init_work=B, round_work=E * B, sim_time_budget=cfg.sim_time_budget,
+            upload_bytes=upload_bytes,
         )
         active = sched.active
         pad = max(1, min(max_cohort or len(active), max(len(active), 1)))
@@ -447,6 +499,7 @@ def run_strategy(
         sched = SyncScheduler(
             clients, seed=cfg.seed, dropout_frac=drop, skip_prob=skip,
             participation=cfg.participation, round_work=E * B,
+            upload_bytes=upload_bytes,
         )
         active = sched.active
         pad = sched.m
@@ -521,6 +574,7 @@ def run_strategy(
     device_s = 0.0
     eval_s = 0.0
     n_ticks, n_windows, t, sim_time = 0, 0, 0, 0.0
+    n_uploads = 0  # folded arrivals (each transmits one encoded delta)
     t0 = time.perf_counter()
 
     def eval_params():
@@ -689,6 +743,7 @@ def run_strategy(
             pt = builder.build(arrivals, [t] * len(arrivals), sim_time,
                                pooled_batch=pooled, advance=False)
             dispatch(pt)
+            n_uploads += len(arrivals)
             sim_time = sim_time + round_time if strategy.schedule == "sync" \
                 else float(t)
             if trace is not None:
@@ -725,6 +780,13 @@ def run_strategy(
                 availability_utilization(active, sim_time), 4),
             deferred_arrivals=int(getattr(sched, "deferred", 0)),
             retired_clients=int(getattr(sched, "retired", 0)),
+            # resource accounting: simulated wire bytes of one arrival's
+            # encoded upload, and the run's total over every folded
+            # arrival (async iterations each fold exactly one upload)
+            upload_codec=ucodec.name,
+            upload_bytes=float(upload_bytes),
+            upload_bytes_total=float(upload_bytes) * (
+                t if strategy.schedule == "async" else n_uploads),
         )
         for k, v in telem.summary().items():
             stats[k] = round(v, 6) if isinstance(v, float) else v

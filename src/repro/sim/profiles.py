@@ -31,17 +31,34 @@ class DeviceProfile:
     ``trace``, when set, is the device's replayable availability: the
     async scheduler defers any completion landing in an off-window to the
     next on-window edge (``repro.sim.traces``).  ``None`` = always on.
+
+    ``bandwidth_bytes_per_s``, when set, meters the device's upload
+    link: schedulers add ``upload_time(upload_bytes)`` — a deterministic
+    per-client constant, no rng draw — to every round delay, so
+    compressed uploads (``RunConfig.upload_codec``) feed *simulated
+    arrival times*.  ``None`` (the default) is the unmetered pre-PR-7
+    behavior: upload cost 0.0, delay draws bitwise unchanged.
     """
 
     base_delay: float  # mean network offset, seconds (paper: U[10, 100])
     compute_rate: float = 2000.0  # samples / simulated second
     jitter: Tuple[float, float] = (0.8, 1.2)  # multiplicative network jitter
     trace: Optional[AvailabilityTrace] = None  # replayable on/off windows
+    bandwidth_bytes_per_s: Optional[float] = None  # upload link (None: free)
 
     def delay(self, rng: np.random.Generator, n_work: int) -> float:
         compute = n_work / self.compute_rate
         network = self.base_delay * float(rng.uniform(*self.jitter))
         return compute + network
+
+    def upload_time(self, nbytes: float) -> float:
+        """Simulated seconds to push ``nbytes`` through the upload link
+        — 0.0 when unmetered, and rng-free always (the scheduler adds it
+        on top of the pop-time delay draw without perturbing the
+        stream)."""
+        if self.bandwidth_bytes_per_s is None or nbytes <= 0.0:
+            return 0.0
+        return float(nbytes) / float(self.bandwidth_bytes_per_s)
 
 
 def make_profiles(
@@ -50,14 +67,24 @@ def make_profiles(
     seed: int = 0,
     delay_range: Tuple[float, float] = (10.0, 100.0),
     compute_rate: float = 2000.0,
+    bandwidth_range: Optional[Tuple[float, float]] = None,
 ) -> List[DeviceProfile]:
-    """n independent profiles with network offsets drawn from delay_range."""
+    """n independent profiles with network offsets drawn from delay_range.
+
+    ``bandwidth_range``, when given, additionally draws each client's
+    upload-link ``bandwidth_bytes_per_s`` from U[bandwidth_range] —
+    interleaved *after* that client's offset draw, so a ``None`` range
+    (the default) leaves the offset rng stream bitwise unchanged.
+    """
     rng = np.random.default_rng(seed)
-    return [
-        DeviceProfile(base_delay=float(rng.uniform(*delay_range)),
-                      compute_rate=compute_rate)
-        for _ in range(n)
-    ]
+    out = []
+    for _ in range(n):
+        base = float(rng.uniform(*delay_range))
+        bw = (float(rng.uniform(*bandwidth_range))
+              if bandwidth_range is not None else None)
+        out.append(DeviceProfile(base_delay=base, compute_rate=compute_rate,
+                                 bandwidth_bytes_per_s=bw))
+    return out
 
 
 @dataclasses.dataclass
@@ -92,6 +119,7 @@ def make_sim_clients(
     growth: float = 0.00075,
     profiles: Optional[Sequence[DeviceProfile]] = None,
     traces: Optional[Sequence[Optional[AvailabilityTrace]]] = None,
+    bandwidth_range: Optional[Tuple[float, float]] = None,
 ) -> List[SimClient]:
     """Build SimClients from (train_x, train_y, test_x, test_y) splits.
 
@@ -100,15 +128,36 @@ def make_sim_clients(
     seeded ``seed + i``.  ``traces[i]``, when given, becomes client i's
     availability trace (``None`` entries stay always-on) — the profile
     delay draws are unaffected, so attaching traces never perturbs the
-    delay rng stream.
+    delay rng stream.  ``bandwidth_range``, when given, draws client i's
+    upload-link bytes/s right after its offset (same interleaving as
+    ``make_profiles``): a ``None`` range keeps the offset stream bitwise.
+
+    ``profiles``/``traces`` must supply exactly one entry per dataset —
+    a short list raises up front instead of mis-indexing mid-build.
     """
+    if profiles is not None and len(profiles) != len(datasets):
+        raise ValueError(
+            f"profiles has {len(profiles)} entries for {len(datasets)} "
+            "datasets; pass exactly one DeviceProfile per client")
+    if traces is not None and len(traces) != len(datasets):
+        raise ValueError(
+            f"traces has {len(traces)} entries for {len(datasets)} "
+            "datasets; pass exactly one AvailabilityTrace (or None) per "
+            "client")
+    if profiles is not None and bandwidth_range is not None:
+        raise ValueError(
+            "bandwidth_range only applies to generated profiles; set "
+            "bandwidth_bytes_per_s on the DeviceProfiles you pass instead")
     rng = np.random.default_rng(seed)
     out = []
     for i, (xtr, ytr, xte, yte) in enumerate(datasets):
         if profiles is not None:
             prof = profiles[i]
         else:
-            prof = DeviceProfile(base_delay=float(rng.uniform(*delay_range)))
+            base = float(rng.uniform(*delay_range))
+            bw = (float(rng.uniform(*bandwidth_range))
+                  if bandwidth_range is not None else None)
+            prof = DeviceProfile(base_delay=base, bandwidth_bytes_per_s=bw)
         if traces is not None and traces[i] is not None:
             prof = dataclasses.replace(prof, trace=traces[i])
         out.append(

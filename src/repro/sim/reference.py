@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.common.pytree import tree_axpy, tree_sub, tree_zeros_like
 from repro.core import client as client_lib
-from repro.core.algorithms.common import avg_surrogate_grad, sgd_epochs
+from repro.core.algorithms.common import (avg_surrogate_grad,
+                                          resolve_upload_codec, sgd_epochs)
 from repro.core.server import aggregate, init_server
 from repro.sim.engine import RunConfig, stack_batches
 from repro.sim.prefetch import StalenessMeter
@@ -65,13 +66,43 @@ def _eval_all_per_client(model, params, clients, cfg: RunConfig):
                                     np.concatenate(targets))
 
 
-def _make_scheduler(clients, cfg: RunConfig) -> AsyncScheduler:
+def _make_scheduler(clients, cfg: RunConfig,
+                    upload_bytes: float = 0.0) -> AsyncScheduler:
     return AsyncScheduler(
         clients, seed=cfg.seed, dropout_frac=cfg.dropout_frac,
         skip_prob=cfg.periodic_dropout, init_work=cfg.batch_size,
         round_work=cfg.local_epochs * cfg.batch_size,
-        sim_time_budget=cfg.sim_time_budget,
+        sim_time_budget=cfg.sim_time_budget, upload_bytes=upload_bytes,
     )
+
+
+def _upload_encoder(cfg: RunConfig):
+    """Per-arrival oracle of the engine's in-tick upload compression:
+    a jitted ``enc(delta, t, cid) -> delta'`` round-tripping one wire
+    delta through the run's :class:`UploadCodec`, with the identical
+    ``fold_in(fold_in(PRNGKey(seed), t), cid)`` mask keying the vmapped
+    tick derives — threefry is deterministic, so engine and oracle mask
+    the same coordinates bit-for-bit.  None for the identity codec."""
+    codec = resolve_upload_codec(cfg)
+    if codec.identity:
+        return None
+
+    @jax.jit
+    def enc(delta, t, cid):
+        key = jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(cfg.seed), t), cid)
+        return codec.encode(delta, key)
+
+    # t/cid enter as jnp scalars so one trace serves every arrival
+    return lambda delta, t, cid: enc(delta, jnp.int32(t), jnp.int32(cid))
+
+
+def _upload_stats(stats: Dict, cfg: RunConfig, w0, n_uploads: int) -> None:
+    """The engine's resource-accounting stats columns, oracle-side."""
+    codec = resolve_upload_codec(cfg)
+    nbytes = codec.tree_bytes(w0)
+    stats.update(upload_codec=codec.name, upload_bytes=float(nbytes),
+                 upload_bytes_total=float(nbytes) * n_uploads)
 
 
 def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
@@ -86,7 +117,9 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
     engine's in-scan telemetry accumulator is tested against.
     """
     w0 = model.init(jax.random.PRNGKey(cfg.seed))
-    sched = _make_scheduler(clients, cfg)
+    enc = _upload_encoder(cfg)
+    upload_bytes = resolve_upload_codec(cfg).tree_bytes(w0)
+    sched = _make_scheduler(clients, cfg, upload_bytes)
     active = sched.active
     server = init_server(w0, [c.cid for c in active],
                          {c.cid: c.stream.visible(0) for c in active},
@@ -134,8 +167,11 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
                                jnp.float32(a.delay), jnp.float32(n_new))
         if losses is not None:
             losses[t] = float(loss)  # keyed by the pre-fold iteration stamp
+        delta = tree_sub(st_before, st.params)
+        if enc is not None:  # lossy upload: same (seed, t, cid) mask key
+            delta = enc(delta, t, a.cid)  # as the engine's in-tick vmap
         server = aggregate(  # eager delta + second dispatch, as in the seed
-            server, a.cid, tree_sub(st_before, st.params), n_vis, cfg_model,
+            server, a.cid, delta, n_vis, cfg_model,
             upload_is_delta=True, feature_learning=cfg.feature_learning,
         )
         t = server.t
@@ -148,6 +184,7 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
     if stats is not None:
         stats.update(iters=t, ticks=t, evals=n_evals)
         churn.update(stats, sched)
+        _upload_stats(stats, cfg, w0, t)
     return traj
 
 
@@ -162,7 +199,9 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
     oracle), keyed like the asofed reference.
     """
     w = model.init(jax.random.PRNGKey(cfg.seed))
-    sched = _make_scheduler(clients, cfg)
+    enc = _upload_encoder(cfg)
+    sched = _make_scheduler(clients, cfg,
+                            resolve_upload_codec(cfg).tree_bytes(w))
     sgd = jax.jit(sgd_epochs(model, cfg, mu=0.005))
     version = {c.cid: 0 for c in sched.active}
     local_w = {c.cid: w for c in sched.active}
@@ -184,6 +223,10 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
                        jnp.asarray(xs), jnp.asarray(ys))
         if losses is not None:
             losses[t] = float(loss)
+        if enc is not None:  # wire delta = local progress vs the stale copy
+            wk = jax.tree.map(
+                jnp.add, local_w[a.cid],
+                enc(tree_sub(wk, local_w[a.cid]), t, a.cid))
         staleness = t - version[a.cid]
         alpha_t = cfg.fedasync_alpha * (1.0 + staleness) ** (
             -cfg.fedasync_staleness_exp
@@ -200,6 +243,7 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
     if stats is not None:
         stats.update(iters=t, ticks=t, evals=n_evals)
         churn.update(stats, sched)
+        _upload_stats(stats, cfg, w, n_uploads=t)
     return traj
 
 
@@ -217,7 +261,9 @@ def run_fedbuff_reference(model, cfg_model, clients, cfg: RunConfig, *,
     always download the current central model.
     """
     w = model.init(jax.random.PRNGKey(cfg.seed))
-    sched = _make_scheduler(clients, cfg)
+    enc = _upload_encoder(cfg)
+    sched = _make_scheduler(clients, cfg,
+                            resolve_upload_codec(cfg).tree_bytes(w))
     sgd = jax.jit(sgd_epochs(model, cfg, mu=0.0))
     version = {c.cid: 0 for c in sched.active}
     local_w = {c.cid: w for c in sched.active}
@@ -244,7 +290,10 @@ def run_fedbuff_reference(model, cfg_model, clients, cfg: RunConfig, *,
             losses[t] = float(loss)
         staleness = t - version[a.cid]
         s_w = float(1.0 / np.sqrt(1.0 + np.float32(staleness)))
-        buf = tree_axpy(s_w, tree_sub(local_w[a.cid], wk), buf)
+        delta = tree_sub(local_w[a.cid], wk)
+        if enc is not None:  # the buffered deposit is the wire delta
+            delta = enc(delta, t, a.cid)
+        buf = tree_axpy(s_w, delta, buf)
         count += 1
         if count >= M:
             w = tree_axpy(-cfg.fedbuff_lr / M, buf, w)
@@ -261,6 +310,7 @@ def run_fedbuff_reference(model, cfg_model, clients, cfg: RunConfig, *,
     if stats is not None:
         stats.update(iters=t, ticks=t, evals=n_evals)
         churn.update(stats, sched)
+        _upload_stats(stats, cfg, w, n_uploads=t)
     return traj
 
 
@@ -277,15 +327,17 @@ def run_fedavg_reference(model, cfg_model, clients, cfg: RunConfig, *,
     the engine's sync loop step for step.
     """
     w = model.init(jax.random.PRNGKey(cfg.seed))
+    enc = _upload_encoder(cfg)
     sched = SyncScheduler(
         clients, seed=cfg.seed, dropout_frac=cfg.dropout_frac,
         skip_prob=cfg.periodic_dropout, participation=cfg.participation,
         round_work=cfg.local_epochs * cfg.batch_size,
+        upload_bytes=resolve_upload_codec(cfg).tree_bytes(w),
     )
     by_id = {c.cid: c for c in sched.active}
     sgd = jax.jit(sgd_epochs(model, cfg, mu=prox_mu))
     traj: Dict[int, object] = {}
-    sim_time, n_evals = 0.0, 0
+    sim_time, n_evals, n_uploads = 0.0, 0, 0
     for t in range(1, cfg.T + 1):
         if cfg.sim_time_budget and sim_time > cfg.sim_time_budget:
             break
@@ -300,8 +352,13 @@ def run_fedavg_reference(model, cfg_model, clients, cfg: RunConfig, *,
             c = by_id[a.cid]
             xs, ys = stack_batches(c.stream, t, cfg.batch_size,
                                    cfg.local_epochs)
-            new_ws.append(sgd(w, w, jnp.asarray(xs), jnp.asarray(ys))[0])
+            wk = sgd(w, w, jnp.asarray(xs), jnp.asarray(ys))[0]
+            if enc is not None:  # wire delta vs the round's broadcast; the
+                # engine stamps every participant with the round index t
+                wk = jax.tree.map(jnp.add, w, enc(tree_sub(wk, w), t, a.cid))
+            new_ws.append(wk)
             weights.append(c.stream.visible(t))
+        n_uploads += len(arrivals)
         sim_time += round_time
         tot = sum(weights)
         w = jax.tree.map(
@@ -315,4 +372,5 @@ def run_fedavg_reference(model, cfg_model, clients, cfg: RunConfig, *,
             _eval_all_per_client(model, w, clients, cfg)
     if stats is not None:
         stats.update(iters=t, ticks=t, evals=n_evals)
+        _upload_stats(stats, cfg, w, n_uploads)
     return traj

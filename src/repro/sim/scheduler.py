@@ -94,12 +94,22 @@ class AsyncScheduler:
     off-window completion is re-queued at the next on-window edge, an
     exhausted one-shot trace retires the client (``deferred`` / ``retired``
     count both, and roll back with the speculation state).
+
+    ``upload_bytes`` meters the client→server upload against each
+    device's ``DeviceProfile.bandwidth_bytes_per_s``: every completion
+    (including the initial round) costs ``upload_time(upload_bytes)``
+    extra simulated seconds.  The cost is a pure per-client constant —
+    no rng draw — so the event stream stays a pure function of (rng
+    state, heap) and every chunk-invariance / speculation contract
+    survives; unmetered profiles (bandwidth ``None``, the default) add
+    exactly 0.0 and replay the pre-bandwidth stream bitwise.
     """
 
     def __init__(self, clients: Sequence[SimClient], *, seed: int = 0,
                  dropout_frac: float = 0.0, skip_prob: float = 0.0,
                  init_work: int = 32, round_work: int = 64,
-                 sim_time_budget: Optional[float] = None):
+                 sim_time_budget: Optional[float] = None,
+                 upload_bytes: float = 0.0):
         self.rng = np.random.default_rng(seed)
         self.active, self.dropped_cids = _split_active(
             clients, dropout_frac, self.rng)
@@ -108,13 +118,16 @@ class AsyncScheduler:
         self.init_work = init_work
         self.round_work = round_work
         self.budget = sim_time_budget
+        self.upload_bytes = upload_bytes
         self.deferred = 0  # off-window completions pushed to an on-edge
         self.retired = 0  # clients whose one-shot trace ran out
         self._heap: List[Tuple[float, int]] = []
         self._pending: Optional[Tuple] = None
         for c in self.active:
             heapq.heappush(
-                self._heap, (c.profile.delay(self.rng, init_work), c.cid)
+                self._heap,
+                (c.profile.delay(self.rng, init_work)
+                 + c.profile.upload_time(upload_bytes), c.cid)
             )
 
     def peek_tick(self, limit: int) -> List[Arrival]:
@@ -223,8 +236,14 @@ class AsyncScheduler:
                 if t_on is None:
                     self.retired += 1  # one-shot trace exhausted: Fig.-4
                     continue           # style permanent departure
-                self.deferred += 1  # next_on > top_time strictly when off
                 heapq.heappush(self._heap, (t_on, top_cid))
+                if self.budget is not None and t_on > self.budget:
+                    # the on-edge lands past the budget: the budgeted run
+                    # never delivers this event, so it must not count as
+                    # deferred — but re-queue it (above) so in-budget
+                    # tops still buried under it keep surfacing
+                    continue
+                self.deferred += 1  # next_on > top_time strictly when off
                 continue
             if top_cid in seen:
                 break
@@ -238,7 +257,8 @@ class AsyncScheduler:
                     (now + c.profile.delay(self.rng, self.init_work), cid),
                 )
                 continue
-            delay = c.profile.delay(self.rng, self.round_work)
+            delay = c.profile.delay(self.rng, self.round_work) \
+                + c.profile.upload_time(self.upload_bytes)
             heapq.heappush(self._heap, (now + delay, cid))
             tick.append(Arrival(cid=cid, time=now, delay=delay))
             seen.add(cid)
@@ -261,17 +281,25 @@ class SyncScheduler:
     pre-trace scheduler; traced fleets draw from a *different* stream
     (the pool size varies), which is why FedAvg-under-churn carries its
     own reference oracle.
+
+    ``upload_bytes`` meters each participant's report against its
+    ``bandwidth_bytes_per_s`` exactly as in ``AsyncScheduler`` — a
+    deterministic additive cost on the participant's delay, so the
+    barrier waits for the slowest *upload-inclusive* round and the
+    participant-sampling rng stream is untouched.
     """
 
     def __init__(self, clients: Sequence[SimClient], *, seed: int = 0,
                  dropout_frac: float = 0.0, skip_prob: float = 0.0,
-                 participation: float = 0.2, round_work: int = 64):
+                 participation: float = 0.2, round_work: int = 64,
+                 upload_bytes: float = 0.0):
         self.rng = np.random.default_rng(seed)
         self.active, self.dropped_cids = _split_active(
             clients, dropout_frac, self.rng)
         self.skip_prob = skip_prob
         self.m = max(1, int(participation * len(self.active)))
         self.round_work = round_work
+        self.upload_bytes = upload_bytes
 
     def next_round(self, now: float = 0.0) -> Tuple[List[Arrival], float]:
         """(participants, round_time).  round_time = slowest participant,
@@ -292,18 +320,25 @@ class SyncScheduler:
             c = eligible[int(i)]
             if self.skip_prob and self.rng.uniform() < self.skip_prob:
                 continue
-            delay = c.profile.delay(self.rng, self.round_work)
+            delay = c.profile.delay(self.rng, self.round_work) \
+                + c.profile.upload_time(self.upload_bytes)
             arrivals.append(Arrival(cid=c.cid, time=now, delay=delay))
         round_time = max((a.delay for a in arrivals), default=0.0)
         return arrivals, round_time
 
 
 class SweepScheduler:
-    """Local/Global baselines: every client participates every round."""
+    """Local/Global baselines: every responsive client, every round.
+
+    Honors pre-set ``SimClient.dropped`` flags like every other
+    scheduler (a permanently dark device trains no baseline either),
+    and stamps arrivals with the round's actual ``now`` so baseline
+    histories share the simulated-time axis of the federated runs.
+    """
 
     def __init__(self, clients: Sequence[SimClient]):
-        self.active = list(clients)
+        self.active = [c for c in clients if not c.dropped]
 
     def next_round(self, now: float = 0.0) -> Tuple[List[Arrival], float]:
-        return [Arrival(cid=c.cid, time=0.0, delay=0.0)
+        return [Arrival(cid=c.cid, time=now, delay=0.0)
                 for c in self.active], 1.0

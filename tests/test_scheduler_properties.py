@@ -45,7 +45,7 @@ _SCENARIO_KW = {
 }
 
 
-def _make_clients(n: int, seed: int):
+def _make_clients(n: int, seed: int, bandwidth: bool = False):
     rng = np.random.default_rng(seed)
     out = []
     for i in range(n):
@@ -55,7 +55,11 @@ def _make_clients(n: int, seed: int):
             cid=i,
             stream=OnlineStream(x, y, seed=seed + i),
             test_x=x[:2], test_y=y[:2],
-            profile=DeviceProfile(base_delay=float(rng.uniform(5.0, 50.0))),
+            profile=DeviceProfile(
+                base_delay=float(rng.uniform(5.0, 50.0)),
+                bandwidth_bytes_per_s=(float(rng.uniform(2e3, 2e4))
+                                       if bandwidth else None),
+            ),
         ))
     return out
 
@@ -69,13 +73,20 @@ def _case(i: int):
     skip = float(rng.uniform(0.05, 0.4)) if rng.uniform() < 0.6 else 0.0
     budget = float(rng.uniform(150.0, 600.0)) if rng.uniform() < 0.3 else None
     scenario = _SCENARIOS[int(rng.integers(0, len(_SCENARIOS)))]
-    clients = _make_clients(n, seed=seed % 10_000)
+    # bandwidth-metered cases (drawn last so pre-existing case parameters
+    # are unchanged): upload bytes feed each pop-time delay draw through
+    # the per-client deterministic upload_bytes / bandwidth term, which
+    # must preserve chunk-invariance and peek/commit bit-identity
+    metered = rng.uniform() < 0.4
+    upload_bytes = float(rng.uniform(1e3, 5e4)) if metered else 0.0
+    clients = _make_clients(n, seed=seed % 10_000, bandwidth=metered)
     if scenario is not None:
         traces = scenario_traces(scenario, n, seed=seed % 997,
                                  **_SCENARIO_KW[scenario])
         clients = with_traces(clients, traces)
     return clients, dict(seed=seed, dropout_frac=dropout, skip_prob=skip,
-                         init_work=8, round_work=16, sim_time_budget=budget)
+                         init_work=8, round_work=16, sim_time_budget=budget,
+                         upload_bytes=upload_bytes)
 
 
 def _sched(clients, kw) -> AsyncScheduler:

@@ -1,0 +1,427 @@
+"""Resource-aware uploads: codec seam + bandwidth-metered arrivals.
+
+Four layers of the PR-7 upload path:
+
+* ``UploadCodec`` unit properties — kept-coordinate selection, the
+  rand-k unbiasedness rescale, the quantization error bound, and the
+  wire-byte accounting every scheduler delay is metered against;
+* scheduler contracts — ``upload_bytes`` is a bitwise no-op on
+  unmetered profiles (the identity-vs-PR-6 pin), an exact deterministic
+  additive constant on metered ones, and the trace-deferral budget edge
+  (an in-budget off-window top whose on-edge lands past the budget) is
+  never counted as a delivered-stream deferral;
+* ``SweepScheduler``/``make_sim_clients`` bugfix pins — dropped-client
+  filtering, ``now`` time stamps, and fail-fast length validation;
+* engine vs per-arrival oracle — every codec replays the reference
+  loop through the vmapped in-tick encode, byte accounting included.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms.common import (UPLOAD_CODECS, UploadCodec,
+                                          resolve_upload_codec)
+from repro.sim.engine import RunConfig
+from repro.sim.profiles import (DeviceProfile, SimClient, make_profiles,
+                                make_sim_clients)
+from repro.sim.scheduler import AsyncScheduler, SweepScheduler
+from repro.sim.streaming import OnlineStream
+from repro.sim.traces import AvailabilityTrace
+
+
+# ---------------------------------------------------------------------------
+# UploadCodec unit properties
+# ---------------------------------------------------------------------------
+
+
+def test_kept_coordinate_selection():
+    c = UploadCodec(name="topk_sparse", frac=0.25)
+    assert c._k(8) == 2
+    assert c._k(1) == 1  # never zero coordinates
+    assert c._k(9) == 3  # ceil(0.25 * 9)
+    assert UploadCodec(name="topk_sparse", frac=1.0)._k(7) == 7
+    assert UploadCodec(name="topk_sparse", frac=1e-6)._k(1000) == 1
+
+
+def test_topk_keeps_largest_magnitudes_exactly():
+    x = jnp.asarray([0.1, -3.0, 0.02, 2.0, -0.5, 0.3], jnp.float32)
+    out = UploadCodec(name="topk_sparse", frac=0.3).encode(
+        {"w": x}, jax.random.PRNGKey(0))["w"]
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray([0.0, -3.0, 0.0, 2.0, 0.0, 0.0]))
+
+
+def test_random_mask_is_unbiased_and_k_sparse():
+    codec = UploadCodec(name="random_mask", frac=0.25)
+    x = jnp.arange(1.0, 17.0, dtype=jnp.float32)  # n=16, k=4
+    outs = []
+    for s in range(300):
+        o = np.asarray(codec.encode({"w": x}, jax.random.PRNGKey(s))["w"])
+        assert (o != 0.0).sum() == 4
+        # kept coordinates carry the n/k rescale exactly
+        kept = o != 0.0
+        np.testing.assert_allclose(o[kept], np.asarray(x)[kept] * 4.0,
+                                   rtol=1e-6)
+        outs.append(o)
+    # rand-k estimator: E[encode(x)] == x (rescale makes the mask unbiased)
+    np.testing.assert_allclose(np.mean(outs, axis=0), np.asarray(x),
+                               rtol=0.25)
+
+
+def test_random_mask_key_determinism():
+    codec = UploadCodec(name="random_mask", frac=0.5)
+    x = {"a": jnp.arange(8.0), "b": jnp.ones((3,))}
+    k = jax.random.PRNGKey(7)
+    a = codec.encode(x, k)
+    b = codec.encode(x, k)
+    for u, v in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_quantized_delta_error_bound():
+    codec = UploadCodec(name="quantized_delta", bits=8)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=64).astype(np.float32))
+    out = np.asarray(codec.encode({"w": x}, jax.random.PRNGKey(0))["w"])
+    scale = float(jnp.max(jnp.abs(x))) / (2 ** 7 - 1)
+    assert np.max(np.abs(out - np.asarray(x))) <= scale / 2 + 1e-7
+    # all-zero delta round-trips exactly (scale guard against div by 0)
+    z = jnp.zeros(5)
+    np.testing.assert_array_equal(
+        np.asarray(codec.encode({"w": z}, jax.random.PRNGKey(0))["w"]),
+        np.zeros(5))
+
+
+def test_wire_byte_accounting():
+    tree = {"a": jnp.zeros((10, 4)), "b": jnp.zeros((7,))}  # 47 fp32 elems
+    assert UploadCodec(name="identity").tree_bytes(tree) == 47 * 4
+    topk = UploadCodec(name="topk_sparse", frac=0.1)
+    # per leaf: k=ceil(0.1*size) (value, index) pairs of 8 bytes
+    assert topk.tree_bytes(tree) == (4 * 8) + (1 * 8)
+    mask = UploadCodec(name="random_mask", frac=0.1)
+    assert mask.tree_bytes(tree) == (4 * 4 + 8) + (1 * 4 + 8)
+    quant = UploadCodec(name="quantized_delta", bits=8)
+    assert quant.tree_bytes(tree) == (40 + 4) + (7 + 4)
+    # compression must actually beat the dense wire cost
+    for c in (topk, mask, quant):
+        assert c.tree_bytes(tree) < 47 * 4
+
+
+def test_resolve_upload_codec_validation():
+    assert resolve_upload_codec(RunConfig()).identity
+    with pytest.raises(ValueError, match="unknown upload_codec"):
+        resolve_upload_codec(RunConfig(upload_codec="gzip"))
+    with pytest.raises(ValueError, match="upload_frac"):
+        resolve_upload_codec(RunConfig(upload_codec="topk_sparse",
+                                       upload_frac=0.0))
+    with pytest.raises(ValueError, match="upload_frac"):
+        resolve_upload_codec(RunConfig(upload_codec="topk_sparse",
+                                       upload_frac=1.5))
+    with pytest.raises(ValueError, match="upload_bits"):
+        resolve_upload_codec(RunConfig(upload_codec="quantized_delta",
+                                       upload_bits=1))
+    with pytest.raises(ValueError, match="upload_bits"):
+        resolve_upload_codec(RunConfig(upload_codec="quantized_delta",
+                                       upload_bits=32))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: bandwidth metering + budget-deferral edge
+# ---------------------------------------------------------------------------
+
+
+def _client(cid, base_delay, *, bandwidth=None, trace=None, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(12, 3)).astype(np.float32)
+    y = rng.normal(size=(12,)).astype(np.float32)
+    return SimClient(
+        cid=cid, stream=OnlineStream(x, y, seed=seed + cid),
+        test_x=x[:2], test_y=y[:2],
+        profile=DeviceProfile(base_delay=base_delay, compute_rate=2000.0,
+                              jitter=(1.0, 1.0), trace=trace,
+                              bandwidth_bytes_per_s=bandwidth),
+    )
+
+
+def _drain(sched, chunk=3, n=60):
+    out = []
+    while len(out) < n:
+        tick = sched.next_tick(chunk)
+        if not tick:
+            break
+        out.extend(tick)
+    return out[:n]
+
+
+def test_upload_bytes_is_bitwise_noop_on_unmetered_profiles():
+    """The identity-vs-PR-6 pin: unmetered profiles (bandwidth None, the
+    default every pre-PR-7 run used) must replay the exact event stream
+    regardless of upload_bytes — upload_time is 0.0, not a tiny float."""
+    clients = [_client(i, 10.0 + 7.0 * i) for i in range(5)]
+    base = _drain(AsyncScheduler(clients, seed=3, skip_prob=0.2))
+    metered = _drain(AsyncScheduler(clients, seed=3, skip_prob=0.2,
+                                    upload_bytes=5e4))
+    assert metered == base  # Arrival is frozen: exact float equality
+
+
+def test_metered_delay_is_exact_additive_constant():
+    # jitter pinned to 1.0: every term of the delay is checkable exactly
+    c = _client(0, 10.0, bandwidth=1000.0)
+    s = AsyncScheduler([c], seed=0, init_work=32, round_work=64,
+                       upload_bytes=500.0)
+    up = 500.0 / 1000.0
+    first = s.next_tick(1)[0]
+    assert first.time == pytest.approx(32 / 2000.0 + 10.0 + up)
+    assert first.delay == pytest.approx(64 / 2000.0 + 10.0 + up)
+    second = s.next_tick(1)[0]
+    assert second.time == pytest.approx(first.time + first.delay)
+
+
+def test_metered_chunk_and_peek_invariance():
+    clients = [_client(i, 10.0 + 5.0 * i,
+                       bandwidth=2000.0 * (i + 1)) for i in range(6)]
+    kw = dict(seed=9, skip_prob=0.15, upload_bytes=3e4)
+    base = _drain(AsyncScheduler(clients, **kw), chunk=1)
+    for chunk in (2, 6):
+        assert _drain(AsyncScheduler(clients, **kw), chunk=chunk) == base
+    s = AsyncScheduler(clients, **kw)
+    peeked = []
+    while len(peeked) < len(base):
+        tick = s.peek_tick(3)
+        s.commit()
+        if not tick:
+            break
+        peeked.extend(tick)
+    assert peeked[:len(base)] == base
+
+
+def test_budget_excludes_past_budget_on_edge_from_deferred():
+    """S2 pin: an in-budget off-window top whose next on-edge lands past
+    the budget is re-queued (so in-budget tops buried under it surface)
+    but never counted — the budgeted run delivers no such event."""
+    tr = AvailabilityTrace(windows=((0.0, 5.0), (200.0, 210.0)))
+    blocked = _client(0, 10.0, trace=tr)  # completes ~10.016: off-window
+    live = _client(1, 15.0)  # always on, completes ~15.008
+    s = AsyncScheduler([blocked, live], seed=0, sim_time_budget=100.0)
+    tick = s.next_tick(2)
+    # the live client surfaced from under the re-queued blocked top
+    assert [a.cid for a in tick] == [1]
+    assert s.deferred == 0 and s.retired == 0
+    # drain the rest of the budget: the blocked client never arrives and
+    # is still never counted as deferred
+    rest = _drain(s, chunk=2)
+    assert all(a.cid == 1 for a in rest)
+    assert all(a.time <= 100.0 for a in rest)
+    assert s.deferred == 0
+
+
+def test_in_budget_retirement_still_counts():
+    tr = AvailabilityTrace(windows=((0.0, 5.0),))  # one-shot, exhausted
+    s = AsyncScheduler([_client(0, 10.0, trace=tr)], seed=0,
+                       sim_time_budget=100.0)
+    assert s.next_tick(1) == []
+    assert s.retired == 1 and s.deferred == 0
+
+
+# ---------------------------------------------------------------------------
+# SweepScheduler bugfix pins + make_sim_clients validation
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_stamps_now_and_filters_dropped():
+    clients = [_client(i, 10.0) for i in range(4)]
+    clients[2].dropped = True
+    s = SweepScheduler(clients)
+    arrivals, round_time = s.next_round(now=42.5)
+    assert [a.cid for a in arrivals] == [0, 1, 3]
+    assert all(a.time == 42.5 for a in arrivals)
+    assert round_time == 1.0
+
+
+def _datasets(n, n_per=24):
+    rng = np.random.default_rng(0)
+    out = []
+    for _ in range(n):
+        x = rng.normal(size=(n_per, 8)).astype(np.float32)
+        y = rng.normal(size=(n_per,)).astype(np.float32)
+        out.append((x, y, x[:4], y[:4]))
+    return out
+
+
+def test_make_sim_clients_validates_lengths():
+    data = _datasets(3)
+    with pytest.raises(ValueError, match="profiles has 2 entries for 3"):
+        make_sim_clients(data, profiles=make_profiles(2))
+    with pytest.raises(ValueError, match="traces has 1 entries for 3"):
+        make_sim_clients(data, traces=[None])
+    with pytest.raises(ValueError, match="bandwidth_range only applies"):
+        make_sim_clients(data, profiles=make_profiles(3),
+                         bandwidth_range=(1e3, 1e4))
+
+
+def test_bandwidth_draws_interleave_after_offsets():
+    plain = make_profiles(4, seed=0)
+    metered = make_profiles(4, seed=0, bandwidth_range=(1e3, 2e3))
+    assert all(p.bandwidth_bytes_per_s is None for p in plain)
+    assert all(1e3 <= p.bandwidth_bytes_per_s <= 2e3 for p in metered)
+    # client 0's offset draw precedes its bandwidth draw
+    assert metered[0].base_delay == plain[0].base_delay
+    data = _datasets(3)
+    cl = make_sim_clients(data, seed=0, bandwidth_range=(1e3, 2e3))
+    assert all(1e3 <= c.profile.bandwidth_bytes_per_s <= 2e3 for c in cl)
+    assert (cl[0].profile.base_delay
+            == make_sim_clients(data, seed=0)[0].profile.base_delay)
+
+
+# ---------------------------------------------------------------------------
+# Engine vs per-arrival oracle, per codec
+# ---------------------------------------------------------------------------
+
+
+def _setup(n_clients=4, n_per=40, hidden=8):
+    from repro.configs import get_arch
+    from repro.data import airquality_like
+    from repro.models import LOCAL, build_model
+
+    data = airquality_like(n_clients=n_clients, n_per=n_per)
+    cfg_model = dataclasses.replace(
+        get_arch("paper-lstm"), in_features=8, out_features=1, hidden=hidden)
+    return data, cfg_model, build_model(cfg_model, LOCAL)
+
+
+def _assert_traj_close(engine_trace, reference, atol=3e-4, rtol=3e-3):
+    assert engine_trace, "engine produced no ticks"
+    for t, w in engine_trace:
+        assert t in reference, f"tick boundary t={t} not in reference"
+        for a, b in zip(jax.tree.leaves(w), jax.tree.leaves(reference[t])):
+            np.testing.assert_allclose(a, b, atol=atol, rtol=rtol,
+                                       err_msg=f"divergence at t={t}")
+
+
+def _check_codec_equivalence(alg, codec, T=16, n_clients=4, **cfg_kw):
+    from repro.core.algorithms import get_strategy
+    from repro.sim.engine import run_strategy
+    from repro.sim.reference import (run_asofed_reference,
+                                     run_fedasync_reference,
+                                     run_fedavg_reference,
+                                     run_fedbuff_reference)
+
+    data, cfg_model, model = _setup(n_clients=n_clients)
+    cfg = RunConfig(T=T, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
+                    beta=0.001, task="regression", eval_every=T // 2, seed=0,
+                    upload_codec=codec, upload_frac=0.4, **cfg_kw)
+
+    def mk():  # metered fleet: byte accounting feeds the arrival times
+        return make_sim_clients(data, seed=0,
+                                bandwidth_range=(2000.0, 20000.0))
+
+    reference = {"asofed": run_asofed_reference,
+                 "fedasync": run_fedasync_reference,
+                 "fedbuff": run_fedbuff_reference,
+                 "fedavg": run_fedavg_reference}[alg]
+    ref_stats = {}
+    ref = reference(model, cfg_model, mk(), cfg, stats=ref_stats)
+    tr, st = [], {}
+    run_strategy(get_strategy(alg), model, cfg_model, mk(), cfg,
+                 trace=tr, stats=st)
+    _assert_traj_close(tr, ref)
+    # resource accounting agrees between engine and oracle
+    assert st["upload_codec"] == ref_stats["upload_codec"] == codec
+    assert st["upload_bytes"] == ref_stats["upload_bytes"] > 0.0
+    if not resolve_upload_codec(cfg).identity:
+        w0 = model.init(jax.random.PRNGKey(0))
+        dense = UploadCodec(name="identity").tree_bytes(w0)
+        assert st["upload_bytes"] < dense  # compression reached the wire
+    return st
+
+
+@pytest.mark.parametrize("codec", UPLOAD_CODECS)
+def test_asofed_codec_matches_oracle(codec):
+    _check_codec_equivalence("asofed", codec)
+
+
+def test_fedbuff_codec_matches_oracle_through_flush():
+    # buffer_size=2 over T=12 arrivals: the compressed deltas actually
+    # flush through the staleness-weighted server fold several times
+    _check_codec_equivalence("fedbuff", "topk_sparse", T=12, buffer_size=2)
+
+
+def test_fedavg_codec_matches_oracle():
+    _check_codec_equivalence("fedavg", "quantized_delta", T=6)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("alg,codec", [
+    ("fedasync", "topk_sparse"),
+    ("fedasync", "random_mask"),
+    ("fedbuff", "quantized_delta"),
+    ("fedavg", "random_mask"),
+])
+def test_codec_matches_oracle_extended(alg, codec):
+    kw = {"buffer_size": 2} if alg == "fedbuff" else {}
+    T = 6 if alg == "fedavg" else 12
+    _check_codec_equivalence(alg, codec, T=T, **kw)
+
+
+def test_identity_codec_ignores_compression_knobs():
+    """identity never enters the encode path: frac/bits cannot perturb
+    the trajectory (bitwise — same jit, same inputs)."""
+    from repro.core.algorithms import get_strategy
+    from repro.sim.engine import run_strategy
+
+    data, cfg_model, model = _setup()
+    cfg = RunConfig(T=8, batch_size=8, local_epochs=1, eta=0.02, lam=1.0,
+                    beta=0.001, task="regression", eval_every=4, seed=0)
+    tr_a, tr_b = [], []
+    run_strategy(get_strategy("asofed"), model, cfg_model,
+                 make_sim_clients(data, seed=0), cfg, trace=tr_a)
+    cfg_b = dataclasses.replace(cfg, upload_codec="identity",
+                                upload_frac=0.9, upload_bits=4)
+    run_strategy(get_strategy("asofed"), model, cfg_model,
+                 make_sim_clients(data, seed=0), cfg_b, trace=tr_b)
+    assert len(tr_a) == len(tr_b) >= 2
+    for (t1, w1), (t2, w2) in zip(tr_a, tr_b):
+        assert t1 == t2
+        for a, b in zip(jax.tree.leaves(w1), jax.tree.leaves(w2)):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_codec_without_upload_view_fails_fast():
+    from repro.core.algorithms import get_strategy
+    from repro.sim.engine import run_strategy
+
+    data, cfg_model, model = _setup(n_clients=3)
+    cfg = RunConfig(T=4, batch_size=8, local_epochs=1, eta=0.02, lam=1.0,
+                    beta=0.001, task="regression", eval_every=2, seed=0,
+                    upload_codec="topk_sparse")
+    with pytest.raises(ValueError, match="upload_codec_view"):
+        run_strategy(get_strategy("local"), model, cfg_model,
+                     make_sim_clients(data, seed=0), cfg)
+
+
+def test_local_baseline_honors_dropout():
+    """Satellite pin at the engine level: a manually-dropped client's
+    local model never trains (pre-fix, SweepScheduler dispatched dropped
+    clients and the two runs below were identical)."""
+    from repro.core.algorithms import get_strategy
+    from repro.sim.engine import run_strategy
+
+    data, cfg_model, model = _setup(n_clients=3)
+    cfg = RunConfig(T=6, batch_size=8, local_epochs=1, eta=0.05, lam=1.0,
+                    beta=0.001, task="regression", eval_every=3, seed=0)
+
+    def mk(drop):
+        cl = make_sim_clients(data, seed=0)
+        if drop:
+            cl[1].dropped = True
+        return cl
+
+    h_all = run_strategy(get_strategy("local"), model, cfg_model,
+                         mk(False), cfg)
+    h_drop = run_strategy(get_strategy("local"), model, cfg_model,
+                          mk(True), cfg)
+    assert len(h_all) == len(h_drop) >= 1
+    assert h_all[-1].metrics != h_drop[-1].metrics
