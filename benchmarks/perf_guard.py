@@ -23,7 +23,16 @@ Exit codes: 0 = within tolerance, or no comparable baseline record yet
 (first run on a new bench schema — the self-arming path: commit the
 fresh ``BENCH_sim.json`` and the guard compares for real the next
 night); 1 = regression on any guarded record; 2 = the rerun produced no
-comparable main record (bench breakage, never a perf verdict).
+comparable main record (bench breakage, never a perf verdict); 3 = a
+non-finite metric (NaN/Inf) in the committed or rerun records — a
+diverged run or a fault guard that failed open must go red even when
+every throughput floor holds.
+
+``kind=fault_matrix`` records (the fault-injection axis) are never
+guardable: a fault-injected run's throughput measures the chaos config,
+not the engine — but their metrics still ride the non-finite scan, which
+is exactly where a NaN that slipped past the admission guards would
+surface.
 
 Caveats: the floor compares a CI-runner rerun against a possibly
 different recording host — 20% catches real regressions on a stable
@@ -35,8 +44,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from benchmarks.sim_bench import OUT_PATH, bench_sim
 
@@ -81,6 +91,8 @@ def _guardable(payload: dict, window: int
     for rec in payload.get("records", []):
         if (rec.get("mode"), rec.get("scenario")) != _GUARDED:
             continue
+        if rec.get("kind") == "fault_matrix":
+            continue  # fault-injected throughput is not a perf floor
         candidates += 1
         if rec.get("window") not in (None, window):
             continue
@@ -90,6 +102,30 @@ def _guardable(payload: dict, window: int
             continue
         out.setdefault(_key(rec), rec)
     return out, candidates
+
+
+def scan_non_finite(payload: dict) -> List[Tuple]:
+    """Every non-finite numeric value in the bench records, as
+    (record-index, workload, kind, column, value).  A NaN/Inf
+    final_metric or train_loss means a run diverged — or an admission
+    guard failed open — and the nightly must go red on it even when
+    every throughput floor holds."""
+    bad: List[Tuple] = []
+    for i, rec in enumerate(payload.get("records", [])):
+        for col, v in rec.items():
+            if isinstance(v, float) and not math.isfinite(v):
+                bad.append((i, rec.get("workload"),
+                            rec.get("kind", "sweep"), col, v))
+    return bad
+
+
+def _fail_on_non_finite(payload: dict, which: str) -> None:
+    bad = scan_non_finite(payload)
+    if bad:
+        for i, wl, kind, col, v in bad:
+            print(f"perf_guard: NON-FINITE metric in {which} records — "
+                  f"record {i} ({wl}/{kind}) {col}={v}", file=sys.stderr)
+        sys.exit(3)
 
 
 def main() -> None:
@@ -107,8 +143,13 @@ def main() -> None:
 
     try:
         with open(OUT_PATH) as f:
-            baseline, candidates = _guardable(json.load(f), args.window)
+            committed = json.load(f)
     except (OSError, json.JSONDecodeError):
+        committed = None
+    if committed is not None:
+        _fail_on_non_finite(committed, "committed")
+        baseline, candidates = _guardable(committed, args.window)
+    else:
         baseline, candidates = {}, 0
     if not baseline and candidates:
         # records exist but none are comparable: the committed file was
@@ -140,7 +181,9 @@ def main() -> None:
               frontier_cohort=16)  # overwrites BENCH_sim.json
 
     with open(OUT_PATH) as f:
-        fresh, _ = _guardable(json.load(f), args.window)
+        rerun = json.load(f)
+    _fail_on_non_finite(rerun, "rerun")
+    fresh, _ = _guardable(rerun, args.window)
     main_key = ("lstm_regression", args.clients, "sweep", "sequential",
                 "identity")
     if main_key not in fresh:

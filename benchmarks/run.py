@@ -78,6 +78,13 @@ def main() -> None:
                     help="with --smoke: cohort size for the per-codec "
                          "accuracy-vs-bytes upload frontier records "
                          "(0 disables)")
+    ap.add_argument("--faults", default=None,
+                    help="with --smoke: comma-separated per-upload fault "
+                         "rates (e.g. '0.0,0.1'); each adds one fault-"
+                         "injected cohort record (kind=fault_matrix) "
+                         "carrying the chaos counters (lost/retried/"
+                         "crashed/duplicated/corrupted/rejected/clipped) "
+                         "and the degraded final metric")
     args = ap.parse_args()
     quick = not args.full
     want = lambda s: args.only is None or args.only in s  # noqa: E731
@@ -100,6 +107,8 @@ def main() -> None:
 
         fold_cohorts = (tuple(int(k) for k in args.fold_cohorts.split(","))
                         if args.fold_cohorts not in ("", "none") else ())
+        fault_rates = (tuple(float(x) for x in args.faults.split(","))
+                       if args.faults else ())
         for r in bench_sim(scenario=args.scenario, window=args.window,
                            state_dtype=args.state_dtype,
                            mem_cohort=args.mem_cohort,
@@ -108,7 +117,8 @@ def main() -> None:
                            fold_mode=args.fold_mode,
                            fold_cohorts=fold_cohorts,
                            upload_codec=args.upload_codec,
-                           frontier_cohort=args.frontier_cohort):
+                           frontier_cohort=args.frontier_cohort,
+                           fault_rates=fault_rates):
             rows.append(r)
             print(_fmt(*r), flush=True)
         if args.smoke:  # smoke mode runs only the sim sweep

@@ -144,7 +144,10 @@ _STAT_COLS = ("host_build_s", "device_s", "eval_s", "prefetch", "devices",
               "deferred_arrivals", "retired_clients", "train_loss_final",
               "participation_mean", "folds_per_tick_mean", "sim_time",
               "upload_codec", "upload_bytes", "upload_bytes_total",
-              "simulated_time_to_loss", "final_metric")
+              "simulated_time_to_loss", "final_metric",
+              "lost_uploads", "retried_uploads", "crashed_clients",
+              "duplicated_arrivals", "corrupted_arrivals",
+              "rejected_uploads", "clipped_uploads")
 
 
 def _record(K: int, mode: str, scenario: str, s: Dict, *,
@@ -178,7 +181,8 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
               fold_mode: str = "sequential",
               fold_cohorts=(256, 1024),
               upload_codec: str = "identity",
-              frontier_cohort: int = 16) -> List[Tuple[str, float, str]]:
+              frontier_cohort: int = 16,
+              fault_rates=()) -> List[Tuple[str, float, str]]:
     """Smoke sweep: pipelined/serialized/unfused engine vs per-arrival.
 
     ``scenario`` (``diurnal`` / ``bursty`` / ``churn`` / ``flash`` /
@@ -203,6 +207,16 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
     ``speedup_fold[K] = associative / sequential`` iters/s.  The larger
     default cohort (1024) is the heavy-fold regime where the prefix scan
     must at least hold the line.
+
+    ``fault_rates`` (empty disables) runs the **fault matrix**: one
+    fault-injected cohort run per rate at a small client count —
+    ``FaultSpec.uniform(rate)`` on every client (upload loss with
+    retry/backoff, duplicate delivery, NaN wire corruption,
+    crash-restart) under the server admission guards — recording the
+    chaos counters (``lost/retried/crashed/duplicated/corrupted`` from
+    the scheduler, ``rejected/clipped`` from the in-tick guards) and the
+    degraded ``final_metric`` per rate (kind=``fault_matrix``; rate 0.0
+    is the clean baseline the degradation is measured against).
 
     ``upload_codec`` threads ``RunConfig.upload_codec`` into the sweep
     and churn configs (per-codec perf floors — compressed ticks pay the
@@ -447,6 +461,49 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 f"{rec.get('simulated_time_to_loss')};final="
                 f"{rec.get('final_metric')}",
             ))
+    fault_at = {}
+    if fault_rates:
+        from repro.sim.faults import FaultSpec, with_faults
+
+        # fault matrix: the same small-cohort run per rate, faults +
+        # admission guards on — robustness cost and chaos counters in
+        # one record per rate (0.0 = the clean baseline)
+        K = 16
+        wl, cfg_model, model, mk = _build(K, workload)
+        fcfg = wl.run_config(
+            T=8 * K, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
+            beta=0.001, eval_every=2 * K, seed=0, window=window,
+            max_staleness=64.0, max_delta_norm=5.0, **fold_kw,
+        )
+        for rate in fault_rates:
+            spec = FaultSpec.uniform(rate, seed=7) if rate else None
+
+            def mk_f(sp=spec):
+                cs = mk()
+                return cs if sp is None else with_faults(cs, [sp] * K)
+            _run(model, cfg_model, mk_f(), fcfg, "cohort")  # warmup
+            s = _run(model, cfg_model, mk_f(), fcfg, "cohort",
+                     headline=wl.headline)
+            rec = _record(K, "cohort", "always_on", s, workload=workload,
+                          fold_mode=fold_mode)
+            # fault rows have their own run shape (8K iters, guards on):
+            # the kind column keeps the perf guard from comparing them
+            # against sweep rows
+            rec["kind"] = "fault_matrix"
+            rec["fault_rate"] = rate
+            records.append(rec)
+            fault_at[rate] = rec
+            rows.append((
+                f"sim/faults_{rate}/{K}clients",
+                s["wall_time_s"] / max(s["iters"], 1) * 1e6,
+                f"iters_per_s={rec['iters_per_s']};lost="
+                f"{rec.get('lost_uploads')};retried="
+                f"{rec.get('retried_uploads')};crashed="
+                f"{rec.get('crashed_clients')};rejected="
+                f"{rec.get('rejected_uploads')};clipped="
+                f"{rec.get('clipped_uploads')};final="
+                f"{rec.get('final_metric')}",
+            ))
     payload = {
         "benchmark": "cohort simulation engine throughput (asofed)",
         "metric": ("iters = global iterations (client arrivals folded); "
@@ -508,7 +565,21 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                    "bytes frontier: one bandwidth-metered run per upload "
                    "codec (bandwidth_bytes_per_s ~ U[2e3, 2e4] per "
                    "client), identical otherwise — compression trades "
-                   "per-upload wire time against reconstruction noise."),
+                   "per-upload wire time against reconstruction noise.  "
+                   "kind=fault_matrix records are the chaos axis: one "
+                   "run per fault_rate with FaultSpec.uniform(rate) on "
+                   "every client and the admission guards on "
+                   "(max_staleness=64, max_delta_norm=5).  Chaos "
+                   "counters: lost_uploads = uploads dropped with "
+                   "retries exhausted; retried_uploads = backoff "
+                   "redeliveries scheduled; crashed_clients = crash-"
+                   "restart events; duplicated/corrupted_arrivals = "
+                   "deliveries flagged dup / carrying a wire-corruption "
+                   "code; rejected_uploads = arrivals the in-tick guard "
+                   "refused (non-finite delta or staleness over bound); "
+                   "clipped_uploads = admitted deltas norm-clipped.  "
+                   "rate 0.0 is the clean baseline the degraded "
+                   "final_metric is measured against."),
         "records": records,
         "sweep_workload": workload,
         "sweep_fold_mode": fold_mode,
@@ -539,6 +610,22 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 "iters_per_s": rec["iters_per_s"],
             }
             for codec, rec in frontier_at.items()
+        }
+    if fault_at:
+        # per-rate chaos counters + degraded metric: the robustness axis
+        payload["fault_matrix"] = {
+            str(rate): {
+                "iters_per_s": rec["iters_per_s"],
+                "lost_uploads": rec.get("lost_uploads"),
+                "retried_uploads": rec.get("retried_uploads"),
+                "crashed_clients": rec.get("crashed_clients"),
+                "duplicated_arrivals": rec.get("duplicated_arrivals"),
+                "corrupted_arrivals": rec.get("corrupted_arrivals"),
+                "rejected_uploads": rec.get("rejected_uploads"),
+                "clipped_uploads": rec.get("clipped_uploads"),
+                "final_metric": rec.get("final_metric"),
+            }
+            for rate, rec in fault_at.items()
         }
     if workload_at:
         payload["workload_smoke"] = {

@@ -1,3 +1,5 @@
 from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.runstate import load_run_state, save_run_state
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = ["load_checkpoint", "save_checkpoint",
+           "load_run_state", "save_run_state"]

@@ -60,9 +60,23 @@ def load_checkpoint(path: str, like, shardings=None):
     keys, _, treedef = _flatten(like)
     saved_keys = manifest["keys"]
     if keys != saved_keys:
+        # a symmetric set-diff is empty when the two key lists hold the
+        # same names in a different order — report each side explicitly
+        missing = [k for k in saved_keys if k not in keys]
+        unexpected = [k for k in keys if k not in saved_keys]
+        if missing or unexpected:
+            raise ValueError(
+                f"checkpoint structure mismatch at {path!r}: saved keys "
+                f"not in target {missing}; target keys not in checkpoint "
+                f"{unexpected}")
         raise ValueError(
-            f"checkpoint structure mismatch: {set(saved_keys) ^ set(keys)}"
-        )
+            f"checkpoint structure mismatch at {path!r}: same keys, "
+            f"different order (saved {saved_keys}, target {keys})")
+    if len(data.files) != len(saved_keys):
+        raise ValueError(
+            f"corrupt checkpoint at {path!r}: manifest lists "
+            f"{len(saved_keys)} arrays but params.npz holds "
+            f"{len(data.files)}")
     vals = [data[f"arr_{i}"] for i in range(len(keys))]
     # .npy round-trips extension dtypes (ml_dtypes bfloat16: the
     # delta-compressed client-state codec) as raw void bytes; the manifest

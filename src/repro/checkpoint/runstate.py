@@ -1,0 +1,81 @@
+"""Full-run crash-resume snapshots for the async cohort engine.
+
+A run snapshot is a directory::
+
+    <path>/stacked-<step>/  device client-state pytree (codec-encoded)
+    <path>/server-<step>/   device server-state pytree
+    <path>/run.json         host state: scheduler (rng + heap + fault/
+                            retry counters + crashed set), per-client
+                            stream rngs, the staleness meter, the
+                            (t, sim_time) cursor — and ``snapshot_tag``,
+                            the <step> its device dirs carry
+
+The device pytrees ride :func:`repro.checkpoint.save_checkpoint`, so
+reduced-dtype client state (the bf16 delta codec) round-trips bitwise via
+the manifest's recorded dtypes.  ``run.json`` is written *last* through
+an atomic rename and names the device dirs it pairs with: device
+payloads land under fresh step-tagged dirs (never overwriting the
+previous snapshot's), so a crash at *any* point — including mid-way
+through snapshot N+1 — leaves ``run.json`` referencing only complete
+dirs (snapshot N's).  Superseded dirs are garbage-collected after the
+rename commits.
+
+The host payload is captured on the producer side *before*
+``peek_window`` — the one point where no speculation is in flight and no
+stream rng draw for the upcoming window has been consumed — which is what
+makes a resumed run replay the remaining arrival stream (and therefore
+the final weights) bit-for-bit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Tuple
+
+from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
+
+
+def save_run_state(path: str, stacked, server, host: dict) -> None:
+    """Write one resumable snapshot (``host`` must be JSON-able and carry
+    at least ``t``; see the module docstring for the layout)."""
+    os.makedirs(path, exist_ok=True)
+    step = int(host.get("t", 0))
+    tag = f"{step:012d}"
+    save_checkpoint(os.path.join(path, f"stacked-{tag}"), stacked, step=step)
+    save_checkpoint(os.path.join(path, f"server-{tag}"), server, step=step)
+    tmp = os.path.join(path, "run.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(dict(host, snapshot_tag=tag), f)
+    os.replace(tmp, os.path.join(path, "run.json"))
+    # only after the rename committed the new snapshot: drop superseded
+    # device dirs (a crash before this point leaves them; a crash during
+    # it is harmless — run.json already references the new tag)
+    for name in os.listdir(path):
+        if (name.startswith(("stacked-", "server-"))
+                and not name.endswith(tag)):
+            shutil.rmtree(os.path.join(path, name), ignore_errors=True)
+
+
+def load_run_state(path: str, stacked_like, server_like
+                   ) -> Tuple[object, object, dict]:
+    """(stacked, server, host) restored from :func:`save_run_state`.
+
+    ``stacked_like`` / ``server_like`` supply the pytree structure (the
+    freshly initialized run state — resuming requires the same model,
+    strategy, and fleet); key mismatches fail fast with the readable
+    diff from :func:`repro.checkpoint.load_checkpoint`.
+    """
+    run_json = os.path.join(path, "run.json")
+    if not os.path.exists(run_json):
+        raise FileNotFoundError(
+            f"no resumable snapshot at {path!r}: run.json missing "
+            "(incomplete or interrupted checkpoint write)")
+    with open(run_json) as f:
+        host = json.load(f)
+    tag = host["snapshot_tag"]
+    stacked, _ = load_checkpoint(os.path.join(path, f"stacked-{tag}"),
+                                 stacked_like)
+    server, _ = load_checkpoint(os.path.join(path, f"server-{tag}"),
+                                server_like)
+    return stacked, server, host

@@ -213,6 +213,50 @@ def bool_tree(tree, flag: bool):
     return jax.tree.map(lambda _: flag, tree)
 
 
+# ---------------------------------------------------------------------------
+# Wire-delta corruption (the chaos layer's payload faults)
+# ---------------------------------------------------------------------------
+
+# domain separator folded into the run seed for corruption noise keys, so
+# the noise stream can never collide with the upload-codec mask stream
+# (which folds the raw (t, row) pair into the same run-seed key)
+CORRUPT_KEY_SALT = 104729  # 10000th prime
+
+
+def corruption_key(seed, t_arr, cid):
+    """PRNG key for one arrival's corruption noise — a pure function of
+    (run seed, global iteration, client id), so the jitted tick and the
+    per-arrival reference oracles derive bitwise-identical noise."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), CORRUPT_KEY_SALT)
+    key = jax.random.fold_in(key, jnp.asarray(t_arr, jnp.int32))
+    return jax.random.fold_in(key, jnp.asarray(cid, jnp.int32))
+
+
+def corrupt_wire_delta(delta, code, key):
+    """Apply one arrival's payload corruption to its wire-delta view.
+
+    ``code`` is the scheduler's ``Arrival.corrupt`` wire code (0 = clean,
+    1 = NaN fill, 2 = Inf fill, 3 = additive large-magnitude gaussian
+    noise scaled to ~5x the leaf RMS).  Traceable and shape-preserving:
+    the engine applies it vmapped over the cohort axis, the oracles one
+    arrival at a time — same function, same key, bitwise-equal output.
+    """
+    code = jnp.asarray(code, jnp.int32)
+    leaves, treedef = jax.tree.flatten(delta)
+    out = []
+    for i, x in enumerate(leaves):
+        noise = jax.random.normal(jax.random.fold_in(key, i), x.shape,
+                                  x.dtype)
+        rms = jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-12)
+        noisy = x + 5.0 * rms * noise
+        y = jnp.where(
+            code == 1, jnp.full_like(x, jnp.nan),
+            jnp.where(code == 2, jnp.full_like(x, jnp.inf),
+                      jnp.where(code == 3, noisy, x)))
+        out.append(y)
+    return jax.tree.unflatten(treedef, out)
+
+
 def bcast_rows(v, x):
     """A per-arrival ``(S,)`` coefficient broadcast against an ``(S, ...)``
     leaf — the shape gymnastics every ``build_fold_affine`` needs."""

@@ -35,6 +35,11 @@ from repro.sim.engine import Strategy
 class FedBuffStrategy(Strategy):
     name = "fedbuff"
     schedule = "async"
+    # the flush cummax / prefix-sum closed form assumes exactly one fold
+    # per real arrival: duplicate double-folds and admission rejections
+    # shift every flush crossing, so under faults the engine must use the
+    # sequential fold scan (fold_mode="auto" falls back automatically)
+    fold_affine_supports_faults = False
 
     def telemetry_slots(self, cfg):
         return ("train_loss",)

@@ -181,6 +181,19 @@ class RunConfig:
     upload_codec: str = "identity"
     upload_frac: float = 0.1
     upload_bits: int = 8
+    # server-side graceful degradation (the chaos layer's admission
+    # control, applied inside the jitted tick as fold masks so megastep /
+    # associative folds / oracles stay equivalent under faults):
+    # non-finite uploads are ALWAYS rejected when any client carries a
+    # FaultSpec; `max_staleness`, when set, additionally bounds the
+    # per-arrival staleness (iterations since the client's previous
+    # fold) — `staleness_policy` picks between rejecting the upload
+    # outright ("reject") and folding it at weight
+    # max_staleness/staleness ("downweight").  `max_delta_norm`, when
+    # set, clips each admitted wire delta to that global L2 norm.
+    max_staleness: Optional[float] = None
+    staleness_policy: str = "reject"  # "reject" | "downweight"
+    max_delta_norm: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -217,6 +230,11 @@ class Strategy:
     uses_dropout: bool = True
     pooled: bool = False  # Global baseline: one virtual member, pooled data
     eval_per_client: bool = False  # Local baseline: per-client eval params
+    # whether build_fold_affine's closed form stays exact when the chaos
+    # layer injects duplicate deliveries / rejected uploads (fedbuff's
+    # flush cummax is not composable under the dup coefficient squaring,
+    # so it declines and the engine falls back to the sequential scan)
+    fold_affine_supports_faults: bool = True
 
     # -- telemetry -------------------------------------------------------
     def telemetry_slots(self, cfg: RunConfig) -> Tuple[str, ...]:
@@ -410,6 +428,9 @@ def run_strategy(
     prefetch: Optional[bool] = None,
     window: Optional[int] = None,
     mesh: Union[str, None, Mesh] = "auto",
+    checkpoint_path: Optional[str] = None,
+    checkpoint_every: Optional[int] = None,
+    resume_from: Optional[str] = None,
 ) -> List[HistoryPoint]:
     """Run one algorithm through the cohort engine.
 
@@ -435,6 +456,15 @@ def run_strategy(
     >=4-core hosts).  ``mesh="auto"`` shards the client axis over every
     local device (``repro.common.sharding.data_mesh``); pass None to
     force the single-device path or an explicit 1-D ``data`` Mesh.
+
+    ``checkpoint_path`` (async schedules only) writes a resumable
+    full-run snapshot — device state via ``repro.checkpoint`` plus the
+    host event-stream cursor (scheduler rng/heap/fault counters, stream
+    rngs, staleness meter) — every ``checkpoint_every`` iterations
+    (default: ``cfg.eval_every``).  ``resume_from`` restores one and
+    continues: the resumed run replays the remaining arrival stream, and
+    therefore the final weights, bit-for-bit against an uninterrupted
+    run (its ``history`` covers only post-resume evals).
     """
     clients = list(clients)
     K = len(clients)
@@ -456,9 +486,31 @@ def run_strategy(
     # the stats/BENCH columns (or report the wrong task's metrics)
     dtypes_lib.resolve_state_dtype(cfg.state_dtype)
     eval_report = resolve_eval_report(cfg)
+    # chaos layer: any client carrying an active FaultSpec switches the
+    # compiled tick to fault-aware mode (crash-restart state resets, wire
+    # corruption, duplicate double-folds); the server admission guards
+    # activate with it or with the explicit cfg knobs.  Both are
+    # compile-time flags, so a fault-free config traces the exact
+    # pre-chaos tick and replays bitwise.
+    faults_on = any(
+        c.profile.faults is not None and c.profile.faults.active
+        for c in clients)
+    if cfg.staleness_policy not in ("reject", "downweight"):
+        raise ValueError(
+            f"unknown staleness_policy {cfg.staleness_policy!r}; "
+            "accepted: 'reject' | 'downweight'")
+    guards = cfg.max_staleness is not None or cfg.max_delta_norm is not None
+    chaos = faults_on or guards
+    if (checkpoint_path is not None or resume_from is not None) \
+            and strategy.schedule != "async":
+        raise ValueError(
+            "run checkpointing / resume is supported for async schedules "
+            f"only ({strategy.name!r} is {strategy.schedule!r})")
     # ... and so must an unknown fold_mode, or fold_mode="associative"
-    # with a strategy that declines the affine fold form
-    compile_lib.resolve_fold_affine(strategy, model, cfg_model, cfg)
+    # with a strategy that declines the affine fold form (under faults,
+    # additionally one whose closed form is not dup/reject-composable)
+    compile_lib.resolve_fold_affine(strategy, model, cfg_model, cfg,
+                                    faults_on=faults_on)
     # ... and an unknown upload codec / out-of-range knobs, or a lossy
     # codec on a strategy with no compressible upload.  (Imported here:
     # the strategy modules import Strategy from this module, so a
@@ -473,6 +525,17 @@ def run_strategy(
             f"a compressible upload, but {strategy.name!r} provides no "
             "upload_codec_view (the Local/Global sweep baselines upload "
             "nothing)")
+    if chaos and strategy.schedule != "sweep" and uview is None:
+        raise ValueError(
+            "fault injection / admission guards act on the strategy's "
+            f"wire-delta view, but {strategy.name!r} provides no "
+            "upload_codec_view")
+    if faults_on and strategy.schedule == "async" \
+            and strategy.build_init_client(model, cfg) is None:
+        raise ValueError(
+            f"fault injection needs {strategy.name!r} to provide "
+            "build_init_client: crash-restart rebuilds the crashed "
+            "client's state row inside the jitted tick")
     w0 = model.init(jax.random.PRNGKey(cfg.seed))
     codec = strategy.state_codec(model, cfg, w0)
     # simulated wire cost of one arrival's (encoded) upload — a pure
@@ -482,8 +545,14 @@ def run_strategy(
     upload_bytes = ucodec.tree_bytes(w0) if uview is not None else 0.0
     client_slots = tuple(strategy.telemetry_slots(cfg))
     server_slots = tuple(strategy.server_telemetry_slots(cfg))
-    # the engine-owned fold-depth slot rides between the two blocks
+    # the engine-owned fold-depth slot rides between the two blocks;
+    # chaos runs append the admission counters to the in-scan row (the
+    # condition mirrors tick_body's: guards need a fold + a wire view)
+    chaos_tick = (chaos and uview is not None
+                  and strategy.build_fold(model, cfg_model, cfg) is not None)
     slots = client_slots + ("folds_per_tick",) + server_slots
+    if chaos_tick:
+        slots = slots + ("rejected_per_tick", "clipped_per_tick")
     drop = cfg.dropout_frac if strategy.uses_dropout else 0.0
     skip = cfg.periodic_dropout if strategy.uses_dropout else 0.0
 
@@ -543,7 +612,8 @@ def run_strategy(
     tick_fn = compile_lib.tick_fn(strategy, model, cfg_model, cfg, K, mesh,
                                   windowed=windowed, codec=codec,
                                   slots=client_slots,
-                                  server_slots=server_slots)
+                                  server_slots=server_slots,
+                                  faults_on=faults_on)
     evaluator = Evaluator(model, clients, eval_report,
                           strategy.eval_per_client)
     telem = telemetry if telemetry is not None else TelemetryLog(slots)
@@ -603,12 +673,38 @@ def run_strategy(
             peak_live = max(peak_live, _live_device_bytes())
 
     use_prefetch = False
+    resume_t = 0
     if strategy.schedule == "async":
         # a client with an empty local split (visible == 0 forever) can
         # never train: its arrivals are dropped so fabricated zero batches
         # are never folded in (FedAsync mixes at full weight, without the
         # n_vis/N guard ASO-Fed has)
         trainable = {c.cid for c in active if c.stream.n > 0}
+        if resume_from is not None:
+            from repro import checkpoint as ckpt_lib
+
+            stacked, server, host = ckpt_lib.load_run_state(
+                resume_from, stacked, server)
+            if host.get("strategy") != strategy.name \
+                    or int(host.get("seed", cfg.seed)) != cfg.seed:
+                raise ValueError(
+                    f"snapshot at {resume_from!r} was written by "
+                    f"strategy={host.get('strategy')!r} "
+                    f"seed={host.get('seed')}; this run is "
+                    f"{strategy.name!r} seed={cfg.seed}")
+            if mesh is not None:
+                stacked = jax.device_put(stacked, jax.tree.map(
+                    lambda x: sharding_lib.client_sharding(x.shape, mesh),
+                    stacked))
+                server = jax.device_put(server,
+                                        sharding_lib.replicated(mesh))
+            sched.load_state_dict(host["sched"])
+            for cid_s, st_rng in host["streams"].items():
+                by_id[int(cid_s)].stream.set_rng_state(st_rng)
+            builder.staleness.load_state_dict(host["staleness"])
+            resume_t = int(host["t"])
+            t = resume_t
+            sim_time = float(host["sim_time"])
         # adaptive default: the prefetch thread overlaps host batch
         # building with device execution, which is a pure win on
         # accelerators and multi-core hosts — but on <4-core CPU boxes
@@ -646,7 +742,8 @@ def run_strategy(
             would evaluate after — a dispatch-count trade, still never a
             wrong bit.
             """
-            tp = 0
+            tp = resume_t
+            sim_prod = float(sim_time)
             # the iteration budget advances per *fold*: charge it only
             # for trainable arrivals, so every in-window tick limit
             # equals the one a window=1 producer would compute (dropped
@@ -654,6 +751,23 @@ def run_strategy(
             kept_count = lambda tk: sum(  # noqa: E731
                 a.cid in trainable for a in tk)
             while tp < cfg.T:
+                snap = None
+                if checkpoint_path is not None:
+                    # full host cursor, captured at the only clean point:
+                    # the previous window is committed (no speculation in
+                    # flight) and no stream rng draw for the upcoming
+                    # window has been consumed.  It rides the window's
+                    # first PreparedTick to the consumer, which persists
+                    # it together with the device state *before*
+                    # dispatching that tick.
+                    snap = {
+                        "t": tp, "sim_time": sim_prod,
+                        "strategy": strategy.name, "seed": cfg.seed,
+                        "sched": sched.state_dict(),
+                        "streams": {str(c.cid): c.stream.rng_state()
+                                    for c in active},
+                        "staleness": builder.staleness.state_dict(),
+                    }
                 ticks = sched.peek_window(W, pad, total_limit=cfg.T - tp,
                                           count=kept_count)
                 if not ticks:
@@ -696,6 +810,10 @@ def run_strategy(
                                 chunk, t_start=tp, window=W,
                                 sim_time=chunk[-1][-1].time)
                             tp = pt.t_end
+                            sim_prod = pt.sim_time
+                            if snap is not None:
+                                pt.host_snapshot = snap
+                                snap = None
                             yield pt
 
         if not trainable:
@@ -704,9 +822,23 @@ def run_strategy(
             source = TickPrefetcher(produce(), depth=1)
         else:
             source = produce()
-        next_eval = cfg.eval_every
+        next_eval = (resume_t // cfg.eval_every + 1) * cfg.eval_every
+        ckpt_every = int(checkpoint_every) if checkpoint_every \
+            else cfg.eval_every
+        next_ckpt = resume_t + ckpt_every if checkpoint_path is not None \
+            else None
         try:
             for pt in source:
+                if (next_ckpt is not None and pt.host_snapshot is not None
+                        and pt.host_snapshot["t"] >= next_ckpt):
+                    # write-before-dispatch: the device state on disk is
+                    # exactly the state the host cursor says it is (the
+                    # snapshot's t counts the folds already applied)
+                    from repro import checkpoint as ckpt_lib
+
+                    ckpt_lib.save_run_state(checkpoint_path, stacked,
+                                            server, pt.host_snapshot)
+                    next_ckpt = pt.host_snapshot["t"] + ckpt_every
                 dispatch(pt)
                 t = pt.t_end
                 sim_time = pt.sim_time
@@ -780,6 +912,13 @@ def run_strategy(
                 availability_utilization(active, sim_time), 4),
             deferred_arrivals=int(getattr(sched, "deferred", 0)),
             retired_clients=int(getattr(sched, "retired", 0)),
+            # chaos accounting: the scheduler's deterministic fault
+            # counters (all 0 for fault-free configs)
+            lost_uploads=int(getattr(sched, "lost", 0)),
+            retried_uploads=int(getattr(sched, "retried", 0)),
+            crashed_clients=int(getattr(sched, "crashed", 0)),
+            duplicated_arrivals=int(getattr(sched, "duplicated", 0)),
+            corrupted_arrivals=int(getattr(sched, "corrupted", 0)),
             # resource accounting: simulated wire bytes of one arrival's
             # encoded upload, and the run's total over every folded
             # arrival (async iterations each fold exactly one upload)
@@ -788,8 +927,18 @@ def run_strategy(
             upload_bytes_total=float(upload_bytes) * (
                 t if strategy.schedule == "async" else n_uploads),
         )
+        if resume_from is not None:
+            stats["resumed_from_t"] = resume_t
         for k, v in telem.summary().items():
             stats[k] = round(v, 6) if isinstance(v, float) else v
+        if chaos_tick:
+            # the in-scan admission counters, totalled over the run
+            stats["rejected_uploads"] = int(round(sum(
+                r.values.get("rejected_per_tick", 0.0)
+                for r in telem.records)))
+            stats["clipped_uploads"] = int(round(sum(
+                r.values.get("clipped_per_tick", 0.0)
+                for r in telem.records)))
         if hasattr(tick_fn, "_cache_size"):
             stats["tick_cache_size"] = int(tick_fn._cache_size())
     return history

@@ -69,6 +69,18 @@ class StalenessMeter:
     def mean(self) -> float:
         return self.sum / self.n if self.n else 0.0
 
+    def state_dict(self) -> dict:
+        """JSON-able snapshot (crash-resume hook; dict keys stringified
+        because JSON objects key on strings)."""
+        return {"sum": self.sum, "max": self.max, "n": self.n,
+                "last": {str(k): v for k, v in self._last.items()}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.sum = float(state["sum"])
+        self.max = int(state["max"])
+        self.n = int(state["n"])
+        self._last = {int(k): int(v) for k, v in state["last"].items()}
+
 
 def _pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
@@ -106,20 +118,29 @@ class PreparedTick:
     bookkeeping metadata.
 
     ``arrays`` is the engine tick signature tail
-    ``(idx, xs, ys, delays, n_vis, t_arr, mask)``, already transferred
-    (and, on a mesh, sharded) by the builder.  For a megastep window
-    every array carries an extra leading ``[T_w]`` axis (one slice per
-    fused tick) and ``n_ticks`` counts the real (non-padding) ticks.
-    ``ticks_meta`` carries one :class:`TickMeta` per real tick.
+    ``(idx, xs, ys, delays, n_vis, t_arr, mask, fresh, dup, corrupt,
+    stal)`` — the last four are the chaos columns (crash-rejoin flag,
+    duplicate-delivery flag, corruption wire code, per-arrival staleness)
+    — already transferred (and, on a mesh, sharded) by the builder.  For
+    a megastep window every array carries an extra leading ``[T_w]`` axis
+    (one slice per fused tick) and ``n_ticks`` counts the real
+    (non-padding) ticks.  ``ticks_meta`` carries one :class:`TickMeta`
+    per real tick.  ``host_snapshot``, when set, is a full-run host-state
+    snapshot captured by the producer *before* this block's speculative
+    peek (the crash-resume checkpoint hook): the consumer persists it
+    before dispatching the block, so a resumed run replays from exactly
+    this boundary.
     """
 
     arrivals: List[Arrival]  # trainable arrivals, in fold order
     t_start: int  # global iteration at tick start
     t_end: int  # global iteration after the tick's folds
     sim_time: float  # simulated time of the last arrival
-    arrays: Tuple  # (idx, xs, ys, delays, n_vis, t_arr, mask)
+    arrays: Tuple  # (idx, xs, ys, delays, n_vis, t_arr, mask, fresh,
+    #                dup, corrupt, stal)
     n_ticks: int = 1  # real scheduler ticks fused into this dispatch
     ticks_meta: Tuple[TickMeta, ...] = ()
+    host_snapshot: Optional[dict] = None  # pre-peek run state (checkpoint)
 
 
 class TickBuilder:
@@ -176,6 +197,12 @@ class TickBuilder:
                 "n_vis": np.empty(shape, np.float32),
                 "t_arr": np.empty(shape, np.float32),
                 "mask": np.empty(shape, bool),
+                # chaos columns (all-zero for fault-free runs; the tick
+                # traces no ops on them unless faults/guards are on)
+                "fresh": np.empty(shape, bool),
+                "dup": np.empty(shape, bool),
+                "corrupt": np.empty(shape, np.int32),
+                "stal": np.empty(shape, np.float32),
             }
             self._meta[key] = buf
         return buf
@@ -229,6 +256,10 @@ class TickBuilder:
         meta["n_vis"].fill(0.0)
         meta["t_arr"].fill(0.0)
         meta["mask"].fill(False)
+        meta["fresh"].fill(False)
+        meta["dup"].fill(False)
+        meta["corrupt"].fill(0)
+        meta["stal"].fill(0.0)
         tx, ty = self._slot_template(pooled_batch)
         xs, ys = self._data_slot((P,), slot, tx, ty)
         stal_sum, stal_max = 0, 0
@@ -241,6 +272,10 @@ class TickBuilder:
             meta["delays"][i] = a.delay
             meta["t_arr"][i] = t_i
             meta["mask"][i] = True
+            meta["fresh"][i] = getattr(a, "fresh", False)
+            meta["dup"][i] = getattr(a, "dup", False)
+            meta["corrupt"][i] = getattr(a, "corrupt", 0)
+            meta["stal"][i] = stal
             if pooled_batch is not None:
                 xs[i], ys[i] = pooled_batch
             else:
@@ -256,6 +291,10 @@ class TickBuilder:
             self.transfer("n_vis", meta["n_vis"]),
             self.transfer("t_arr", meta["t_arr"]),
             self.transfer("mask", meta["mask"]),
+            self.transfer("fresh", meta["fresh"]),
+            self.transfer("dup", meta["dup"]),
+            self.transfer("corrupt", meta["corrupt"]),
+            self.transfer("stal", meta["stal"]),
         )
         self.host_build_s += time.perf_counter() - t0
         t_end = (times[-1] + (1 if advance else 0)) if len(times) else 0
@@ -300,6 +339,10 @@ class TickBuilder:
         meta["n_vis"].fill(0.0)
         meta["t_arr"].fill(0.0)
         meta["mask"].fill(False)
+        meta["fresh"].fill(False)
+        meta["dup"].fill(False)
+        meta["corrupt"].fill(0)
+        meta["stal"].fill(0.0)
         tx, ty = self._slot_template(None)
         xs, ys = self._data_slot((Tw, P), slot, tx, ty)
         t_run = t_start
@@ -315,6 +358,10 @@ class TickBuilder:
                 meta["delays"][j, i] = a.delay
                 meta["t_arr"][j, i] = t_run
                 meta["mask"][j, i] = True
+                meta["fresh"][j, i] = getattr(a, "fresh", False)
+                meta["dup"][j, i] = getattr(a, "dup", False)
+                meta["corrupt"][j, i] = getattr(a, "corrupt", 0)
+                meta["stal"][j, i] = stal
                 c = self.by_id[a.cid]
                 meta["n_vis"][j, i] = c.stream.visible(t_run)
                 for e in range(self.E):
@@ -332,6 +379,10 @@ class TickBuilder:
             self.window_transfer("n_vis", meta["n_vis"]),
             self.window_transfer("t_arr", meta["t_arr"]),
             self.window_transfer("mask", meta["mask"]),
+            self.window_transfer("fresh", meta["fresh"]),
+            self.window_transfer("dup", meta["dup"]),
+            self.window_transfer("corrupt", meta["corrupt"]),
+            self.window_transfer("stal", meta["stal"]),
         )
         self.host_build_s += time.perf_counter() - t0
         return PreparedTick(

@@ -14,6 +14,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.sim.faults import FaultSpec
 from repro.sim.streaming import OnlineStream
 from repro.sim.traces import AvailabilityTrace
 
@@ -38,6 +39,12 @@ class DeviceProfile:
     compressed uploads (``RunConfig.upload_codec``) feed *simulated
     arrival times*.  ``None`` (the default) is the unmetered pre-PR-7
     behavior: upload cost 0.0, delay draws bitwise unchanged.
+
+    ``faults``, when set, is the device's deterministic fault model
+    (``repro.sim.faults.FaultSpec``): upload loss + retry/backoff,
+    duplicate delivery, payload corruption, crash-restart — all drawn
+    rng-free from the arrival stamp at pop time, so ``None`` (the
+    default) replays the fault-free stream bitwise.
     """
 
     base_delay: float  # mean network offset, seconds (paper: U[10, 100])
@@ -45,6 +52,7 @@ class DeviceProfile:
     jitter: Tuple[float, float] = (0.8, 1.2)  # multiplicative network jitter
     trace: Optional[AvailabilityTrace] = None  # replayable on/off windows
     bandwidth_bytes_per_s: Optional[float] = None  # upload link (None: free)
+    faults: Optional[FaultSpec] = None  # deterministic chaos (None: benign)
 
     def delay(self, rng: np.random.Generator, n_work: int) -> float:
         compute = n_work / self.compute_rate
@@ -120,6 +128,9 @@ def make_sim_clients(
     profiles: Optional[Sequence[DeviceProfile]] = None,
     traces: Optional[Sequence[Optional[AvailabilityTrace]]] = None,
     bandwidth_range: Optional[Tuple[float, float]] = None,
+    fault_rate: Optional[float] = None,
+    fault_seed: int = 0,
+    fault_kind: str = "nan",
 ) -> List[SimClient]:
     """Build SimClients from (train_x, train_y, test_x, test_y) splits.
 
@@ -131,6 +142,12 @@ def make_sim_clients(
     delay rng stream.  ``bandwidth_range``, when given, draws client i's
     upload-link bytes/s right after its offset (same interleaving as
     ``make_profiles``): a ``None`` range keeps the offset stream bitwise.
+
+    ``fault_rate``, when given, attaches ``FaultSpec.uniform(fault_rate,
+    seed=fault_seed, corrupt_kind=fault_kind)`` to every client.  Fault
+    draws are hash-derived from ``(fault_seed, cid, stamp)`` — never from
+    this rng — so a ``None`` rate (the default) and every rng stream are
+    bitwise unchanged.
 
     ``profiles``/``traces`` must supply exactly one entry per dataset —
     a short list raises up front instead of mis-indexing mid-build.
@@ -160,6 +177,10 @@ def make_sim_clients(
             prof = DeviceProfile(base_delay=base, bandwidth_bytes_per_s=bw)
         if traces is not None and traces[i] is not None:
             prof = dataclasses.replace(prof, trace=traces[i])
+        if fault_rate:
+            prof = dataclasses.replace(
+                prof, faults=FaultSpec.uniform(fault_rate, seed=fault_seed,
+                                               corrupt_kind=fault_kind))
         out.append(
             SimClient(
                 cid=i,

@@ -17,9 +17,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import tree_axpy, tree_sub, tree_zeros_like
+from repro.common.pytree import (tree_any_nan, tree_axpy, tree_l2_norm,
+                                 tree_sub, tree_zeros_like)
 from repro.core import client as client_lib
 from repro.core.algorithms.common import (avg_surrogate_grad,
+                                          corrupt_wire_delta,
+                                          corruption_key,
                                           resolve_upload_codec, sgd_epochs)
 from repro.core.server import aggregate, init_server
 from repro.sim.engine import RunConfig, stack_batches
@@ -38,9 +41,10 @@ class _ChurnStats:
         self.meter = StalenessMeter()
         self.sim_time = 0.0
 
-    def arrival(self, cid: int, t: int, time: float) -> None:
-        self.meter.observe(cid, t)
+    def arrival(self, cid: int, t: int, time: float) -> int:
+        stal = self.meter.observe(cid, t)
         self.sim_time = time
+        return stal  # the admission-guard staleness (engine's stal column)
 
     def update(self, stats: Dict, sched: AsyncScheduler) -> None:
         stats.update(
@@ -97,6 +101,78 @@ def _upload_encoder(cfg: RunConfig):
     return lambda delta, t, cid: enc(delta, jnp.int32(t), jnp.int32(cid))
 
 
+class _ChaosTools:
+    """Per-arrival oracle of the engine tick's chaos ops: wire-delta
+    corruption + the server admission guard, as jitted traceables built
+    from the SAME shared helpers the tick uses (``corrupt_wire_delta`` /
+    ``corruption_key``; guard arithmetic in f32), so every discrete
+    admit/clip decision and every corrupted payload matches the engine
+    bit-for-bit.  ``None``-like (use :func:`_chaos_tools`) when the run is
+    fault- and guard-free — the oracles then trace nothing new."""
+
+    def __init__(self, cfg: RunConfig):
+        ms = cfg.max_staleness
+        mdn = cfg.max_delta_norm
+        downweight = cfg.staleness_policy == "downweight"
+
+        @jax.jit
+        def _co(d, code, t, cid):
+            return corrupt_wire_delta(
+                d, code, corruption_key(cfg.seed, t, cid))
+
+        @jax.jit
+        def _gd(d, stal):
+            ok = ~tree_any_nan(d)
+            sc = jnp.ones((), jnp.float32)
+            if ms is not None:
+                over = stal > ms
+                if downweight:
+                    sc = sc * jnp.where(over, ms / jnp.maximum(stal, 1e-9),
+                                        1.0)
+                else:
+                    ok = ok & ~over
+            if mdn is not None:
+                nrm = tree_l2_norm(d)
+                sc = sc * jnp.where(nrm > mdn, mdn / jnp.maximum(nrm, 1e-30),
+                                    1.0)
+            return ok, sc
+
+        @jax.jit
+        def _sc(d, sc):
+            return jax.tree.map(lambda x: x * sc, d)
+
+        self._co, self._gd, self._scale = _co, _gd, _sc
+
+    def corrupt(self, delta, code: int, t: int, cid: int):
+        """The arrival's corrupted wire delta (identity when code == 0 —
+        the engine's ``where`` on a zero code selects the original)."""
+        if not code:
+            return delta
+        return self._co(delta, jnp.int32(code), jnp.int32(t), jnp.int32(cid))
+
+    def guard(self, delta, stal):
+        """(admit, scale): the tick's admission decision for one arrival.
+        ``scale < 1`` means the caller must fold ``self.scale(delta,
+        scale)`` instead (norm clip / staleness downweight); an admitted
+        ``scale >= 1`` arrival folds its delta bitwise-untouched."""
+        ok, sc = self._gd(delta, jnp.float32(stal))
+        return bool(ok), float(sc)
+
+    def scale(self, delta, sc):
+        return self._scale(delta, jnp.float32(sc))
+
+
+def _chaos_tools(cfg: RunConfig, clients) -> Optional[_ChaosTools]:
+    """The run's :class:`_ChaosTools`, or None when no client carries an
+    active FaultSpec and no admission knob is set — mirroring the
+    engine's compile-time ``chaos`` flag, so fault-free oracle loops stay
+    bitwise-identical to their pre-chaos selves."""
+    faults_on = any(c.profile.faults is not None and c.profile.faults.active
+                    for c in clients)
+    guards = cfg.max_staleness is not None or cfg.max_delta_norm is not None
+    return _ChaosTools(cfg) if (faults_on or guards) else None
+
+
 def _upload_stats(stats: Dict, cfg: RunConfig, w0, n_uploads: int) -> None:
     """The engine's resource-accounting stats columns, oracle-side."""
     codec = resolve_upload_codec(cfg)
@@ -146,6 +222,7 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
         ), loss
 
     trainable = {c.cid for c in active if c.stream.n > 0}
+    chaos = _chaos_tools(cfg, clients)
     traj: Dict[int, object] = {}
     churn = _ChurnStats()
     t = 0
@@ -156,10 +233,12 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
         (a,) = tick
         if a.cid not in trainable:  # empty split: engine drops it too
             continue
-        churn.arrival(a.cid, t, a.time)
+        stal = churn.arrival(a.cid, t, a.time)
         c = sched.by_id[a.cid]
         st = cstate[a.cid]
         n_vis = c.stream.visible(t)
+        if a.fresh:  # crash rejoin: the device lost its local state
+            st = client_lib.init_client_state(w0, n_vis)
         n_new = max(n_vis - float(st.n_samples), 0.0)  # blocking host read
         xs, ys = stack_batches(c.stream, t, cfg.batch_size, cfg.local_epochs)
         st_before = st.params
@@ -170,12 +249,35 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
         delta = tree_sub(st_before, st.params)
         if enc is not None:  # lossy upload: same (seed, t, cid) mask key
             delta = enc(delta, t, a.cid)  # as the engine's in-tick vmap
-        server = aggregate(  # eager delta + second dispatch, as in the seed
-            server, a.cid, delta, n_vis, cfg_model,
-            upload_is_delta=True, feature_learning=cfg.feature_learning,
-        )
-        t = server.t
-        cstate[a.cid] = client_lib.receive_server_model(st, server.w)
+        admit = True
+        if chaos is not None:
+            delta = chaos.corrupt(delta, a.corrupt, t, a.cid)
+            admit, sc = chaos.guard(delta, stal)
+            if admit and sc < 1.0:
+                delta = chaos.scale(delta, sc)
+        if admit:
+            server = aggregate(  # eager delta + second dispatch, as in seed
+                server, a.cid, delta, n_vis, cfg_model,
+                upload_is_delta=True, feature_learning=cfg.feature_learning,
+            )
+            if a.dup:  # duplicate delivery: the same upload folds twice,
+                # but consumes only ONE global iteration (fix t back)
+                t_once = server.t
+                server = aggregate(
+                    server, a.cid, delta, n_vis, cfg_model,
+                    upload_is_delta=True,
+                    feature_learning=cfg.feature_learning,
+                )
+                server = dataclasses.replace(server, t=t_once)
+            t = server.t
+            cstate[a.cid] = client_lib.receive_server_model(st, server.w)
+        else:
+            # rejected: no fold, no download — the client keeps its
+            # post-round state, and the iteration stamp still advances
+            # (the engine's producer stamps arrivals before admission)
+            server = dataclasses.replace(server, t=server.t + 1)
+            t = server.t
+            cstate[a.cid] = st
         if collect_trace:
             traj[t] = jax.tree.map(np.asarray, server.w)
         if t % cfg.eval_every == 0 or t == cfg.T:
@@ -203,9 +305,11 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
     sched = _make_scheduler(clients, cfg,
                             resolve_upload_codec(cfg).tree_bytes(w))
     sgd = jax.jit(sgd_epochs(model, cfg, mu=0.005))
+    w0_init = w
     version = {c.cid: 0 for c in sched.active}
     local_w = {c.cid: w for c in sched.active}
     trainable = {c.cid for c in sched.active if c.stream.n > 0}
+    chaos = _chaos_tools(cfg, clients)
     traj: Dict[int, object] = {}
     churn = _ChurnStats()
     t, n_evals = 0, 0
@@ -216,25 +320,52 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
         (a,) = tick
         if a.cid not in trainable:  # empty split: engine drops it too
             continue
-        churn.arrival(a.cid, t, a.time)
+        stal = churn.arrival(a.cid, t, a.time)
         c = sched.by_id[a.cid]
+        if a.fresh:  # crash rejoin: stale copy + version reset to init
+            local_w[a.cid] = w0_init
+            version[a.cid] = 0
         xs, ys = stack_batches(c.stream, t, cfg.batch_size, cfg.local_epochs)
         wk, loss = sgd(local_w[a.cid], local_w[a.cid],
                        jnp.asarray(xs), jnp.asarray(ys))
         if losses is not None:
             losses[t] = float(loss)
-        if enc is not None:  # wire delta = local progress vs the stale copy
-            wk = jax.tree.map(
-                jnp.add, local_w[a.cid],
-                enc(tree_sub(wk, local_w[a.cid]), t, a.cid))
-        staleness = t - version[a.cid]
-        alpha_t = cfg.fedasync_alpha * (1.0 + staleness) ** (
-            -cfg.fedasync_staleness_exp
-        )
-        w = jax.tree.map(lambda x, y: (1 - alpha_t) * x + alpha_t * y, w, wk)
-        t += 1
-        version[a.cid] = t
-        local_w[a.cid] = w
+        admit = True
+        if enc is not None or chaos is not None:
+            # wire delta = local progress vs the stale copy; recompose
+            # only when the delta was actually modified, so clean
+            # identity-codec arrivals stay bitwise (w + (wk - w) != wk)
+            d = tree_sub(wk, local_w[a.cid])
+            modified = False
+            if enc is not None:
+                d = enc(d, t, a.cid)
+                modified = True
+            if chaos is not None:
+                if a.corrupt:
+                    d = chaos.corrupt(d, a.corrupt, t, a.cid)
+                    modified = True
+                admit, sc = chaos.guard(d, stal)
+                if admit and sc < 1.0:
+                    d = chaos.scale(d, sc)
+                    modified = True
+            if modified:
+                wk = jax.tree.map(jnp.add, local_w[a.cid], d)
+        if admit:
+            staleness = t - version[a.cid]
+            alpha_t = cfg.fedasync_alpha * (1.0 + staleness) ** (
+                -cfg.fedasync_staleness_exp
+            )
+            mix = lambda x, y: (1 - alpha_t) * x + alpha_t * y
+            w = jax.tree.map(mix, w, wk)
+            if a.dup:  # duplicate delivery: same upload, same alpha, twice
+                w = jax.tree.map(mix, w, wk)
+            t += 1
+            version[a.cid] = t
+            local_w[a.cid] = w
+        else:
+            # rejected: no mix, no download — the stale copy and version
+            # stamp stay put, but the iteration stamp still advances
+            t += 1
         if collect_trace:
             traj[t] = jax.tree.map(np.asarray, w)
         if t % cfg.eval_every == 0 or t == cfg.T:
@@ -265,12 +396,14 @@ def run_fedbuff_reference(model, cfg_model, clients, cfg: RunConfig, *,
     sched = _make_scheduler(clients, cfg,
                             resolve_upload_codec(cfg).tree_bytes(w))
     sgd = jax.jit(sgd_epochs(model, cfg, mu=0.0))
+    w0_init = w
     version = {c.cid: 0 for c in sched.active}
     local_w = {c.cid: w for c in sched.active}
     trainable = {c.cid for c in sched.active if c.stream.n > 0}
     M = int(cfg.buffer_size)
     buf = tree_zeros_like(w)
     count = 0
+    chaos = _chaos_tools(cfg, clients)
     traj: Dict[int, object] = {}
     churn = _ChurnStats()
     t, n_evals = 0, 0
@@ -281,8 +414,11 @@ def run_fedbuff_reference(model, cfg_model, clients, cfg: RunConfig, *,
         (a,) = tick
         if a.cid not in trainable:  # empty split: engine drops it too
             continue
-        churn.arrival(a.cid, t, a.time)
+        stal = churn.arrival(a.cid, t, a.time)
         c = sched.by_id[a.cid]
+        if a.fresh:  # crash rejoin: stale copy + version reset to init
+            local_w[a.cid] = w0_init
+            version[a.cid] = 0
         xs, ys = stack_batches(c.stream, t, cfg.batch_size, cfg.local_epochs)
         wk, loss = sgd(local_w[a.cid], local_w[a.cid],
                        jnp.asarray(xs), jnp.asarray(ys))
@@ -293,15 +429,30 @@ def run_fedbuff_reference(model, cfg_model, clients, cfg: RunConfig, *,
         delta = tree_sub(local_w[a.cid], wk)
         if enc is not None:  # the buffered deposit is the wire delta
             delta = enc(delta, t, a.cid)
-        buf = tree_axpy(s_w, delta, buf)
-        count += 1
-        if count >= M:
-            w = tree_axpy(-cfg.fedbuff_lr / M, buf, w)
-            buf = tree_zeros_like(w)
-            count = 0
-        t += 1
-        version[a.cid] = t
-        local_w[a.cid] = w
+        admit = True
+        if chaos is not None:
+            if a.corrupt:
+                delta = chaos.corrupt(delta, a.corrupt, t, a.cid)
+            admit, sc = chaos.guard(delta, stal)
+            if admit and sc < 1.0:
+                delta = chaos.scale(delta, sc)
+        if admit:
+            # duplicate delivery deposits twice (the buffer count runs
+            # twice, so a flush can land between the two deposits)
+            for _ in range(2 if a.dup else 1):
+                buf = tree_axpy(s_w, delta, buf)
+                count += 1
+                if count >= M:
+                    w = tree_axpy(-cfg.fedbuff_lr / M, buf, w)
+                    buf = tree_zeros_like(w)
+                    count = 0
+            t += 1
+            version[a.cid] = t
+            local_w[a.cid] = w
+        else:
+            # rejected: no deposit, no download — the iteration stamp
+            # still advances (stamped by the producer before admission)
+            t += 1
         if collect_trace:
             traj[t] = jax.tree.map(np.asarray, w)
         if t % cfg.eval_every == 0 or t == cfg.T:
@@ -336,6 +487,8 @@ def run_fedavg_reference(model, cfg_model, clients, cfg: RunConfig, *,
     )
     by_id = {c.cid: c for c in sched.active}
     sgd = jax.jit(sgd_epochs(model, cfg, mu=prox_mu))
+    chaos = _chaos_tools(cfg, clients)
+    meter = StalenessMeter()  # the engine's per-arrival stal column
     traj: Dict[int, object] = {}
     sim_time, n_evals, n_uploads = 0.0, 0, 0
     for t in range(1, cfg.T + 1):
@@ -350,21 +503,46 @@ def run_fedavg_reference(model, cfg_model, clients, cfg: RunConfig, *,
         new_ws, weights = [], []
         for a in arrivals:
             c = by_id[a.cid]
+            stal = meter.observe(a.cid, t)
             xs, ys = stack_batches(c.stream, t, cfg.batch_size,
                                    cfg.local_epochs)
             wk = sgd(w, w, jnp.asarray(xs), jnp.asarray(ys))[0]
-            if enc is not None:  # wire delta vs the round's broadcast; the
-                # engine stamps every participant with the round index t
-                wk = jax.tree.map(jnp.add, w, enc(tree_sub(wk, w), t, a.cid))
-            new_ws.append(wk)
-            weights.append(c.stream.visible(t))
+            admit = True
+            if enc is not None or chaos is not None:
+                # wire delta vs the round's broadcast; the engine stamps
+                # every participant with the round index t.  Recompose
+                # only when the delta was actually modified, so clean
+                # identity-codec uploads stay bitwise.
+                d = tree_sub(wk, w)
+                modified = False
+                if enc is not None:
+                    d = enc(d, t, a.cid)
+                    modified = True
+                if chaos is not None:
+                    if getattr(a, "corrupt", 0):
+                        d = chaos.corrupt(d, a.corrupt, t, a.cid)
+                        modified = True
+                    admit, sc = chaos.guard(d, stal)
+                    if admit and sc < 1.0:
+                        d = chaos.scale(d, sc)
+                        modified = True
+                if modified:
+                    wk = jax.tree.map(jnp.add, w, d)
+            if admit:
+                # duplicate delivery folds the participant twice (2x its
+                # sample weight in the synchronous mean)
+                for _ in range(2 if getattr(a, "dup", False) else 1):
+                    new_ws.append(wk)
+                    weights.append(c.stream.visible(t))
         n_uploads += len(arrivals)
         sim_time += round_time
-        tot = sum(weights)
-        w = jax.tree.map(
-            lambda *xs_: sum(wi / tot * x for wi, x in zip(weights, xs_)),
-            *new_ws,
-        )
+        if new_ws:
+            tot = sum(weights)
+            w = jax.tree.map(
+                lambda *xs_: sum(wi / tot * x for wi, x in zip(weights, xs_)),
+                *new_ws,
+            )
+        # else: every upload rejected — finalize keeps the old model
         if collect_trace:
             traj[t] = jax.tree.map(np.asarray, w)
         if t % cfg.eval_every == 0 or t == cfg.T:

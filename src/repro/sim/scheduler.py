@@ -52,11 +52,22 @@ class Arrival:
     ``time`` is the simulated arrival instant; ``delay`` the duration of
     the local round that completes at ``time`` (feeds the paper's dynamic
     learning-step multiplier, Eq. 11).
+
+    The fault fields default to the benign values, so fault-free
+    construction (and every pre-fault equality pin) is unchanged:
+    ``dup`` marks a duplicate delivery the server folds twice;
+    ``corrupt`` carries a ``repro.sim.faults.CORRUPT_*`` wire code
+    applied to the upload delta inside the jitted tick; ``fresh`` marks
+    the client's first arrival after a crash-restart (its local state is
+    reset to init before this arrival's round).
     """
 
     cid: int
     time: float
     delay: float
+    dup: bool = False
+    corrupt: int = 0
+    fresh: bool = False
 
 
 def draw_dropouts(n: int, frac: float,
@@ -105,6 +116,15 @@ class AsyncScheduler:
     exactly 0.0 and replay the pre-bandwidth stream bitwise.
     """
 
+    # Hang guard for next_tick: a degenerate config (p_crash/p_loss near
+    # 1.0, or skip_prob=1.0) with no sim_time_budget re-queues every event
+    # forever and never delivers.  Any realistic config delivers within a
+    # few dozen consecutive events (bounded deferral streaks scale with
+    # fleet size, hence the per-client term), so the bound is unreachable
+    # except when the loop genuinely cannot terminate — then it raises
+    # instead of silently spinning.
+    _MAX_SPINS = 100_000
+
     def __init__(self, clients: Sequence[SimClient], *, seed: int = 0,
                  dropout_frac: float = 0.0, skip_prob: float = 0.0,
                  init_work: int = 32, round_work: int = 64,
@@ -114,6 +134,7 @@ class AsyncScheduler:
         self.active, self.dropped_cids = _split_active(
             clients, dropout_frac, self.rng)
         self.by_id = {c.cid: c for c in self.active}
+        self._max_spins = max(self._MAX_SPINS, 100 * len(self.active))
         self.skip_prob = skip_prob
         self.init_work = init_work
         self.round_work = round_work
@@ -121,7 +142,18 @@ class AsyncScheduler:
         self.upload_bytes = upload_bytes
         self.deferred = 0  # off-window completions pushed to an on-edge
         self.retired = 0  # clients whose one-shot trace ran out
-        self._heap: List[Tuple[float, int]] = []
+        # fault counters (all roll back with peek_window speculation)
+        self.lost = 0        # uploads dropped with retries exhausted
+        self.retried = 0     # retry deliveries scheduled (backoff pushes)
+        self.crashed = 0     # crash-restart events (round destroyed)
+        self.duplicated = 0  # arrivals delivered with dup=True
+        self.corrupted = 0   # arrivals delivered with corrupt != 0
+        self._crashed: set = set()  # cids whose next arrival is fresh
+        # heap entries: (time, cid) round completions, or
+        # (time, cid, 1, (orig_stamp, delay0, attempt)) retry deliveries.
+        # Tuple comparison stays total: equal (time, cid) prefixes order
+        # the 2-tuple first, and retry payloads are all-float tuples.
+        self._heap: List[Tuple] = []
         self._pending: Optional[Tuple] = None
         for c in self.active:
             heapq.heappush(
@@ -129,6 +161,57 @@ class AsyncScheduler:
                 (c.profile.delay(self.rng, init_work)
                  + c.profile.upload_time(upload_bytes), c.cid)
             )
+
+    def _counters(self) -> Tuple:
+        """Snapshot of every speculation-sensitive counter (the frozenset
+        copy makes the crashed-cid set rollback-safe)."""
+        return (self.deferred, self.retired, self.lost, self.retried,
+                self.crashed, self.duplicated, self.corrupted,
+                frozenset(self._crashed))
+
+    def _restore_counters(self, counters: Tuple) -> None:
+        (self.deferred, self.retired, self.lost, self.retried,
+         self.crashed, self.duplicated, self.corrupted, crashed) = counters
+        self._crashed = set(crashed)
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of every mutable field (crash-resume hook).
+
+        Captured between a ``commit`` and the next ``peek_window`` — no
+        speculation in flight — it pins the exact event stream: the
+        pop-time-draw contract makes (rng state, heap, counters, crashed
+        set) the scheduler's complete state.
+        """
+        if self._pending is not None:
+            raise RuntimeError(
+                "state_dict() with an uncommitted peek in flight")
+        return {
+            "rng": self.rng.bit_generator.state,
+            "heap": [list(e[:3]) + [list(e[3])] if len(e) > 2 else list(e)
+                     for e in self._heap],
+            "counters": [self.deferred, self.retired, self.lost,
+                         self.retried, self.crashed, self.duplicated,
+                         self.corrupted],
+            "crashed": sorted(self._crashed),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot (heap order preserved —
+        a copy of a valid heap is a valid heap)."""
+        self.rng.bit_generator.state = state["rng"]
+        heap: List[Tuple] = []
+        for e in state["heap"]:
+            if len(e) > 2:  # retry delivery: nested payload tuple
+                heap.append((float(e[0]), int(e[1]), int(e[2]),
+                             (float(e[3][0]), float(e[3][1]), int(e[3][2]))))
+            else:
+                heap.append((float(e[0]), int(e[1])))
+        self._heap = heap
+        (self.deferred, self.retired, self.lost, self.retried, self.crashed,
+         self.duplicated, self.corrupted) = (int(v)
+                                             for v in state["counters"])
+        self._crashed = {int(c) for c in state["crashed"]}
+        self._pending = None
 
     def peek_tick(self, limit: int) -> List[Arrival]:
         """Speculatively compute the next tick without consuming state.
@@ -172,7 +255,7 @@ class AsyncScheduler:
         """
         rng_state = self.rng.bit_generator.state
         heap = list(self._heap)
-        counters = (self.deferred, self.retired)
+        counters = self._counters()
         self._pending = None
         ticks: List[List[Arrival]] = []
         count = count if count is not None else len
@@ -187,10 +270,10 @@ class AsyncScheduler:
             ticks.append(tick)
             remaining -= count(tick)
         self._pending = (ticks, self.rng.bit_generator.state, self._heap,
-                         (self.deferred, self.retired))
+                         self._counters())
         self._heap = heap
         self.rng.bit_generator.state = rng_state
-        self.deferred, self.retired = counters
+        self._restore_counters(counters)
         return ticks
 
     def commit(self) -> None:
@@ -200,7 +283,7 @@ class AsyncScheduler:
         _, rng_state, heap, counters = self._pending
         self.rng.bit_generator.state = rng_state
         self._heap = heap
-        self.deferred, self.retired = counters
+        self._restore_counters(counters)
         self._pending = None
 
     def next_tick(self, limit: int) -> List[Arrival]:
@@ -217,12 +300,35 @@ class AsyncScheduler:
         before the budget/seen checks run.  Normalization touches only the
         heap, never the rng, so it commutes across tick boundaries and
         replays identically under ``peek_tick`` rollback.
+
+        Faults run as an rng-free pipeline *after* the fault-free skip and
+        delay draws have consumed their exact rng prefix (so the main
+        stream is bitwise-identical whether or not faults fire): crash
+        first (the round and its upload are destroyed, the client restarts
+        after a deterministic penalty), then loss (a lost upload schedules
+        a backoff retry-delivery event; the client's next round proceeds
+        regardless — uploads are fire-and-forget), then duplicate /
+        corruption flags stamped on the delivered arrival.  Retry
+        deliveries re-derive every decision from the upload's *original*
+        stamp, so an attempt's outcome is chunking-independent.
         """
         self._pending = None  # a direct pop invalidates any speculation
         tick: List[Arrival] = []
         seen = set()
+        spins = 0  # consecutive events processed without a delivery
         while len(tick) < limit and self._heap:
-            top_time, top_cid = self._heap[0]
+            spins += 1
+            if spins > self._max_spins:
+                raise RuntimeError(
+                    f"scheduler processed {self._max_spins} consecutive "
+                    "events without delivering an arrival — a degenerate "
+                    "config (p_crash/p_loss near 1.0, or skip_prob=1.0) "
+                    "with no sim_time_budget can never deliver; bound the "
+                    "run with sim_time_budget or lower the fault/skip "
+                    "rates")
+            top = self._heap[0]
+            top_time, top_cid = top[0], top[1]
+            is_retry = len(top) > 2
             if self.budget is not None and top_time > self.budget:
                 # budget before normalization: deferral only moves times
                 # forward, so a raw time past the budget can never yield
@@ -234,9 +340,14 @@ class AsyncScheduler:
                 heapq.heappop(self._heap)
                 t_on = tr.next_on(top_time)
                 if t_on is None:
-                    self.retired += 1  # one-shot trace exhausted: Fig.-4
-                    continue           # style permanent departure
-                heapq.heappush(self._heap, (t_on, top_cid))
+                    if is_retry:
+                        # the in-flight upload can never land; only the
+                        # client's *round* event retires it
+                        self.lost += 1
+                    else:
+                        self.retired += 1  # one-shot trace exhausted:
+                    continue               # Fig.-4 permanent departure
+                heapq.heappush(self._heap, (t_on,) + tuple(top[1:]))
                 if self.budget is not None and t_on > self.budget:
                     # the on-edge lands past the budget: the budgeted run
                     # never delivers this event, so it must not count as
@@ -247,6 +358,28 @@ class AsyncScheduler:
                 continue
             if top_cid in seen:
                 break
+            if is_retry:
+                # retry delivery: fully rng-free — no skip/delay draws, no
+                # round requeue; the loss/backoff draws key on the
+                # original stamp + attempt
+                heapq.heappop(self._heap)
+                now, cid = top[0], top[1]
+                orig_stamp, delay0, attempt = top[3]
+                fs = self.by_id[cid].profile.faults
+                if fs.lost(cid, orig_stamp, attempt):
+                    if attempt < fs.max_retries:
+                        self.retried += 1
+                        heapq.heappush(self._heap, (
+                            now + fs.retry_delay(cid, orig_stamp,
+                                                 attempt + 1),
+                            cid, 1, (orig_stamp, delay0, attempt + 1)))
+                    else:
+                        self.lost += 1  # retries exhausted: upload gone
+                    continue
+                tick.append(self._deliver(cid, now, delay0, orig_stamp, fs))
+                seen.add(cid)
+                spins = 0
+                continue
             now, cid = heapq.heappop(self._heap)
             c = self.by_id[cid]
             if self.skip_prob and self.rng.uniform() < self.skip_prob:
@@ -259,10 +392,54 @@ class AsyncScheduler:
                 continue
             delay = c.profile.delay(self.rng, self.round_work) \
                 + c.profile.upload_time(self.upload_bytes)
+            fs = c.profile.faults
+            if fs is not None and fs.active:
+                if fs.crash(cid, now):
+                    # round destroyed, no arrival; the client restarts
+                    # from init state after a deterministic penalty and
+                    # its next delivered arrival is marked fresh
+                    self.crashed += 1
+                    self._crashed.add(cid)
+                    heapq.heappush(
+                        self._heap,
+                        (now + fs.restart_delay(cid, now) + delay, cid))
+                    continue
+                heapq.heappush(self._heap, (now + delay, cid))
+                if fs.lost(cid, now, 0):
+                    if fs.max_retries > 0:
+                        self.retried += 1
+                        heapq.heappush(self._heap,
+                                       (now + fs.retry_delay(cid, now, 1),
+                                        cid, 1, (now, delay, 1)))
+                    else:
+                        self.lost += 1
+                    continue
+                tick.append(self._deliver(cid, now, delay, now, fs))
+                seen.add(cid)
+                spins = 0
+                continue
             heapq.heappush(self._heap, (now + delay, cid))
             tick.append(Arrival(cid=cid, time=now, delay=delay))
             seen.add(cid)
+            spins = 0
         return tick
+
+    def _deliver(self, cid: int, now: float, delay: float,
+                 orig_stamp: float, fs) -> Arrival:
+        """Arrival with dup/corrupt decided from the upload's original
+        stamp (a retried delivery carries the same flags as attempt 0
+        would have) and the post-crash fresh mark consumed."""
+        dup = fs.duplicate(cid, orig_stamp)
+        corrupt = fs.corrupt_code(cid, orig_stamp)
+        fresh = cid in self._crashed
+        if fresh:
+            self._crashed.discard(cid)
+        if dup:
+            self.duplicated += 1
+        if corrupt:
+            self.corrupted += 1
+        return Arrival(cid=cid, time=now, delay=delay,
+                       dup=dup, corrupt=corrupt, fresh=fresh)
 
 
 class SyncScheduler:
@@ -287,6 +464,13 @@ class SyncScheduler:
     deterministic additive cost on the participant's delay, so the
     barrier waits for the slowest *upload-inclusive* round and the
     participant-sampling rng stream is untouched.
+
+    Faults are minimal here (sync participants hold no cross-round local
+    state and the barrier admits no late redelivery): crash is treated
+    as loss, lost reports simply miss the round — no retries — and
+    dup/corrupt flags ride the delivered arrivals.  All draws are
+    rng-free hashes of the round's ``now`` stamp, so fault-free sampling
+    is bitwise unchanged.
     """
 
     def __init__(self, clients: Sequence[SimClient], *, seed: int = 0,
@@ -300,6 +484,11 @@ class SyncScheduler:
         self.m = max(1, int(participation * len(self.active)))
         self.round_work = round_work
         self.upload_bytes = upload_bytes
+        self.lost = 0
+        self.retried = 0  # always 0: the barrier admits no redelivery
+        self.crashed = 0
+        self.duplicated = 0
+        self.corrupted = 0
 
     def next_round(self, now: float = 0.0) -> Tuple[List[Arrival], float]:
         """(participants, round_time).  round_time = slowest participant,
@@ -322,6 +511,23 @@ class SyncScheduler:
                 continue
             delay = c.profile.delay(self.rng, self.round_work) \
                 + c.profile.upload_time(self.upload_bytes)
+            fs = c.profile.faults
+            if fs is not None and fs.active:
+                # rng-free, after the fault-free draws consumed their
+                # exact prefix; crash == loss for a stateless participant
+                if fs.crash(c.cid, now):
+                    self.crashed += 1
+                    continue
+                if fs.lost(c.cid, now, 0):
+                    self.lost += 1
+                    continue
+                dup = fs.duplicate(c.cid, now)
+                corrupt = fs.corrupt_code(c.cid, now)
+                self.duplicated += int(dup)
+                self.corrupted += int(bool(corrupt))
+                arrivals.append(Arrival(cid=c.cid, time=now, delay=delay,
+                                        dup=dup, corrupt=corrupt))
+                continue
             arrivals.append(Arrival(cid=c.cid, time=now, delay=delay))
         round_time = max((a.delay for a in arrivals), default=0.0)
         return arrivals, round_time

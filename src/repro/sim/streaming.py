@@ -63,3 +63,10 @@ class OnlineStream:
     def window(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
         v = self.visible(t)
         return self.x[:v], self.y[:v]
+
+    def rng_state(self) -> dict:
+        """JSON-able snapshot of the batch-draw rng (crash-resume hook)."""
+        return self._rng.bit_generator.state
+
+    def set_rng_state(self, state: dict) -> None:
+        self._rng.bit_generator.state = state

@@ -1,0 +1,245 @@
+"""Bitwise crash-resume and checkpoint fail-fast tests.
+
+The resume contract has two halves, both bitwise:
+
+* **Checkpointing is free.**  A run that writes snapshots must produce a
+  trajectory bit-identical to the same run without ``checkpoint_path`` —
+  the host payload is captured producer-side before ``peek_window``, so
+  no stream rng draw or device value is perturbed by snapshotting.
+* **Resume is exact.**  Restarting from a mid-run snapshot replays the
+  remaining arrival stream (scheduler rng + heap + fault counters,
+  per-client stream rngs, staleness meter, (t, sim_time) cursor) and
+  lands on final weights that equal the uninterrupted run's, bit for
+  bit — including under active fault injection and admission guards.
+
+Plus the fail-fast seams: a snapshot directory without ``run.json`` (the
+atomic-rename validity marker) refuses to load, strategy/seed mismatches
+raise, non-async schedules raise, and ``load_checkpoint`` reports a
+readable key diff instead of a bare shape error.
+"""
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (load_checkpoint, load_run_state,
+                              save_checkpoint, save_run_state)
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    from repro.configs import get_arch
+    from repro.data import airquality_like
+    from repro.models import LOCAL, build_model
+
+    data = airquality_like(n_clients=5, n_per=60)
+    cfg_model = dataclasses.replace(get_arch("paper-lstm"), in_features=8,
+                                    out_features=1, hidden=12)
+    return data, cfg_model, build_model(cfg_model, LOCAL)
+
+
+def _cfg(**kw):
+    from repro.core import RunConfig
+
+    kw.setdefault("seed", 0)
+    return RunConfig(T=60, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
+                     beta=0.001, task="regression", eval_every=20, **kw)
+
+
+def _clients(fault_rate=0.0):
+    from repro.sim.profiles import make_sim_clients
+
+    data, _, _ = _setup()
+    if fault_rate:
+        return make_sim_clients(data, seed=0, fault_rate=fault_rate,
+                                fault_seed=42)
+    return make_sim_clients(data, seed=0)
+
+
+def _run(alg, cfg, fault_rate, window, **kw):
+    from repro.core.algorithms import get_strategy
+    from repro.sim.engine import run_strategy
+
+    data, cfg_model, model = _setup()
+    trace, stats = [], {}
+    run_strategy(get_strategy(alg), model, cfg_model, _clients(fault_rate),
+                 cfg, trace=trace, stats=stats, window=window, **kw)
+    return trace, stats
+
+
+def _check_bitwise_resume(alg, fault_rate, window, tmp_path, **cfg_kw):
+    cfg = _cfg(**cfg_kw)
+    d = str(tmp_path / "snap")
+    tr_full, _ = _run(alg, cfg, fault_rate, window)
+    tr_ckpt, _ = _run(alg, cfg, fault_rate, window,
+                      checkpoint_path=d, checkpoint_every=20)
+    tr_res, st_res = _run(alg, cfg, fault_rate, window, resume_from=d)
+
+    # checkpointing run itself is bitwise-identical to the plain run
+    assert len(tr_ckpt) == len(tr_full)
+    for (ta, wa), (tf, wf) in zip(tr_ckpt, tr_full):
+        assert ta == tf
+        for x, y in zip(jax.tree.leaves(wa), jax.tree.leaves(wf)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"snapshotting perturbed "
+                                                  f"the run at t={ta}")
+
+    # resumed run lands on the uninterrupted final weights, bitwise
+    assert 0 < st_res["resumed_from_t"] < cfg.T
+    assert tr_res[-1][0] == tr_full[-1][0]
+    for x, y in zip(jax.tree.leaves(tr_res[-1][1]),
+                    jax.tree.leaves(tr_full[-1][1])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg="resumed weights differ")
+
+
+def test_resume_bitwise_fault_free(tmp_path):
+    _check_bitwise_resume("asofed", 0.0, 1, tmp_path)
+
+
+def test_resume_bitwise_under_faults(tmp_path):
+    _check_bitwise_resume("asofed", 0.15, 1, tmp_path,
+                          max_staleness=8.0, max_delta_norm=0.5)
+
+
+@pytest.mark.slow
+def test_resume_bitwise_megastep_window(tmp_path):
+    _check_bitwise_resume("fedasync", 0.15, 4, tmp_path,
+                          max_staleness=8.0, max_delta_norm=0.5)
+
+
+@pytest.mark.slow
+def test_resume_bitwise_bf16_state(tmp_path):
+    _check_bitwise_resume("fedbuff", 0.15, 1, tmp_path,
+                          state_dtype="bf16", max_delta_norm=0.5)
+
+
+# ---------------------------------------------------------------------------
+# fail-fast seams
+# ---------------------------------------------------------------------------
+
+
+def test_resume_strategy_mismatch_raises(tmp_path):
+    d = str(tmp_path / "snap")
+    _run("asofed", _cfg(), 0.0, 1, checkpoint_path=d, checkpoint_every=20)
+    with pytest.raises(ValueError, match="strategy"):
+        _run("fedasync", _cfg(), 0.0, 1, resume_from=d)
+
+
+def test_resume_seed_mismatch_raises(tmp_path):
+    d = str(tmp_path / "snap")
+    _run("asofed", _cfg(), 0.0, 1, checkpoint_path=d, checkpoint_every=20)
+    with pytest.raises(ValueError, match="seed"):
+        _run("asofed", _cfg(seed=1), 0.0, 1, resume_from=d)
+
+
+def test_checkpoint_requires_async_schedule(tmp_path):
+    with pytest.raises(ValueError, match="async"):
+        _run("fedavg", _cfg(), 0.0, 1, checkpoint_path=str(tmp_path / "s"))
+
+
+def test_half_written_snapshot_refuses_to_load(tmp_path):
+    # run.json is written last via atomic rename: a directory without it
+    # (crash mid-write) must never load as a valid snapshot
+    d = str(tmp_path / "snap")
+    save_run_state(d, {"w": np.zeros(3, np.float32)},
+                   {"s": np.ones(2, np.float32)}, {"t": 4})
+    os.remove(os.path.join(d, "run.json"))
+    with pytest.raises(FileNotFoundError, match="run.json"):
+        load_run_state(d, {"w": np.zeros(3, np.float32)},
+                       {"s": np.ones(2, np.float32)})
+
+
+def test_run_state_round_trip():
+    import tempfile
+
+    host = {"t": 7, "sim_time": 123.5, "strategy": "asofed"}
+    stacked = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    server = {"s": np.full((4,), 2.5, np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        save_run_state(d, stacked, server, host)
+        st2, sv2, h2 = load_run_state(d, stacked, server)
+    assert {k: h2[k] for k in host} == host
+    np.testing.assert_array_equal(np.asarray(st2["w"]), stacked["w"])
+    np.testing.assert_array_equal(np.asarray(sv2["s"]), server["s"])
+
+
+def test_snapshot_overwrite_is_crash_consistent(tmp_path):
+    # device payloads land under fresh step-tagged dirs; run.json flips
+    # atomically and names its dirs — so a crash midway through snapshot
+    # N+1 (half-written dirs, run.json never flipped) still loads N
+    d = str(tmp_path / "snap")
+    stacked = {"w": np.zeros(3, np.float32)}
+    server = {"s": np.ones(2, np.float32)}
+    save_run_state(d, stacked, server, {"t": 10})
+    os.makedirs(os.path.join(d, f"stacked-{20:012d}"))  # torn write of t=20
+    st, sv, host = load_run_state(d, stacked, server)
+    assert host["t"] == 10
+    np.testing.assert_array_equal(np.asarray(st["w"]), stacked["w"])
+    # a completed second snapshot garbage-collects the superseded dirs
+    save_run_state(d, {"w": np.full(3, 2.0, np.float32)}, server, {"t": 20})
+    names = set(os.listdir(d))
+    assert f"stacked-{10:012d}" not in names
+    assert f"server-{10:012d}" not in names
+    _, _, host = load_run_state(d, stacked, server)
+    assert host["t"] == 20
+
+
+def test_load_checkpoint_reports_readable_key_diff(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, {"alpha": np.zeros(2, np.float32),
+                        "beta": np.ones(3, np.float32)})
+    with pytest.raises(ValueError) as ei:
+        load_checkpoint(d, {"alpha": np.zeros(2, np.float32),
+                            "gamma": np.ones(3, np.float32)})
+    msg = str(ei.value)
+    assert "beta" in msg and "gamma" in msg
+    assert "not in target" in msg and "not in checkpoint" in msg
+
+
+def test_load_checkpoint_reports_key_order_mismatch(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, {"alpha": np.zeros(2, np.float32),
+                        "beta": np.ones(3, np.float32)})
+    mpath = os.path.join(d, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["keys"] = list(reversed(manifest["keys"]))
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="different order"):
+        load_checkpoint(d, {"alpha": np.zeros(2, np.float32),
+                            "beta": np.ones(3, np.float32)})
+
+
+def test_load_checkpoint_detects_truncated_npz(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, {"alpha": np.zeros(2, np.float32),
+                        "beta": np.ones(3, np.float32)})
+    np.savez(os.path.join(d, "params.npz"), arr_0=np.zeros(2, np.float32))
+    with pytest.raises(ValueError, match="corrupt checkpoint"):
+        load_checkpoint(d, {"alpha": np.zeros(2, np.float32),
+                            "beta": np.ones(3, np.float32)})
+
+
+def test_checkpoint_round_trips_bf16_bitwise(tmp_path):
+    # .npy stores ml_dtypes bfloat16 as raw void bytes; the manifest's
+    # recorded dtype views the bits back exactly
+    import ml_dtypes
+
+    d = str(tmp_path / "ck")
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.normal(size=(4, 3)).astype(ml_dtypes.bfloat16),
+            "b": rng.normal(size=(3,)).astype(np.float32)}
+    save_checkpoint(d, tree, step=3)
+    out, step = load_checkpoint(d, tree)
+    assert step == 3
+    for k in tree:
+        a, b = np.asarray(out[k]), tree[k]
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a.view(np.uint16) if k == "w" else a,
+                                      b.view(np.uint16) if k == "w" else b)

@@ -1,0 +1,285 @@
+"""Chaos-layer tests: deterministic fault injection and graceful degradation.
+
+Three layers of pins:
+
+(1) **Fault-free bitwise replay.**  The fault pipeline sits inside the
+    scheduler's pop path, so the no-fault arrival stream must be
+    *bit-identical* to the pre-chaos engine — pinned here against golden
+    sha256 digests of three stream shapes (plain async, traced+metered
+    async, sync rounds).  Attaching an all-zero ``FaultSpec`` must also be
+    invisible: fault draws are rng-free splitmix64 hashes, never draws
+    from the scheduler's generator.
+
+(2) **Faulty-stream invariants.**  Under active faults the stream stays a
+    pure function of (seed, fault seed, client list): identical across
+    tick chunk sizes, identical through speculative peek/commit, and the
+    chaos counters (lost/retried/crashed/duplicated/corrupted) agree
+    between direct and speculative drains.
+
+(3) **Engine == per-arrival oracle.**  The jitted cohort tick's fault
+    handling (fresh-state reset after a crash, double-fold of duplicated
+    arrivals, wire corruption after the upload codec, non-finite /
+    delta-norm guards, staleness admission reject & downweight) must
+    reproduce the per-arrival reference loop for every strategy and fault
+    kind, within fp32 reassociation tolerance.
+"""
+import dataclasses
+import functools
+import hashlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.sim.faults import FaultSpec, with_faults
+from repro.sim.profiles import DeviceProfile, SimClient
+from repro.sim.scheduler import AsyncScheduler, SyncScheduler
+from repro.sim.streaming import OnlineStream
+from repro.sim.traces import scenario_traces, with_traces
+
+# golden stream digests: minted from the pre-chaos scheduler, so they pin
+# "the fault pipeline changed nothing when no faults are configured"
+GOLD_PLAIN = "fac2ffb34431ad317daa7ba44b3df78a577a85e04e3b1a02500f67f8ca866da6"
+GOLD_TRACED = "fc17989601ec3a24b6366fe365d03ecb865ce25677afefd7032c6acecf4879ba"
+GOLD_SYNC = "50251c03c76419b23e93806c178fcf6f114d71ca9b11d73595ff5348d54bfe5a"
+
+
+def _make_clients(n, seed, bandwidth=False):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        x = rng.normal(size=(10, 3)).astype(np.float32)
+        y = rng.normal(size=(10,)).astype(np.float32)
+        out.append(SimClient(
+            cid=i, stream=OnlineStream(x, y, seed=seed + i),
+            test_x=x[:2], test_y=y[:2],
+            profile=DeviceProfile(
+                base_delay=float(rng.uniform(5.0, 50.0)),
+                bandwidth_bytes_per_s=(float(rng.uniform(2e3, 2e4))
+                                       if bandwidth else None),
+            ),
+        ))
+    return out
+
+
+def _digest(arrivals):
+    h = hashlib.sha256()
+    for a in arrivals:
+        h.update(np.float64(a.time).tobytes())
+        h.update(np.int64(a.cid).tobytes())
+        h.update(np.float64(a.delay).tobytes())
+    return h.hexdigest()
+
+
+def _drain(sched, chunk, n=200):
+    stream = []
+    while len(stream) < n:
+        tick = sched.next_tick(chunk)
+        if not tick:
+            break
+        stream.extend(tick)
+    return stream[:n]
+
+
+def _plain_sched(clients):
+    return AsyncScheduler(clients, seed=7, dropout_frac=0.2, skip_prob=0.15,
+                          init_work=8, round_work=16)
+
+
+# ---------------------------------------------------------------------------
+# (1) fault-free bitwise replay
+# ---------------------------------------------------------------------------
+
+
+def test_fault_free_plain_stream_matches_golden():
+    stream = _drain(_plain_sched(_make_clients(6, seed=123)), 4)
+    assert _digest(stream) == GOLD_PLAIN
+
+
+def test_fault_free_traced_metered_stream_matches_golden():
+    clients = with_traces(
+        _make_clients(5, seed=99, bandwidth=True),
+        scenario_traces("bursty", 5, seed=11, period=200.0, width=50.0,
+                        frac=0.4))
+    s = AsyncScheduler(clients, seed=3, dropout_frac=0.0, skip_prob=0.3,
+                       init_work=8, round_work=16, sim_time_budget=900.0,
+                       upload_bytes=2.5e4)
+    stream = _drain(s, 3)
+    assert _digest(stream) == GOLD_TRACED
+    assert (s.deferred, s.retired) == (10, 0)
+
+
+def test_fault_free_sync_rounds_match_golden():
+    ss = SyncScheduler(_make_clients(6, seed=5), seed=2, participation=0.5,
+                       skip_prob=0.2, round_work=16)
+    h = hashlib.sha256()
+    now = 0.0
+    for _ in range(30):
+        sel, dt = ss.next_round(now)
+        now += dt
+        h.update(np.asarray([c.cid for c in sel], np.int64).tobytes())
+        h.update(np.float64(dt).tobytes())
+    assert h.hexdigest() == GOLD_SYNC
+
+
+def test_all_zero_fault_spec_is_bitwise_invisible():
+    # an attached-but-inactive spec must not perturb the stream: fault
+    # decisions are splitmix64 hashes of (fault seed, cid, stamp bits),
+    # never draws against the scheduler rng
+    clients = with_faults(_make_clients(6, seed=123), [FaultSpec(seed=9)] * 6)
+    assert _digest(_drain(_plain_sched(clients), 4)) == GOLD_PLAIN
+
+
+# ---------------------------------------------------------------------------
+# (2) faulty-stream invariants
+# ---------------------------------------------------------------------------
+
+
+def _faulty_clients():
+    clients = _make_clients(6, seed=123)
+    return with_faults(clients, [FaultSpec.uniform(0.15, seed=42)] * 6)
+
+
+def _counters(s):
+    return (s.lost, s.retried, s.crashed, s.duplicated, s.corrupted)
+
+
+def test_faulty_stream_chunk_invariant_with_live_counters():
+    def drain(chunk):
+        s = _plain_sched(_faulty_clients())
+        return _drain(s, chunk), _counters(s)
+
+    base, ctr = drain(1)
+    for chunk in (3, 6, 8):
+        stream, _ = drain(chunk)
+        assert stream == base, f"chunk {chunk} diverged under faults"
+    # every fault kind actually fired at 15% per-channel rates
+    assert ctr[1] > 0 and ctr[2] > 0 and ctr[3] > 0 and ctr[4] > 0, ctr
+    assert any(a.dup for a in base)
+    assert any(a.corrupt for a in base)
+    assert any(a.fresh for a in base)
+
+
+def test_faulty_speculative_drain_matches_direct():
+    sp = _plain_sched(_faulty_clients())
+    stream_p = []
+    while len(stream_p) < 200:
+        window = sp.peek_window(2, 3)
+        sp.commit()
+        if not window:
+            break
+        stream_p.extend(a for tick in window for a in tick)
+    sd = _plain_sched(_faulty_clients())
+    assert stream_p[:200] == _drain(sd, 3)
+    # speculation must not double- or under-count chaos events
+    assert _counters(sp) == _counters(sd)
+
+
+def test_sync_scheduler_applies_faults():
+    clients = with_faults(_make_clients(6, seed=5),
+                          [FaultSpec.uniform(0.2, seed=1)] * 6)
+    ss = SyncScheduler(clients, seed=2, participation=0.8, skip_prob=0.0,
+                       round_work=16)
+    now = 0.0
+    for _ in range(40):
+        sel, dt = ss.next_round(now)
+        now += dt if np.isfinite(dt) else 1.0
+    assert ss.lost + ss.crashed > 0
+
+
+# ---------------------------------------------------------------------------
+# (3) engine == per-arrival oracle under faults
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def _engine_setup():
+    from repro.configs import get_arch
+    from repro.data import airquality_like
+    from repro.models import LOCAL, build_model
+
+    data = airquality_like(n_clients=5, n_per=60)
+    cfg_model = dataclasses.replace(get_arch("paper-lstm"), in_features=8,
+                                    out_features=1, hidden=12)
+    return data, cfg_model, build_model(cfg_model, LOCAL)
+
+
+def _base_cfg(**kw):
+    from repro.core import RunConfig
+
+    return RunConfig(T=60, batch_size=8, local_epochs=2, eta=0.02, lam=1.0,
+                     beta=0.001, task="regression", eval_every=30, seed=0,
+                     **kw)
+
+
+_GUARDS = dict(max_staleness=8.0, max_delta_norm=0.5)
+_MIXED = FaultSpec.uniform(0.15, seed=42, corrupt_kind="nan")
+
+
+def _compare_engine_to_oracle(alg, cfg, spec, fold_mode=None,
+                              atol=3e-4, rtol=3e-3):
+    from repro.core.algorithms import get_strategy
+    from repro.sim.engine import run_strategy
+    from repro.sim.profiles import make_sim_clients
+    from repro.sim.reference import (run_asofed_reference,
+                                     run_fedasync_reference,
+                                     run_fedbuff_reference)
+
+    data, cfg_model, model = _engine_setup()
+    refs = {"asofed": run_asofed_reference,
+            "fedasync": run_fedasync_reference,
+            "fedbuff": run_fedbuff_reference}
+
+    def clients():
+        cs = make_sim_clients(data, seed=0)
+        return with_faults(cs, [spec] * len(cs))
+
+    ref = refs[alg](model, cfg_model, clients(), cfg)
+    if fold_mode:
+        cfg = dataclasses.replace(cfg, fold_mode=fold_mode)
+    trace = []
+    run_strategy(get_strategy(alg), model, cfg_model, clients(), cfg,
+                 trace=trace)
+    assert trace, "engine produced no ticks"
+    for t, w in trace:
+        assert t in ref, f"{alg}: tick boundary t={t} not in oracle"
+        for a, b in zip(jax.tree.leaves(w), jax.tree.leaves(ref[t])):
+            np.testing.assert_allclose(a, b, atol=atol, rtol=rtol,
+                                       err_msg=f"{alg} diverges at t={t}")
+
+
+@pytest.mark.parametrize("alg", ["asofed", "fedasync", "fedbuff"])
+def test_engine_matches_oracle_under_mixed_faults(alg):
+    _compare_engine_to_oracle(alg, _base_cfg(**_GUARDS), _MIXED)
+
+
+def test_engine_matches_oracle_associative_fold_under_faults():
+    # the affine fold composes guard masks and duplicate double-folds
+    # algebraically (a' = a², b' = a·b + b); it must agree with the oracle
+    _compare_engine_to_oracle("fedasync", _base_cfg(**_GUARDS), _MIXED,
+                              fold_mode="associative")
+
+
+def test_engine_matches_oracle_downweight_policy():
+    cfg = _base_cfg(max_staleness=6.0, staleness_policy="downweight")
+    _compare_engine_to_oracle("fedasync", cfg, _MIXED)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind,spec", [
+    ("loss", FaultSpec(seed=42, p_loss=0.3)),
+    ("duplicate", FaultSpec(seed=42, p_duplicate=0.3)),
+    ("corrupt-nan", FaultSpec(seed=42, p_corrupt=0.3, corrupt_kind="nan")),
+    ("corrupt-noise", FaultSpec(seed=42, p_corrupt=0.3,
+                                corrupt_kind="noise")),
+    ("crash", FaultSpec(seed=42, p_crash=0.3)),
+])
+def test_engine_matches_oracle_per_fault_kind(kind, spec):
+    _compare_engine_to_oracle("asofed", _base_cfg(**_GUARDS), spec)
+
+
+@pytest.mark.slow
+def test_engine_matches_oracle_asofed_associative_under_faults():
+    cfg = _base_cfg(feature_learning=False, **_GUARDS)
+    _compare_engine_to_oracle("asofed", cfg, _MIXED,
+                              fold_mode="associative")

@@ -26,6 +26,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.sim.faults import FaultSpec, with_faults
 from repro.sim.profiles import DeviceProfile, SimClient
 from repro.sim.scheduler import AsyncScheduler
 from repro.sim.streaming import OnlineStream
@@ -79,11 +80,21 @@ def _case(i: int):
     # must preserve chunk-invariance and peek/commit bit-identity
     metered = rng.uniform() < 0.4
     upload_bytes = float(rng.uniform(1e3, 5e4)) if metered else 0.0
+    # chaos cases (drawn after the metered draws, same append-only rule):
+    # fault decisions are rng-free hashes resolved at pop time, so a
+    # fault-injected stream must satisfy every invariant below unchanged —
+    # chunk invariance, peek/commit bit-identity, monotone on-window times
+    faulty = rng.uniform() < 0.5
+    fault_rate = float(rng.uniform(0.05, 0.25)) if faulty else 0.0
+    fault_seed = int(rng.integers(0, 2**31 - 1))
     clients = _make_clients(n, seed=seed % 10_000, bandwidth=metered)
     if scenario is not None:
         traces = scenario_traces(scenario, n, seed=seed % 997,
                                  **_SCENARIO_KW[scenario])
         clients = with_traces(clients, traces)
+    if fault_rate:
+        clients = with_faults(
+            clients, [FaultSpec.uniform(fault_rate, seed=fault_seed)] * n)
     return clients, dict(seed=seed, dropout_frac=dropout, skip_prob=skip,
                          init_work=8, round_work=16, sim_time_budget=budget,
                          upload_bytes=upload_bytes)
@@ -184,6 +195,54 @@ def test_scheduler_contract_randomized(i):
 @pytest.mark.parametrize("i", range(N_TIER1, N_SLOW))
 def test_scheduler_contract_randomized_extended(i):
     _check_case(i)
+
+
+def _ledger(s: AsyncScheduler):
+    """Full mutable-state snapshot: rng, heap, churn + chaos counters,
+    crashed set.  Heap entries are immutable tuples, so a shallow list
+    copy pins the content."""
+    import copy
+
+    return (copy.deepcopy(s.rng.bit_generator.state), list(s._heap),
+            s.deferred, s.retired, s.lost, s.retried, s.crashed,
+            s.duplicated, s.corrupted, frozenset(s._crashed))
+
+
+def test_fault_counter_rollback_audit():
+    """Discarded speculation must leave the whole chaos ledger — every
+    counter, the crashed set, the heap (including in-flight retry
+    entries), and the rng — bit-identical; committed speculation must
+    count each fault exactly once (same totals as a direct drain)."""
+    clients = with_faults(_make_clients(6, seed=123),
+                          [FaultSpec.uniform(0.2, seed=5)] * 6)
+    kw = dict(seed=7, dropout_frac=0.2, skip_prob=0.15,
+              init_work=8, round_work=16, sim_time_budget=None,
+              upload_bytes=0.0)
+    shapes = np.random.default_rng(99)
+
+    spec_s, direct = _sched(clients, kw), _sched(clients, kw)
+    stream_spec, stream_direct = [], []
+    # fixed tick counts on both sides so the chaos totals are comparable:
+    # 30 committed windows of 2 ticks == 60 direct ticks, same chunk
+    for _ in range(30):
+        # a burst of discarded speculation of random shapes...
+        before = _ledger(spec_s)
+        for _ in range(int(shapes.integers(1, 4))):
+            spec_s.peek_window(int(shapes.integers(1, 4)),
+                               int(shapes.integers(1, 5)))
+        assert _ledger(spec_s) == before, "discarded peek mutated the ledger"
+        # ...then one committed window of the canonical shape
+        window = spec_s.peek_window(2, 3)
+        spec_s.commit()
+        stream_spec.extend(a for tick in window for a in tick)
+    for _ in range(60):
+        stream_direct.extend(direct.next_tick(3))
+    assert stream_spec == stream_direct
+    assert (spec_s.lost, spec_s.retried, spec_s.crashed, spec_s.duplicated,
+            spec_s.corrupted) == (direct.lost, direct.retried, direct.crashed,
+                                  direct.duplicated, direct.corrupted)
+    assert spec_s._crashed == direct._crashed
+    assert spec_s.retried > 0 and spec_s.crashed > 0
 
 
 # ---------------------------------------------------------------------------
