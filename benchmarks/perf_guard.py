@@ -28,6 +28,17 @@ non-finite metric (NaN/Inf) in the committed or rerun records — a
 diverged run or a fault guard that failed open must go red even when
 every throughput floor holds.
 
+**Memory is guarded like throughput**: every guarded record's committed
+``stacked_state_bytes`` / ``host_pool_bytes`` /
+``peak_live_device_bytes`` is a first-class ceiling — a rerun exceeding
+it by more than ``--mem-tolerance`` fails exit 1 with the same per-key
+reporting as an iters/s floor, so a change that silently re-inflates the
+stacked state (or re-materializes the fleet on device under host
+residency) goes red even when throughput holds.  ``kind=k_sweep``
+records (the out-of-core fleet-size sweep, one per (workload, clients,
+state_residency, state_dtype)) are guarded on the memory ceilings only:
+their throughput measures a stub-padded short run, not the engine.
+
 ``kind=fault_matrix`` records (the fault-injection axis) are never
 guardable: a fault-injected run's throughput measures the chaos config,
 not the engine — but their metrics still ride the non-finite scan, which
@@ -53,8 +64,15 @@ from benchmarks.sim_bench import OUT_PATH, bench_sim
 # records with this (mode, scenario) shape are guardable
 _GUARDED = ("cohort", "always_on")
 
+# committed memory columns are ceilings, not floors: a rerun exceeding
+# any of them beyond --mem-tolerance is a regression (0 / absent
+# baseline values guard nothing — e.g. host_pool_bytes on a
+# device-residency record)
+_MEM_COLS = ("stacked_state_bytes", "host_pool_bytes",
+             "peak_live_device_bytes")
 
-Key = Tuple[str, int, str, str, str]
+
+Key = Tuple[str, int, str, str, str, str, str]
 
 
 def _key(rec: dict) -> Key:
@@ -68,10 +86,14 @@ def _key(rec: dict) -> Key:
     # splits identity and compressed rows likewise: the compressed tick
     # pays an in-tick encode, so identity and e.g. topk_sparse runs of
     # one cohort (and the kind=upload_frontier rows, one per codec) each
-    # hold their own floor
+    # hold their own floor.  `state_residency` / `state_dtype` split the
+    # kind=k_sweep memory records: each (device/host, fp32/bf16/int8/
+    # int4) row at one fleet size holds its own memory ceilings
     return (rec.get("workload", "lstm_regression"), rec.get("clients", 0),
             rec.get("kind", "sweep"), rec.get("fold_mode", "sequential"),
-            rec.get("upload_codec", "identity"))
+            rec.get("upload_codec", "identity"),
+            rec.get("state_residency", "device"),
+            str(rec.get("state_dtype") or "fp32"))
 
 
 def _guardable(payload: dict, window: int
@@ -96,7 +118,11 @@ def _guardable(payload: dict, window: int
         candidates += 1
         if rec.get("window") not in (None, window):
             continue
-        if rec.get("state_dtype") not in (None, "fp32"):
+        # non-fp32 state is incomparable for throughput floors — except
+        # the kind=k_sweep rows, whose reduced-dtype variants are exactly
+        # the memory records the guard exists to hold
+        if rec.get("kind") != "k_sweep" \
+                and rec.get("state_dtype") not in (None, "fp32"):
             continue
         if not rec.get("iters_per_s"):
             continue
@@ -138,6 +164,14 @@ def main() -> None:
     ap.add_argument("--workload-tolerance", type=float, default=0.5,
                     help="tolerance for the per-workload small-cohort "
                          "records (shorter runs, noisier timing)")
+    ap.add_argument("--mem-tolerance", type=float, default=0.25,
+                    help="allowed fractional growth of any committed "
+                         "memory column (stacked_state_bytes / "
+                         "host_pool_bytes / peak_live_device_bytes) "
+                         "before the rerun counts as a regression")
+    ap.add_argument("--ksweep-count", type=int, default=10_000,
+                    help="registered-fleet size of the guarded K-sweep "
+                         "memory records (0 skips the k_sweep leg)")
     ap.add_argument("--window", type=int, default=32)
     args = ap.parse_args()
 
@@ -164,9 +198,10 @@ def main() -> None:
         print("perf_guard: no checked-in comparable cohort records to "
               "guard against; running the sweep to mint them", flush=True)
     else:
-        for (wl, K, kind, fm, uc), rec in sorted(baseline.items()):
-            print(f"perf_guard: baseline {wl}@{K} clients [{kind}/{fm}/{uc}]"
-                  f" = {rec['iters_per_s']} iters/s", flush=True)
+        for (wl, K, kind, fm, uc, res, dt), rec in sorted(baseline.items()):
+            print(f"perf_guard: baseline {wl}@{K} clients "
+                  f"[{kind}/{fm}/{uc}/{res}/{dt}] = "
+                  f"{rec['iters_per_s']} iters/s", flush=True)
 
     # only the guarded slices: one sweep client count, no K=1024 memory
     # pair, a token per-arrival budget (the guard never reads that
@@ -178,45 +213,64 @@ def main() -> None:
               window=args.window, mem_cohort=0,
               workload_smoke=True,
               fold_cohorts=(args.clients,),
-              frontier_cohort=16)  # overwrites BENCH_sim.json
+              frontier_cohort=16,
+              ksweep_counts=((args.ksweep_count,) if args.ksweep_count
+                             else ()))  # overwrites BENCH_sim.json
 
     with open(OUT_PATH) as f:
         rerun = json.load(f)
     _fail_on_non_finite(rerun, "rerun")
     fresh, _ = _guardable(rerun, args.window)
     main_key = ("lstm_regression", args.clients, "sweep", "sequential",
-                "identity")
+                "identity", "device", "fp32")
     if main_key not in fresh:
         print("perf_guard: rerun produced no comparable main record",
               file=sys.stderr)
         sys.exit(2)
     if not baseline:
-        summary = {f"{w}@{k}[{kind}/{fm}/{uc}]": r["iters_per_s"]
-                   for (w, k, kind, fm, uc), r in sorted(fresh.items())}
+        summary = {f"{w}@{k}[{kind}/{fm}/{uc}/{res}/{dt}]": r["iters_per_s"]
+                   for (w, k, kind, fm, uc, res, dt), r
+                   in sorted(fresh.items())}
         print(f"perf_guard: fresh records {summary} (no baseline to "
               "compare — commit BENCH_sim.json to arm the guard)")
         sys.exit(0)
 
     failed = False
     for key, base_rec in sorted(baseline.items()):
-        wl, K, kind, fm, uc = key
+        wl, K, kind, fm, uc, res, dt = key
+        tag = f"{wl}@{K} [{kind}/{fm}/{uc}/{res}/{dt}]"
         fresh_rec: Optional[dict] = fresh.get(key)
         if fresh_rec is None:
             # a workload removed from the registry (or a different
-            # --clients) simply stops being guarded; the committed file
-            # gets refreshed by the same nightly run
-            print(f"perf_guard: {wl}@{K} [{kind}/{fm}/{uc}]: no rerun "
-                  "record — skipped")
+            # --clients / --ksweep-count) simply stops being guarded; the
+            # committed file gets refreshed by the same nightly run
+            print(f"perf_guard: {tag}: no rerun record — skipped")
             continue
-        tol = (args.tolerance if key == main_key
-               else args.workload_tolerance)
-        base_ips, new_ips = base_rec["iters_per_s"], fresh_rec["iters_per_s"]
-        floor = (1.0 - tol) * base_ips
-        verdict = "OK" if new_ips >= floor else "REGRESSION"
-        print(f"perf_guard: {verdict} — {wl}@{K} [{kind}/{fm}/{uc}]: rerun "
-              f"{new_ips} iters/s vs baseline {base_ips} "
-              f"(floor {floor:.2f} at {tol:.0%})")
-        failed = failed or new_ips < floor
+        if kind != "k_sweep":
+            # throughput floor (k_sweep rows are stub-padded short runs:
+            # their iters/s measures the fleet build, not the engine)
+            tol = (args.tolerance if key == main_key
+                   else args.workload_tolerance)
+            base_ips = base_rec["iters_per_s"]
+            new_ips = fresh_rec["iters_per_s"]
+            floor = (1.0 - tol) * base_ips
+            verdict = "OK" if new_ips >= floor else "REGRESSION"
+            print(f"perf_guard: {verdict} — {tag}: rerun "
+                  f"{new_ips} iters/s vs baseline {base_ips} "
+                  f"(floor {floor:.2f} at {tol:.0%})")
+            failed = failed or new_ips < floor
+        # memory ceilings: committed bytes may not silently grow
+        for col in _MEM_COLS:
+            base_b = base_rec.get(col)
+            new_b = fresh_rec.get(col)
+            if not base_b or new_b is None:
+                continue  # column absent or zero in the baseline
+            ceil = (1.0 + args.mem_tolerance) * base_b
+            verdict = "OK" if new_b <= ceil else "REGRESSION"
+            print(f"perf_guard: {verdict} — {tag}: rerun {col}={new_b} "
+                  f"vs baseline {base_b} (ceiling {ceil:.0f} at "
+                  f"+{args.mem_tolerance:.0%})")
+            failed = failed or new_b > ceil
     if failed:
         sys.exit(1)
 

@@ -48,6 +48,20 @@ def main() -> None:
                          "(fp32 = full-copy master, bf16 = delta-"
                          "compressed); unknown names fail fast with the "
                          "accepted list")
+    ap.add_argument("--state-residency", default="device",
+                    help="with --smoke: where the stacked client state "
+                         "lives in the sweep modes (device = resident; "
+                         "host = out-of-core pool with per-window "
+                         "active-cohort gather/scatter); unknown names "
+                         "fail fast")
+    ap.add_argument("--ksweep-counts", default="10000,100000",
+                    help="with --smoke: comma-separated registered-fleet "
+                         "sizes for the K-sweep memory records "
+                         "(kind=k_sweep; 'none' or '' disables)")
+    ap.add_argument("--ksweep-cohort", type=int, default=64,
+                    help="with --smoke: active (non-stub) clients in each "
+                         "K-sweep run — device memory under host "
+                         "residency is bounded by this, not K")
     ap.add_argument("--workload", default="lstm_regression",
                     help="with --smoke: registered repro.sim.workloads "
                          "name the sweep runs (validated against the "
@@ -109,6 +123,8 @@ def main() -> None:
                         if args.fold_cohorts not in ("", "none") else ())
         fault_rates = (tuple(float(x) for x in args.faults.split(","))
                        if args.faults else ())
+        ksweep_counts = (tuple(int(k) for k in args.ksweep_counts.split(","))
+                         if args.ksweep_counts not in ("", "none") else ())
         for r in bench_sim(scenario=args.scenario, window=args.window,
                            state_dtype=args.state_dtype,
                            mem_cohort=args.mem_cohort,
@@ -118,7 +134,10 @@ def main() -> None:
                            fold_cohorts=fold_cohorts,
                            upload_codec=args.upload_codec,
                            frontier_cohort=args.frontier_cohort,
-                           fault_rates=fault_rates):
+                           fault_rates=fault_rates,
+                           state_residency=args.state_residency,
+                           ksweep_counts=ksweep_counts,
+                           ksweep_cohort=args.ksweep_cohort):
             rows.append(r)
             print(_fmt(*r), flush=True)
         if args.smoke:  # smoke mode runs only the sim sweep

@@ -55,7 +55,7 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
 
 
 def validate_bench_args(workload=None, state_dtype=None, scenario=None,
-                        upload_codec=None):
+                        upload_codec=None, state_residency=None):
     """Fail fast on typo'd names with the registry's known lists —
     *before* the sweep burns minutes of JIT + bench time.  Choices come
     from the workload registry / dtype table / scenario dispatcher /
@@ -68,6 +68,11 @@ def validate_bench_args(workload=None, state_dtype=None, scenario=None,
     if workload is not None:
         get_workload(workload)  # KeyError lists registered workloads
     resolve_state_dtype(state_dtype)  # ValueError lists accepted dtypes
+    if state_residency is not None \
+            and state_residency not in ("device", "host"):
+        raise ValueError(
+            f"unknown state_residency {state_residency!r}; accepted: "
+            "'device' | 'host'")
     if scenario and scenario != "always_on":
         scenario_traces(scenario, 0, seed=0)  # ValueError lists scenarios
     if upload_codec is not None:
@@ -138,7 +143,9 @@ def _run(model, cfg_model, clients, cfg, mode: str,
 
 
 _STAT_COLS = ("host_build_s", "device_s", "eval_s", "prefetch", "devices",
-              "window", "windows", "state_dtype", "stacked_state_bytes",
+              "window", "windows", "state_dtype", "state_residency",
+              "stacked_state_bytes", "host_pool_bytes", "gathered_rows",
+              "scattered_rows", "gather_s", "scatter_s",
               "peak_live_device_bytes", "tick_cache_size", "staleness_mean",
               "staleness_max", "availability_utilization",
               "deferred_arrivals", "retired_clients", "train_loss_final",
@@ -182,7 +189,10 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
               fold_cohorts=(256, 1024),
               upload_codec: str = "identity",
               frontier_cohort: int = 16,
-              fault_rates=()) -> List[Tuple[str, float, str]]:
+              fault_rates=(),
+              state_residency: str = "device",
+              ksweep_counts=(10_000, 100_000),
+              ksweep_cohort: int = 64) -> List[Tuple[str, float, str]]:
     """Smoke sweep: pipelined/serialized/unfused engine vs per-arrival.
 
     ``scenario`` (``diurnal`` / ``bursty`` / ``churn`` / ``flash`` /
@@ -218,6 +228,22 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
     degraded ``final_metric`` per rate (kind=``fault_matrix``; rate 0.0
     is the clean baseline the degradation is measured against).
 
+    ``state_residency`` threads ``RunConfig.state_residency`` into the
+    sweep configs (``host`` runs the out-of-core pooled-state path).
+    ``ksweep_counts`` (empty disables) runs the **K-sweep**: at each
+    registered-fleet size K, ``ksweep_cohort`` real clients do all the
+    arriving while the remaining K − cohort rows are permanently-dropped
+    stubs that hold client-state rows without ever entering the
+    scheduler — compute stays fixed while state size sweeps orders of
+    magnitude.  Each K runs device-resident fp32 plus host-resident
+    fp32/bf16/int8/int4 (kind=``k_sweep``), recording
+    ``stacked_state_bytes`` (live device client-state bytes: the full
+    stack under device residency, the largest dispatched cohort block
+    under host), ``host_pool_bytes``, ``peak_live_device_bytes``, and
+    the ``gather_s``/``scatter_s`` host↔device traffic columns.  Eval is
+    disabled (``eval_every=0``) so no ``[K, n_max]`` test tensor blurs
+    the peak-device-memory column.
+
     ``upload_codec`` threads ``RunConfig.upload_codec`` into the sweep
     and churn configs (per-codec perf floors — compressed ticks pay the
     in-tick encode).  ``frontier_cohort`` (0 disables) runs the
@@ -232,7 +258,8 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
     # fail fast on typo'd workload/scenario/dtype names — before the
     # always-on sweep burns minutes of JIT + bench time
     validate_bench_args(workload=workload, state_dtype=state_dtype,
-                        scenario=scenario, upload_codec=upload_codec)
+                        scenario=scenario, upload_codec=upload_codec,
+                        state_residency=state_residency)
     if fold_mode not in ("sequential", "associative", "auto"):
         raise ValueError(f"unknown fold_mode {fold_mode!r}; accepted: "
                          "'sequential' | 'associative' | 'auto'")
@@ -254,6 +281,7 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
             T=iters_per_client * K, batch_size=8, local_epochs=2, eta=0.02,
             lam=1.0, beta=0.001, eval_every=50, seed=0,
             window=window, state_dtype=state_dtype,
+            state_residency=state_residency,
             upload_codec=upload_codec, **fold_kw,
         )
         per_mode = {}
@@ -504,6 +532,58 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                 f"{rec.get('clipped_uploads')};final="
                 f"{rec.get('final_metric')}",
             ))
+    ksweep_at = {}
+    if ksweep_counts:
+        from repro.sim.profiles import make_sim_clients
+
+        # K-sweep: registered-fleet size vs memory.  `ksweep_cohort` real
+        # clients do all the arriving; the other K − cohort rows are
+        # permanently-dropped stubs sharing one tiny dataset — they hold
+        # client-state rows (the pool / stacked axis covers all K)
+        # without ever entering the scheduler, so compute cost stays
+        # fixed while state size sweeps orders of magnitude.
+        wl, cfg_model, model, _ = _build(ksweep_cohort, workload)
+        kdata = wl.make_data(ksweep_cohort)
+        xtr, ytr, xte, yte = kdata[0]
+        stub = (xtr[:2], ytr[:2], xte[:1], yte[:1])
+
+        def mk_fleet(K):
+            fleet = make_sim_clients(kdata + [stub] * (K - ksweep_cohort),
+                                     seed=0)
+            for c in fleet[ksweep_cohort:]:
+                c.dropped = True
+            return fleet
+
+        kcfg = wl.run_config(
+            T=4 * ksweep_cohort, batch_size=8, local_epochs=2, eta=0.02,
+            lam=1.0, beta=0.001, eval_every=0, seed=0, window=window,
+            **fold_kw)
+        for K in ksweep_counts:
+            per = {}
+            for res, dt in (("device", None), ("host", None),
+                            ("host", "bf16"), ("host", "int8"),
+                            ("host", "int4")):
+                cfg = dataclasses.replace(kcfg, state_residency=res,
+                                          state_dtype=dt)
+                s = _run(model, cfg_model, mk_fleet(K), cfg, "cohort")
+                rec = _record(K, "cohort", "always_on", s,
+                              workload=workload, fold_mode=fold_mode)
+                # k_sweep rows have their own run shape (stub-padded
+                # fleet, eval off): the kind column keeps the perf guard
+                # from comparing them against sweep rows
+                rec["kind"] = "k_sweep"
+                records.append(rec)
+                label = f"{res}_{dt or 'fp32'}"
+                per[label] = rec
+                rows.append((
+                    f"sim/ksweep/{K}clients/{label}",
+                    s["wall_time_s"] / max(s["iters"], 1) * 1e6,
+                    f"stacked_state_bytes={rec.get('stacked_state_bytes')};"
+                    f"host_pool_bytes={rec.get('host_pool_bytes')};"
+                    f"peak_live={rec.get('peak_live_device_bytes')};"
+                    f"iters_per_s={rec['iters_per_s']}",
+                ))
+            ksweep_at[K] = per
     payload = {
         "benchmark": "cohort simulation engine throughput (asofed)",
         "metric": ("iters = global iterations (client arrivals folded); "
@@ -579,7 +659,25 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
                    "refused (non-finite delta or staleness over bound); "
                    "clipped_uploads = admitted deltas norm-clipped.  "
                    "rate 0.0 is the clean baseline the degraded "
-                   "final_metric is measured against."),
+                   "final_metric is measured against.  Out-of-core "
+                   "columns: state_residency = RunConfig.state_residency "
+                   "(device = the stacked state lives on the accelerator; "
+                   "host = the codec-encoded pool lives in host RAM and "
+                   "each window gathers only its active-cohort rows); "
+                   "stacked_state_bytes = live device client-state bytes "
+                   "(the full [K+1] stack under device residency, the "
+                   "largest dispatched cohort block under host); "
+                   "host_pool_bytes = the host pool's storage arrays "
+                   "(int4 counts its nibble-packed size); gathered/"
+                   "scattered_rows and gather_s/scatter_s = host<->device "
+                   "row traffic and wall time (gather_s includes the "
+                   "consumer-side dirty-row patches).  kind=k_sweep "
+                   "records sweep the registered fleet size K with a "
+                   "fixed active cohort (stub clients are registered but "
+                   "permanently dropped) and eval disabled: under host "
+                   "residency peak_live_device_bytes stays bounded by "
+                   "the cohort block while host_pool_bytes scales with "
+                   "K x codec width."),
         "records": records,
         "sweep_workload": workload,
         "sweep_fold_mode": fold_mode,
@@ -627,6 +725,36 @@ def bench_sim(counts=(8, 64, 256), iters_per_client: int = 4,
             }
             for rate, rec in fault_at.items()
         }
+    if ksweep_at:
+        # per-(K, residency/dtype) memory + traffic summary, and the
+        # pool-vs-bf16 compression ratios at the largest K (int8 = 0.5x
+        # exactly; int4 nibble-packed = 0.25x — the "~4x smaller than
+        # bf16" tentpole row)
+        payload["k_sweep_cohort"] = ksweep_cohort
+        payload["k_sweep"] = {
+            str(K): {
+                label: {
+                    "stacked_state_bytes": r.get("stacked_state_bytes"),
+                    "host_pool_bytes": r.get("host_pool_bytes"),
+                    "peak_live_device_bytes":
+                        r.get("peak_live_device_bytes"),
+                    "gather_s": r.get("gather_s"),
+                    "scatter_s": r.get("scatter_s"),
+                    "iters_per_s": r["iters_per_s"],
+                }
+                for label, r in per.items()
+            }
+            for K, per in ksweep_at.items()
+        }
+        kmax = max(ksweep_at)
+        bf = ksweep_at[kmax].get("host_bf16", {}).get("host_pool_bytes")
+        if bf:
+            payload["k_sweep_pool_vs_bf16"] = {
+                dt: round(
+                    ksweep_at[kmax][f"host_{dt}"]["host_pool_bytes"] / bf, 4)
+                for dt in ("int8", "int4")
+                if f"host_{dt}" in ksweep_at[kmax]
+            }
     if workload_at:
         payload["workload_smoke"] = {
             name: {"iters_per_s": rec["iters_per_s"],

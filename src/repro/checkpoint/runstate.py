@@ -3,46 +3,97 @@
 A run snapshot is a directory::
 
     <path>/stacked-<step>/  device client-state pytree (codec-encoded)
+                            — device state residency only
+    <path>/pool-<step>/     host client-state pool (one streamed .npy per
+                            storage array) — host state residency only
     <path>/server-<step>/   device server-state pytree
     <path>/run.json         host state: scheduler (rng + heap + fault/
                             retry counters + crashed set), per-client
                             stream rngs, the staleness meter, the
-                            (t, sim_time) cursor — and ``snapshot_tag``,
-                            the <step> its device dirs carry
+                            (t, sim_time) cursor, ``state_residency`` —
+                            and ``snapshot_tag``, the <step> its device
+                            dirs carry
 
 The device pytrees ride :func:`repro.checkpoint.save_checkpoint`, so
-reduced-dtype client state (the bf16 delta codec) round-trips bitwise via
-the manifest's recorded dtypes.  ``run.json`` is written *last* through
-an atomic rename and names the device dirs it pairs with: device
-payloads land under fresh step-tagged dirs (never overwriting the
-previous snapshot's), so a crash at *any* point — including mid-way
-through snapshot N+1 — leaves ``run.json`` referencing only complete
-dirs (snapshot N's).  Superseded dirs are garbage-collected after the
-rename commits.
+reduced-dtype client state (the bf16/int8 delta codecs) round-trips
+bitwise via the manifest's recorded dtypes.  The host pool streams each
+storage array straight to its own ``.npy`` via ``np.save`` on a real
+file object (``ndarray.tofile`` under the hood) — no second full copy of
+the pool is ever materialized in RAM, which matters at K=10^6 rows.
+``run.json`` is written *last* through an atomic rename and names the
+device dirs it pairs with: device payloads land under fresh step-tagged
+dirs (never overwriting the previous snapshot's), so a crash at *any*
+point — including mid-way through snapshot N+1 — leaves ``run.json``
+referencing only complete dirs (snapshot N's).  Superseded dirs are
+garbage-collected after the rename commits.
 
 The host payload is captured on the producer side *before*
 ``peek_window`` — the one point where no speculation is in flight and no
 stream rng draw for the upcoming window has been consumed — which is what
 makes a resumed run replay the remaining arrival stream (and therefore
-the final weights) bit-for-bit.
+the final weights) bit-for-bit.  Under host residency the pool itself is
+written on the consumer side right before the window dispatches, when
+every earlier window has already scattered back — the same boundary the
+device-resident ``stacked`` carry represents.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
-from typing import Tuple
+from typing import Optional, Tuple
+
+import numpy as np
 
 from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
 
 
-def save_run_state(path: str, stacked, server, host: dict) -> None:
+def _save_pool(path: str, pool, step: int) -> None:
+    """Stream the host pool's storage arrays to ``<path>/<key>.npy``.
+
+    ``np.save`` on a real file handle writes C-contiguous arrays with
+    ``tofile`` — the pool is read in place, never copied.  A ``keys``
+    manifest makes partial writes detectable at load time.
+    """
+    os.makedirs(path, exist_ok=True)
+    keys = []
+    for key, arr in pool.flat_items():
+        with open(os.path.join(path, f"{key}.npy"), "wb") as f:
+            np.save(f, arr, allow_pickle=False)
+        keys.append(key)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"step": step, "keys": keys}, f)
+
+
+def _load_pool(path: str, pool) -> None:
+    manifest = os.path.join(path, "manifest.json")
+    if not os.path.exists(manifest):
+        raise FileNotFoundError(
+            f"no pool manifest at {path!r} (incomplete snapshot write)")
+    with open(manifest) as f:
+        keys = json.load(f)["keys"]
+    # memory-mapped reads: rows stream into the pool's arrays without an
+    # intermediate full-size temporary
+    arrays = {k: np.load(os.path.join(path, f"{k}.npy"), mmap_mode="r")
+              for k in keys}
+    pool.load_flat(arrays)
+
+
+def save_run_state(path: str, stacked, server, host: dict,
+                   pool=None) -> None:
     """Write one resumable snapshot (``host`` must be JSON-able and carry
-    at least ``t``; see the module docstring for the layout)."""
+    at least ``t``; see the module docstring for the layout).  Pass the
+    run's :class:`~repro.sim.state_pool.HostStatePool` as ``pool`` (and
+    ``stacked=None``) under host state residency — the device block is
+    derived per window and is not part of the run state."""
     os.makedirs(path, exist_ok=True)
     step = int(host.get("t", 0))
     tag = f"{step:012d}"
-    save_checkpoint(os.path.join(path, f"stacked-{tag}"), stacked, step=step)
+    if pool is not None:
+        _save_pool(os.path.join(path, f"pool-{tag}"), pool, step)
+    else:
+        save_checkpoint(os.path.join(path, f"stacked-{tag}"), stacked,
+                        step=step)
     save_checkpoint(os.path.join(path, f"server-{tag}"), server, step=step)
     tmp = os.path.join(path, "run.json.tmp")
     with open(tmp, "w") as f:
@@ -52,19 +103,26 @@ def save_run_state(path: str, stacked, server, host: dict) -> None:
     # device dirs (a crash before this point leaves them; a crash during
     # it is harmless — run.json already references the new tag)
     for name in os.listdir(path):
-        if (name.startswith(("stacked-", "server-"))
+        if (name.startswith(("stacked-", "server-", "pool-"))
                 and not name.endswith(tag)):
             shutil.rmtree(os.path.join(path, name), ignore_errors=True)
 
 
-def load_run_state(path: str, stacked_like, server_like
-                   ) -> Tuple[object, object, dict]:
+def load_run_state(path: str, stacked_like, server_like, pool=None
+                   ) -> Tuple[Optional[object], object, dict]:
     """(stacked, server, host) restored from :func:`save_run_state`.
 
     ``stacked_like`` / ``server_like`` supply the pytree structure (the
     freshly initialized run state — resuming requires the same model,
     strategy, and fleet); key mismatches fail fast with the readable
     diff from :func:`repro.checkpoint.load_checkpoint`.
+
+    Under host residency pass the freshly initialized ``pool`` (and
+    ``stacked_like=None``): its arrays are filled in place and the
+    returned ``stacked`` is None.  Residency must match the snapshot's —
+    a ``state_residency="host"`` snapshot cannot resume a device run or
+    vice versa (the stored payloads are shaped differently), and the
+    mismatch fails fast here with a readable error.
     """
     run_json = os.path.join(path, "run.json")
     if not os.path.exists(run_json):
@@ -74,8 +132,23 @@ def load_run_state(path: str, stacked_like, server_like
     with open(run_json) as f:
         host = json.load(f)
     tag = host["snapshot_tag"]
-    stacked, _ = load_checkpoint(os.path.join(path, f"stacked-{tag}"),
-                                 stacked_like)
+    snap_res = host.get("state_residency", "device")
+    want_res = "host" if pool is not None else "device"
+    if snap_res != want_res:
+        raise ValueError(
+            f"state-residency mismatch: snapshot at {path!r} was written "
+            f"by a state_residency={snap_res!r} run but this run is "
+            f"resuming with state_residency={want_res!r} — rerun with "
+            f"RunConfig.state_residency={snap_res!r} (the snapshot stores "
+            + ("a host client-state pool, not a device stack"
+               if snap_res == "host" else
+               "a device stacked state, not a host pool") + ")")
+    if pool is not None:
+        _load_pool(os.path.join(path, f"pool-{tag}"), pool)
+        stacked = None
+    else:
+        stacked, _ = load_checkpoint(os.path.join(path, f"stacked-{tag}"),
+                                     stacked_like)
     server, _ = load_checkpoint(os.path.join(path, f"server-{tag}"),
                                 server_like)
     return stacked, server, host

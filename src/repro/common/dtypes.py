@@ -38,10 +38,49 @@ def bytes_of(dtype) -> int:
 # Storage dtypes accepted for the delta-compressed stacked client state
 # (``RunConfig.state_dtype`` / the bench ``--state-dtype`` flag).  fp32 is
 # the identity codec: master precision stored directly, bitwise-replayable.
+# int8/int4 are fixed-point quantized delta codecs: masked leaves store
+# ``round((x - anchor) / scale)`` clipped to ``±levels``; int4 keeps the
+# on-device block in int8 (values in [-7, 7]) and lets the host pool pack
+# two codes per byte.
 STATE_DTYPES = {
     "fp32": jnp.float32, "f32": jnp.float32, "float32": jnp.float32,
     "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
     "fp16": jnp.float16, "f16": jnp.float16, "float16": jnp.float16,
+    "int8": jnp.int8, "int4": jnp.int8,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class StateStorage:
+    """How one ``state_dtype`` name is physically stored.
+
+    ``dtype``       on-device storage dtype of masked leaves
+    ``levels``      quantization half-range (None for float codecs):
+                    codes live in ``[-levels, levels]``
+    ``pool_bits``   bits per element in the *host pool* (int4 packs two
+                    codes per byte; everything else is ``itemsize * 8``)
+    """
+
+    name: str
+    dtype: object
+    levels: int | None
+    pool_bits: int
+
+    @property
+    def quantized(self) -> bool:
+        return self.levels is not None
+
+
+_STATE_STORAGE = {
+    "fp32": StateStorage("fp32", jnp.float32, None, 32),
+    "bf16": StateStorage("bf16", jnp.bfloat16, None, 16),
+    "fp16": StateStorage("fp16", jnp.float16, None, 16),
+    "int8": StateStorage("int8", jnp.int8, 127, 8),
+    "int4": StateStorage("int4", jnp.int8, 7, 4),
+}
+_STATE_ALIASES = {
+    "f32": "fp32", "float32": "fp32", "bfloat16": "bf16",
+    "f16": "fp16", "float16": "fp16",
 }
 
 
@@ -55,3 +94,16 @@ def resolve_state_dtype(name):
             f"unknown state dtype {name!r}; expected one of "
             f"{sorted(STATE_DTYPES)}")
     return STATE_DTYPES[key]
+
+
+def resolve_state_storage(name) -> "StateStorage | None":
+    """Full storage description for a ``state_dtype`` name (None -> None)."""
+    if name is None:
+        return None
+    key = str(name).lower()
+    key = _STATE_ALIASES.get(key, key)
+    if key not in _STATE_STORAGE:
+        raise ValueError(
+            f"unknown state dtype {name!r}; expected one of "
+            f"{sorted(STATE_DTYPES)}")
+    return _STATE_STORAGE[key]

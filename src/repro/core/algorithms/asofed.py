@@ -13,11 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.dtypes import resolve_state_dtype
 from repro.common.pytree import tree_axpy, tree_sub, tree_zeros_like
 from repro.core import client as client_lib
-from repro.core.algorithms.common import (ClientStateCodec, avg_surrogate_grad,
-                                          bcast_rows, bool_tree)
+from repro.core.algorithms.common import (avg_surrogate_grad, bcast_rows,
+                                          bool_tree, make_state_codec)
 from repro.core.feature_learning import apply_feature_learning
 from repro.sim.engine import Strategy
 
@@ -45,9 +44,6 @@ class AsoFedStrategy(Strategy):
         # and decode share one anchor), h/v as plain reduced casts (zero
         # anchor); the delay/round/sample scalars pass through in fp32 —
         # reduced mantissas would corrupt their integer-valued counting
-        dt = resolve_state_dtype(cfg.state_dtype)
-        if dt is None or dt == jnp.float32:
-            return None  # identity: master fp32 stored directly (bitwise)
         z = tree_zeros_like(w0)
         s0 = jnp.zeros((), jnp.float32)
         anchor = client_lib.ClientState(
@@ -59,7 +55,7 @@ class AsoFedStrategy(Strategy):
             h=bool_tree(z, True), v=bool_tree(z, True),
             delay_sum=False, rounds=False, n_samples=False,
         )
-        return ClientStateCodec(dtype=dt, anchor=anchor, mask=mask)
+        return make_state_codec(cfg, anchor, mask)
 
     def upload_codec_view(self, model, cfg):
         # the upload IS the wire delta already (params - new_params): the

@@ -46,11 +46,24 @@ class ClientStateCodec:
     A ``dtype`` of fp32 (or ``anchor=None``) is the **identity codec**:
     state round-trips bitwise, which is what keeps the engine's
     window-on/off and prefetch-on/off bit-identity contracts intact.
+
+    Integer dtypes (``state_dtype="int8"``/``"int4"``) switch the masked
+    leaves to a **fixed-point quantized delta**: codes are
+    ``clip(round((x − anchor) / scale), −levels, +levels)`` with a
+    per-leaf fp32 ``scale`` (so deltas up to ``±levels·scale`` round-trip
+    to within ``scale/2`` per element and larger ones saturate), decoded
+    as ``anchor + code·scale``.  Codes are stable under re-encode
+    (``encode(decode(c)) == c`` bitwise), which is what makes host-pool
+    gather/scatter round-trips idempotent.  Control scalars still pass
+    through untouched in fp32.
     """
 
     dtype: Any
     anchor: Any = None
     mask: Any = None
+    # Quantized codecs only: per-leaf fp32 scale pytree + half-range.
+    scale: Any = None
+    levels: Any = None
 
     @property
     def identity(self) -> bool:
@@ -59,6 +72,14 @@ class ClientStateCodec:
     def encode(self, state):
         if self.identity:
             return state
+        if self.levels is not None:
+            lv = float(self.levels)
+            return jax.tree.map(
+                lambda x, a, m, s: jnp.clip(
+                    jnp.round((x - a) / s), -lv, lv).astype(self.dtype)
+                if m else x,
+                state, self.anchor, self.mask, self.scale,
+            )
         return jax.tree.map(
             lambda x, a, m: (x - a).astype(self.dtype) if m else x,
             state, self.anchor, self.mask,
@@ -67,10 +88,44 @@ class ClientStateCodec:
     def decode(self, state):
         if self.identity:
             return state
+        if self.levels is not None:
+            return jax.tree.map(
+                lambda x, a, m, s: a + x.astype(a.dtype) * a.dtype.type(s)
+                if m else x,
+                state, self.anchor, self.mask, self.scale,
+            )
         return jax.tree.map(
             lambda x, a, m: a + x.astype(a.dtype) if m else x,
             state, self.anchor, self.mask,
         )
+
+
+def make_state_codec(cfg, anchor, mask):
+    """Build the stacked-state codec for ``cfg.state_dtype``.
+
+    Shared by every strategy's ``state_codec``: fp32 (or ``None``) means
+    no codec (identity, bitwise); bf16/fp16 get the plain delta-cast
+    codec; int8/int4 get the fixed-point quantized delta codec with a
+    per-leaf ``scale = cfg.state_qclip / levels`` (int4 stores its codes
+    in int8 on device — ``levels=7`` — and lets the host pool pack two
+    codes per byte).
+    """
+    from repro.common.dtypes import resolve_state_storage
+
+    storage = resolve_state_storage(cfg.state_dtype)
+    if storage is None or jnp.dtype(storage.dtype) == jnp.float32:
+        return None
+    scale = None
+    if storage.quantized:
+        qclip = float(getattr(cfg, "state_qclip", 0.5))
+        if not qclip > 0.0:
+            raise ValueError(
+                f"state_qclip must be positive for quantized state dtype "
+                f"{cfg.state_dtype!r}; got {qclip!r}")
+        per_leaf = qclip / storage.levels
+        scale = jax.tree.map(lambda _: per_leaf, mask)
+    return ClientStateCodec(dtype=storage.dtype, anchor=anchor, mask=mask,
+                            scale=scale, levels=storage.levels)
 
 
 # ---------------------------------------------------------------------------

@@ -10,10 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.common.dtypes import resolve_state_dtype
 from repro.common.pytree import tree_sub
-from repro.core.algorithms.common import (ClientStateCodec, bcast_rows,
-                                          bool_tree, sgd_epochs)
+from repro.core.algorithms.common import (bcast_rows, bool_tree,
+                                          make_state_codec, sgd_epochs)
 from repro.sim.engine import Strategy
 
 
@@ -31,11 +30,8 @@ class FedAsyncStrategy(Strategy):
     def state_codec(self, model, cfg, w0):
         # stale model copies stored as reduced-dtype deltas from w0; the
         # version counter passes through fp32 (it counts global iters)
-        dt = resolve_state_dtype(cfg.state_dtype)
-        if dt is None or dt == jnp.float32:
-            return None  # identity: master fp32 stored directly (bitwise)
-        return ClientStateCodec(
-            dtype=dt,
+        return make_state_codec(
+            cfg,
             anchor={"w": w0, "version": jnp.zeros((), jnp.float32)},
             mask={"w": bool_tree(w0, True), "version": False},
         )

@@ -24,11 +24,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.common.dtypes import resolve_state_dtype
 from repro.common.pytree import (tree_axpy, tree_sub, tree_where,
                                  tree_zeros_like)
-from repro.core.algorithms.common import (ClientStateCodec, bcast_rows,
-                                          bool_tree, sgd_epochs)
+from repro.core.algorithms.common import (bcast_rows, bool_tree,
+                                          make_state_codec, sgd_epochs)
 from repro.sim.engine import Strategy
 
 
@@ -61,11 +60,8 @@ class FedBuffStrategy(Strategy):
     def state_codec(self, model, cfg, w0):
         # identical layout to fedasync: stale model copies as reduced-dtype
         # deltas from w0, the version counter untouched fp32
-        dt = resolve_state_dtype(cfg.state_dtype)
-        if dt is None or dt == jnp.float32:
-            return None  # identity: master fp32 stored directly (bitwise)
-        return ClientStateCodec(
-            dtype=dt,
+        return make_state_codec(
+            cfg,
             anchor={"w": w0, "version": jnp.zeros((), jnp.float32)},
             mask={"w": bool_tree(w0, True), "version": False},
         )

@@ -134,11 +134,22 @@ def tick_body(strategy, model, cfg_model, cfg, mesh: Optional[Mesh], codec,
     always rides in the middle; chaos runs append the per-tick
     ``rejected`` / ``clipped`` admission counters after it.
 
-    The tick always takes the full 11-array input block (the chaos
+    The tick always takes the full 12-array input block (the chaos
     columns ``fresh`` / ``dup`` / ``corrupt`` / ``stal`` ride at the
     end); ``faults_on`` and the ``cfg`` guard knobs gate which chaos ops
     are actually traced, so a fault-free, guard-free config compiles the
     exact pre-chaos computation and replays bitwise.
+
+    Index duality: ``idx`` is the *global* client id — it keys server
+    arrays (asofed's per-client ``n``), upload-codec PRNG streams, and
+    corruption noise, so it must be identical under every state
+    residency.  ``lidx`` is the *storage row* of the same client in the
+    ``stacked`` carry: equal to ``idx`` under device residency (the
+    stack is ``[K+1, ...]``), the window-local pool-block row under host
+    residency (the stack is the gathered ``[R, ...]`` cohort block).
+    Only the gather and the scatter write-back consume ``lidx`` — the
+    arithmetic between them never sees storage coordinates, which is
+    what makes the two residencies bitwise-identical.
     """
     local = strategy.build_local(model, cfg)
     fold = strategy.build_fold(model, cfg_model, cfg)
@@ -179,9 +190,9 @@ def tick_body(strategy, model, cfg_model, cfg, mesh: Optional[Mesh], codec,
     w0_init = model.init(jax.random.PRNGKey(cfg.seed)) if faults_on else None
     vlocal = jax.vmap(local, in_axes=(0, None, 0, 0, 0, 0, 0))
 
-    def tick(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask,
+    def tick(stacked, server, idx, lidx, xs, ys, delays, n_vis, t_arr, mask,
              fresh, dup, corrupt, stal):
-        enc0 = tree_take(stacked, idx)
+        enc0 = tree_take(stacked, lidx)
         # the stacked state may be delta-compressed: reconstruct the
         # cohort's working (master-dtype) state right at the gather —
         # identity (and fused away) for the fp32 codec
@@ -364,7 +375,7 @@ def tick_body(strategy, model, cfg_model, cfg, mesh: Optional[Mesh], codec,
         # to their pre-tick (still-encoded) values, so real rows are
         # written exactly once
         enc = cohort if codec is None else codec.encode(cohort)
-        stacked = tree_scatter(stacked, idx, mask_select(mask, enc, enc0))
+        stacked = tree_scatter(stacked, lidx, mask_select(mask, enc, enc0))
         return stacked, server, tel_row
 
     return tick
@@ -403,16 +414,16 @@ def build_megastep_fn(strategy, model, cfg_model, cfg, mesh: Optional[Mesh],
     tick = tick_body(strategy, model, cfg_model, cfg, mesh, codec, slots,
                      server_slots, faults_on=faults_on)
 
-    def megastep(stacked, server, idx, xs, ys, delays, n_vis, t_arr, mask,
-                 fresh, dup, corrupt, stal):
+    def megastep(stacked, server, idx, lidx, xs, ys, delays, n_vis, t_arr,
+                 mask, fresh, dup, corrupt, stal):
         def step(carry, inp):
             stacked_, server_, tel_row = tick(*carry, *inp)
             return (stacked_, server_), tel_row
 
         (stacked, server), tel = jax.lax.scan(
             step, (stacked, server),
-            (idx, xs, ys, delays, n_vis, t_arr, mask, fresh, dup, corrupt,
-             stal)
+            (idx, lidx, xs, ys, delays, n_vis, t_arr, mask, fresh, dup,
+             corrupt, stal)
         )
         return stacked, server, tel
 

@@ -116,7 +116,7 @@ class RunConfig:
     # task-string default at eval time (the pair must agree)
     task: str = "regression"
     workload: Optional[str] = None
-    eval_every: int = 10
+    eval_every: int = 10  # 0 disables evaluation entirely (bench runs)
     seed: int = 0
     # ablations / robustness knobs
     feature_learning: bool = True  # ASO-Fed(-F) when False
@@ -151,6 +151,18 @@ class RunConfig:
     window: int = 1
     eval_align: bool = False
     state_dtype: Optional[str] = None
+    # out-of-core client state: "device" keeps the stacked state resident
+    # on the accelerator (the bitwise default); "host" keeps the full
+    # codec-encoded pool in host RAM (``repro.sim.state_pool``, optionally
+    # split over `state_shards` contiguous row ranges) and moves only each
+    # window's active-cohort rows host→device — gathered speculatively on
+    # the prefetch producer thread, scattered back after the megastep — so
+    # device memory scales with the active cohort, not the fleet size K.
+    # `state_qclip` is the quantized state codecs' (int8/int4) symmetric
+    # clip range for parameter-delta leaves.
+    state_residency: str = "device"
+    state_shards: int = 1
+    state_qclip: float = 0.5
     # feature pass lowering: None = auto (Pallas kernel above the ops.py
     # size threshold on TPU, jnp otherwise); True/False force it.  The
     # interpret flag runs the kernel through the Pallas interpreter — the
@@ -485,6 +497,28 @@ def run_strategy(
     # task, or workload name must raise readably, not ride silently into
     # the stats/BENCH columns (or report the wrong task's metrics)
     dtypes_lib.resolve_state_dtype(cfg.state_dtype)
+    if cfg.state_residency not in ("device", "host"):
+        raise ValueError(
+            f"unknown state_residency {cfg.state_residency!r}; "
+            "accepted: 'device' | 'host'")
+    if cfg.state_residency == "host" and strategy.schedule != "async":
+        raise ValueError(
+            "state_residency='host' is supported for async schedules only "
+            f"({strategy.name!r} is {strategy.schedule!r}): the host pool "
+            "rides the windowed gather/scatter tick path")
+    if cfg.state_residency == "host" and (strategy.eval_per_client
+                                          or strategy.pooled):
+        raise ValueError(
+            f"state_residency='host' cannot serve {strategy.name!r}: "
+            "per-client / pooled evaluation reads the full stacked state, "
+            "which a host-resident pool keeps off-device")
+    if cfg.state_shards < 1:
+        raise ValueError(
+            f"state_shards must be >= 1, got {cfg.state_shards}")
+    if cfg.eval_every < 0:
+        raise ValueError(
+            f"eval_every must be >= 0 (0 disables evaluation), "
+            f"got {cfg.eval_every}")
     eval_report = resolve_eval_report(cfg)
     # chaos layer: any client carrying an active FaultSpec switches the
     # compiled tick to fault-aware mode (crash-restart state resets, wire
@@ -590,7 +624,40 @@ def run_strategy(
         return float(c.stream.visible(0)) if c is not None else 0.0
 
     init_batched = compile_lib.batched_init_fn(strategy, model, cfg)
-    if init_batched is not None:
+    pool = None
+    if cfg.state_residency == "host":
+        if init_batched is None:
+            raise ValueError(
+                f"state_residency='host' needs {strategy.name!r} to "
+                "provide build_init_client: the pool is filled by chunked "
+                "batched init (a device-stacked init of all K rows is "
+                "exactly what the host pool exists to avoid)")
+        from repro.sim.state_pool import HostStatePool
+
+        storage = dtypes_lib.resolve_state_storage(cfg.state_dtype)
+        packed = (storage is not None and codec is not None
+                  and storage.pool_bits == 4)
+        tmpl = init_batched(
+            w0, jnp.asarray(np.array([_n0(members[0])], np.float32)))
+        if codec is not None:
+            tmpl = codec.encode(tmpl)
+        pool = HostStatePool(
+            jax.tree.map(lambda x: np.asarray(x[0]), tmpl), n_members,
+            packed=packed, shards=min(cfg.state_shards, n_members))
+        # chunked init: device footprint of one chunk at a time, encoded
+        # and streamed into the pool (the K=10^6 setup path)
+        CHUNK = 4096
+        s = 0
+        while s < n_members:
+            e = min(s + CHUNK, n_members)
+            n0c = np.array([_n0(c) for c in members[s:e]], np.float32)
+            chunk = init_batched(w0, jnp.asarray(n0c))
+            if codec is not None:
+                chunk = codec.encode(chunk)
+            pool.write_block(s, jax.tree.map(np.asarray, chunk))
+            s = e
+        stacked = None  # no device-resident stack: blocks ride per window
+    elif init_batched is not None:
         n0s = np.array([_n0(c) for c in members]
                        + [_n0(members[0])] * (n_rows - n_members), np.float32)
         stacked = init_batched(w0, jnp.asarray(n0s))
@@ -601,12 +668,14 @@ def run_strategy(
         states += [strategy.init_client(model, cfg, w0, members[0])
                    ] * (n_rows - n_members)
         stacked = tree_stack(states)
-    if codec is not None:
+    if codec is not None and stacked is not None:
         stacked = codec.encode(stacked)  # one-time: state lives compressed
     server = strategy.init_server(model, cfg_model, cfg, w0, clients, active)
     if mesh is not None:
-        stacked = jax.device_put(stacked, jax.tree.map(
-            lambda x: sharding_lib.client_sharding(x.shape, mesh), stacked))
+        if stacked is not None:
+            stacked = jax.device_put(stacked, jax.tree.map(
+                lambda x: sharding_lib.client_sharding(x.shape, mesh),
+                stacked))
         server = jax.device_put(server, sharding_lib.replicated(mesh))
     windowed = strategy.schedule == "async"
     tick_fn = compile_lib.tick_fn(strategy, model, cfg_model, cfg, K, mesh,
@@ -614,8 +683,12 @@ def run_strategy(
                                   slots=client_slots,
                                   server_slots=server_slots,
                                   faults_on=faults_on)
+    # eval_every=0 disables evaluation entirely: no padded [K, n_max]
+    # test tensor ever lands on device (the K-sweep bench path, where
+    # device memory must stay bounded by the active cohort, not K)
     evaluator = Evaluator(model, clients, eval_report,
-                          strategy.eval_per_client)
+                          strategy.eval_per_client) \
+        if cfg.eval_every > 0 else None
     telem = telemetry if telemetry is not None else TelemetryLog(slots)
     if telem.slots != slots:
         telem.slots = slots  # caller-constructed logs adopt the run's slots
@@ -632,9 +705,13 @@ def run_strategy(
     builder = TickBuilder(
         by_id=by_id, batch_size=B, local_epochs=E, scratch=scratch, pad=pad,
         pooled=strategy.pooled, transfer=transfer,
-        window_transfer=window_transfer,
+        window_transfer=window_transfer, state_pool=pool,
     )
-    stacked_state_bytes = sum(
+    # under host residency the device-side state is the per-window cohort
+    # block, not the [K, ...] stack: the column reports the largest block
+    # actually dispatched (updated in `dispatch`), so it is what it claims
+    # to be — live device bytes of client state — in both modes
+    stacked_state_bytes = 0 if pool is not None else sum(
         int(x.size) * jnp.dtype(x.dtype).itemsize
         for x in jax.tree.leaves(stacked))
     peak_live = _live_device_bytes()
@@ -648,6 +725,8 @@ def run_strategy(
     t0 = time.perf_counter()
 
     def eval_params():
+        if pool is not None:  # host residency: central-model eval only
+            return strategy.eval_params(server, None)
         members_view = jax.tree.map(lambda x: x[:n_members], stacked)
         if codec is not None and (strategy.eval_per_client or strategy.pooled):
             members_view = codec.decode(members_view)
@@ -655,16 +734,34 @@ def run_strategy(
 
     def record(t: int, sim_time: float):
         nonlocal eval_s
+        if evaluator is None:
+            return
         e0 = time.perf_counter()
         preds = evaluator.predict_device(eval_params())
         pending_evals.append((t, sim_time, time.perf_counter() - t0, preds))
         eval_s += time.perf_counter() - e0
 
     def dispatch(pt):
-        nonlocal stacked, server, device_s, n_ticks, n_windows, peak_live
+        nonlocal stacked, server, device_s, n_ticks, n_windows, peak_live, \
+            stacked_state_bytes
         d0 = time.perf_counter()
-        stacked, server, tel = tick_fn(stacked, server, *pt.arrays)
-        jax.block_until_ready((stacked, server))
+        if pool is not None:
+            # host residency: repair the speculative gather (rows written
+            # by scatters that landed after it), move the cohort block to
+            # device, run the megastep on it as the stacked carry, and
+            # scatter the updated member rows back into the pool
+            pool.patch(pt.block, pt.block_cids, pt.gather_seq)
+            block = jax.tree.map(lambda x: transfer("block", x), pt.block)
+            stacked_state_bytes = max(stacked_state_bytes, sum(
+                int(x.size) * jnp.dtype(x.dtype).itemsize
+                for x in jax.tree.leaves(block)))
+            block, server, tel = tick_fn(block, server, *pt.arrays)
+            jax.block_until_ready((block, server))
+            pool.scatter(pt.block_cids[:pt.block_rows],
+                         jax.tree.map(np.asarray, block))
+        else:
+            stacked, server, tel = tick_fn(stacked, server, *pt.arrays)
+            jax.block_until_ready((stacked, server))
         telem.append(pt, tel)
         device_s += time.perf_counter() - d0
         n_ticks += pt.n_ticks
@@ -684,7 +781,7 @@ def run_strategy(
             from repro import checkpoint as ckpt_lib
 
             stacked, server, host = ckpt_lib.load_run_state(
-                resume_from, stacked, server)
+                resume_from, stacked, server, pool=pool)
             if host.get("strategy") != strategy.name \
                     or int(host.get("seed", cfg.seed)) != cfg.seed:
                 raise ValueError(
@@ -693,9 +790,10 @@ def run_strategy(
                     f"seed={host.get('seed')}; this run is "
                     f"{strategy.name!r} seed={cfg.seed}")
             if mesh is not None:
-                stacked = jax.device_put(stacked, jax.tree.map(
-                    lambda x: sharding_lib.client_sharding(x.shape, mesh),
-                    stacked))
+                if stacked is not None:
+                    stacked = jax.device_put(stacked, jax.tree.map(
+                        lambda x: sharding_lib.client_sharding(
+                            x.shape, mesh), stacked))
                 server = jax.device_put(server,
                                         sharding_lib.replicated(mesh))
             sched.load_state_dict(host["sched"])
@@ -763,6 +861,7 @@ def run_strategy(
                     snap = {
                         "t": tp, "sim_time": sim_prod,
                         "strategy": strategy.name, "seed": cfg.seed,
+                        "state_residency": cfg.state_residency,
                         "sched": sched.state_dict(),
                         "streams": {str(c.cid): c.stream.rng_state()
                                     for c in active},
@@ -779,7 +878,7 @@ def run_strategy(
                     sched.commit()
                     continue  # window held only empty-split clients
                 sched.commit()
-                if cfg.eval_align and W > 1:
+                if cfg.eval_align and W > 1 and cfg.eval_every > 0:
                     segments = split_at_evals(kept, tp, cfg.eval_every,
                                               count=kept_count)
                 else:
@@ -822,9 +921,10 @@ def run_strategy(
             source = TickPrefetcher(produce(), depth=1)
         else:
             source = produce()
-        next_eval = (resume_t // cfg.eval_every + 1) * cfg.eval_every
+        next_eval = (resume_t // cfg.eval_every + 1) * cfg.eval_every \
+            if cfg.eval_every > 0 else cfg.T + 1
         ckpt_every = int(checkpoint_every) if checkpoint_every \
-            else cfg.eval_every
+            else (cfg.eval_every or cfg.T)
         next_ckpt = resume_t + ckpt_every if checkpoint_path is not None \
             else None
         try:
@@ -836,8 +936,14 @@ def run_strategy(
                     # snapshot's t counts the folds already applied)
                     from repro import checkpoint as ckpt_lib
 
+                    # under host residency the pool is the client-state
+                    # payload: at this point every earlier window has
+                    # scattered back (dispatch is synchronous on this
+                    # thread), so the pool holds exactly the state after
+                    # the snapshot's t folds
                     ckpt_lib.save_run_state(checkpoint_path, stacked,
-                                            server, pt.host_snapshot)
+                                            server, pt.host_snapshot,
+                                            pool=pool)
                     next_ckpt = pt.host_snapshot["t"] + ckpt_every
                 dispatch(pt)
                 t = pt.t_end
@@ -880,7 +986,8 @@ def run_strategy(
                 else float(t)
             if trace is not None:
                 trace.append((t, jax.tree.map(np.asarray, eval_params())))
-            if t % cfg.eval_every == 0 or t == cfg.T:
+            if (cfg.eval_every > 0 and t % cfg.eval_every == 0) \
+                    or t == cfg.T:
                 record(t, sim_time)
 
     e0 = time.perf_counter()
@@ -900,8 +1007,18 @@ def run_strategy(
             # "fp32" whenever no codec ran: a codec-less strategy stores
             # full-precision state regardless of what the config asked for
             state_dtype=str(cfg.state_dtype) if codec is not None else "fp32",
+            state_residency="host" if pool is not None else "device",
             stacked_state_bytes=int(stacked_state_bytes),
             peak_live_device_bytes=int(peak_live),
+            # out-of-core accounting: host-pool footprint and the
+            # gather/patch/scatter traffic (all zero under device
+            # residency — the stack never moves)
+            host_pool_bytes=int(pool.nbytes) if pool is not None else 0,
+            gathered_rows=int(pool.gathered_rows) if pool is not None else 0,
+            scattered_rows=int(pool.scattered_rows) if pool is not None
+            else 0,
+            gather_s=round(pool.gather_s, 6) if pool is not None else 0.0,
+            scatter_s=round(pool.scatter_s, 6) if pool is not None else 0.0,
             # churn observability: per-arrival staleness (iterations since
             # the client's previous fold) and the fleet's mean on-fraction
             # over the simulated horizon, plus the scheduler's deferral /

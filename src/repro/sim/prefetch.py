@@ -118,29 +118,45 @@ class PreparedTick:
     bookkeeping metadata.
 
     ``arrays`` is the engine tick signature tail
-    ``(idx, xs, ys, delays, n_vis, t_arr, mask, fresh, dup, corrupt,
-    stal)`` — the last four are the chaos columns (crash-rejoin flag,
-    duplicate-delivery flag, corruption wire code, per-arrival staleness)
-    — already transferred (and, on a mesh, sharded) by the builder.  For
-    a megastep window every array carries an extra leading ``[T_w]`` axis
-    (one slice per fused tick) and ``n_ticks`` counts the real
-    (non-padding) ticks.  ``ticks_meta`` carries one :class:`TickMeta`
-    per real tick.  ``host_snapshot``, when set, is a full-run host-state
-    snapshot captured by the producer *before* this block's speculative
-    peek (the crash-resume checkpoint hook): the consumer persists it
-    before dispatching the block, so a resumed run replays from exactly
-    this boundary.
+    ``(idx, lidx, xs, ys, delays, n_vis, t_arr, mask, fresh, dup,
+    corrupt, stal)`` — ``lidx`` is the storage-row column (== ``idx``
+    under device residency, the pool-block row under host residency; see
+    ``repro.sim.compile.tick_body``), and the last four are the chaos
+    columns (crash-rejoin flag, duplicate-delivery flag, corruption wire
+    code, per-arrival staleness) — already transferred (and, on a mesh,
+    sharded) by the builder.  For a megastep window every array carries
+    an extra leading ``[T_w]`` axis (one slice per fused tick) and
+    ``n_ticks`` counts the real (non-padding) ticks.  ``ticks_meta``
+    carries one :class:`TickMeta` per real tick.  ``host_snapshot``,
+    when set, is a full-run host-state snapshot captured by the producer
+    *before* this block's speculative peek (the crash-resume checkpoint
+    hook): the consumer persists it before dispatching the block, so a
+    resumed run replays from exactly this boundary.
+
+    Under host state residency the builder additionally stages the
+    window's pool gather: ``block`` is the host-side cohort state block
+    (leaves ``[R, ...]``, gathered speculatively on the producer
+    thread), ``block_cids`` the pool row per block row (padding rows
+    repeat the first member), ``block_rows`` the number of real member
+    rows (the scatter-back set; row ``block_rows`` is the window's
+    scratch row), and ``gather_seq`` the pool write-sequence the gather
+    saw — the consumer passes it to ``HostStatePool.patch`` to re-copy
+    rows updated by megasteps that were still in flight at gather time.
     """
 
     arrivals: List[Arrival]  # trainable arrivals, in fold order
     t_start: int  # global iteration at tick start
     t_end: int  # global iteration after the tick's folds
     sim_time: float  # simulated time of the last arrival
-    arrays: Tuple  # (idx, xs, ys, delays, n_vis, t_arr, mask, fresh,
-    #                dup, corrupt, stal)
+    arrays: Tuple  # (idx, lidx, xs, ys, delays, n_vis, t_arr, mask,
+    #                fresh, dup, corrupt, stal)
     n_ticks: int = 1  # real scheduler ticks fused into this dispatch
     ticks_meta: Tuple[TickMeta, ...] = ()
     host_snapshot: Optional[dict] = None  # pre-peek run state (checkpoint)
+    block: Optional[object] = None  # host-residency staged state block
+    block_cids: Optional[Array] = None  # pool row of each block row
+    block_rows: int = 0  # real member rows (scatter-back count)
+    gather_seq: int = 0  # pool write-sequence at gather time
 
 
 class TickBuilder:
@@ -167,13 +183,18 @@ class TickBuilder:
                  local_epochs: int, scratch: int, pad: int, pooled: bool,
                  transfer: Callable[[str, Array], object],
                  window_transfer: Optional[Callable[[str, Array],
-                                                    object]] = None):
+                                                    object]] = None,
+                 state_pool=None):
         self.by_id = by_id
         self.B = batch_size
         self.E = local_epochs
         self.scratch = scratch
         self.pad = pad
         self.pooled = pooled
+        # host state residency: gather each window's member rows from the
+        # HostStatePool here, on the producer thread, so the host→device
+        # state traffic overlaps the previous megastep like the batches do
+        self.state_pool = state_pool
         self.transfer = transfer
         # window blocks carry a leading [T_w] time axis: on a mesh their
         # client axis is axis 1, so they need their own sharding rule
@@ -193,6 +214,7 @@ class TickBuilder:
         if buf is None:
             buf = {
                 "idx": np.empty(shape, np.int32),
+                "lidx": np.empty(shape, np.int32),
                 "delays": np.empty(shape, np.float32),
                 "n_vis": np.empty(shape, np.float32),
                 "t_arr": np.empty(shape, np.float32),
@@ -252,6 +274,7 @@ class TickBuilder:
         self._slot = (slot + 1) % self.NSLOTS
         meta = self._meta_slot((P,), slot)
         meta["idx"].fill(self.scratch)
+        meta["lidx"].fill(self.scratch)
         meta["delays"].fill(0.0)
         meta["n_vis"].fill(0.0)
         meta["t_arr"].fill(0.0)
@@ -269,6 +292,7 @@ class TickBuilder:
             stal_sum += stal
             stal_max = max(stal_max, stal)
             meta["idx"][i] = 0 if self.pooled else a.cid
+            meta["lidx"][i] = meta["idx"][i]  # device residency: same row
             meta["delays"][i] = a.delay
             meta["t_arr"][i] = t_i
             meta["mask"][i] = True
@@ -285,6 +309,7 @@ class TickBuilder:
                     c.stream.batch_into(t_i, xs[i, e], ys[i, e])
         arrays = (
             self.transfer("idx", meta["idx"]),
+            self.transfer("lidx", meta["lidx"]),
             self.transfer("xs", xs),
             self.transfer("ys", ys),
             self.transfer("delays", meta["delays"]),
@@ -331,10 +356,40 @@ class TickBuilder:
         t0 = time.perf_counter()
         Tw = bucket_size(len(ticks), window)
         P = bucket_size(max(len(tk) for tk in ticks), self.pad)
+        # host residency: assign each distinct client of the window one
+        # pool-block row, in first-appearance order (deterministic — the
+        # same arrival stream maps to the same rows at any prefetch
+        # setting), and speculatively gather those rows from the pool.
+        # A client arriving twice in the window shares one row, so tick
+        # j+1's gather sees tick j's scatter through the scan carry,
+        # exactly as the device-resident [K+1] stack does.
+        rowof = None
+        block = block_cids = None
+        block_rows = gather_seq = 0
+        if self.state_pool is not None:
+            rowof = {}
+            for tk in ticks:
+                for a in tk:
+                    if a.cid not in rowof:
+                        rowof[a.cid] = len(rowof)
+            block_rows = len(rowof)
+            # bucket the block's row axis (+1 scratch row at index
+            # block_rows) so the megastep compile cache stays O(log K);
+            # rows past the scratch row are never gathered by any lidx —
+            # fill them (and the scratch row) with the first member's
+            # encoded row, which is as finite as any real row
+            R = _pow2(block_rows + 1)
+            block_cids = np.fromiter(rowof, np.int64, len(rowof))
+            block_cids = np.concatenate([
+                block_cids,
+                np.full(R - block_rows, block_cids[0], np.int64)])
+            block, gather_seq = self.state_pool.gather(block_cids)
+        scratch_row = self.scratch if rowof is None else block_rows
         slot = self._slot
         self._slot = (slot + 1) % self.NSLOTS
         meta = self._meta_slot((Tw, P), slot)
         meta["idx"].fill(self.scratch)
+        meta["lidx"].fill(scratch_row)
         meta["delays"].fill(0.0)
         meta["n_vis"].fill(0.0)
         meta["t_arr"].fill(0.0)
@@ -355,6 +410,8 @@ class TickBuilder:
                 stal_sum += stal
                 stal_max = max(stal_max, stal)
                 meta["idx"][j, i] = a.cid
+                meta["lidx"][j, i] = (a.cid if rowof is None
+                                      else rowof[a.cid])
                 meta["delays"][j, i] = a.delay
                 meta["t_arr"][j, i] = t_run
                 meta["mask"][j, i] = True
@@ -373,6 +430,7 @@ class TickBuilder:
                 staleness_sum=stal_sum, staleness_max=stal_max))
         arrays = (
             self.window_transfer("idx", meta["idx"]),
+            self.window_transfer("lidx", meta["lidx"]),
             self.window_transfer("xs", xs),
             self.window_transfer("ys", ys),
             self.window_transfer("delays", meta["delays"]),
@@ -389,6 +447,8 @@ class TickBuilder:
             arrivals=flat, t_start=t_start, t_end=t_run,
             sim_time=sim_time, arrays=arrays, n_ticks=len(ticks),
             ticks_meta=tuple(ticks_meta),
+            block=block, block_cids=block_cids, block_rows=block_rows,
+            gather_seq=gather_seq,
         )
 
 

@@ -101,6 +101,22 @@ def _upload_encoder(cfg: RunConfig):
     return lambda delta, t, cid: enc(delta, jnp.int32(t), jnp.int32(cid))
 
 
+def _state_roundtripper(cfg: RunConfig, alg: str, model, w0):
+    """Per-arrival oracle of the engine's reduced-precision *stored*
+    client state: one jitted ``decode(encode(state))`` through the run's
+    :class:`~repro.core.algorithms.common.ClientStateCodec`, applied
+    wherever the engine would scatter a row back encoded.  Idempotent
+    (quantized codes are stable under re-encode), so applying it after
+    every arrival mirrors rejected/duplicate paths too.  None for the
+    identity (fp32) codec — those loops stay bitwise-untouched."""
+    from repro.core.algorithms import get_strategy
+
+    codec = get_strategy(alg).state_codec(model, cfg, w0)
+    if codec is None:
+        return None
+    return jax.jit(lambda st: codec.decode(codec.encode(st)))
+
+
 class _ChaosTools:
     """Per-arrival oracle of the engine tick's chaos ops: wire-delta
     corruption + the server admission guard, as jitted traceables built
@@ -202,6 +218,9 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
                          keep_copies=False)
     cstate = {c.cid: client_lib.init_client_state(w0, c.stream.visible(0))
               for c in active}
+    srt = _state_roundtripper(cfg, "asofed", model, w0)
+    if srt is not None:  # engine stores the initial stack encoded once
+        cstate = {cid: srt(st) for cid, st in cstate.items()}
     grad_fn = avg_surrogate_grad(model, cfg)
     n_evals = 0
 
@@ -278,6 +297,8 @@ def run_asofed_reference(model, cfg_model, clients, cfg: RunConfig, *,
             server = dataclasses.replace(server, t=server.t + 1)
             t = server.t
             cstate[a.cid] = st
+        if srt is not None:  # the row is scattered back encoded
+            cstate[a.cid] = srt(cstate[a.cid])
         if collect_trace:
             traj[t] = jax.tree.map(np.asarray, server.w)
         if t % cfg.eval_every == 0 or t == cfg.T:
@@ -306,8 +327,11 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
                             resolve_upload_codec(cfg).tree_bytes(w))
     sgd = jax.jit(sgd_epochs(model, cfg, mu=0.005))
     w0_init = w
+    srt = _state_roundtripper(cfg, "fedasync", model, w)
+    rt_w = ((lambda wl, v: wl) if srt is None else
+            (lambda wl, v: srt({"w": wl, "version": jnp.float32(v)})["w"]))
     version = {c.cid: 0 for c in sched.active}
-    local_w = {c.cid: w for c in sched.active}
+    local_w = {c.cid: rt_w(w, 0) for c in sched.active}
     trainable = {c.cid for c in sched.active if c.stream.n > 0}
     chaos = _chaos_tools(cfg, clients)
     traj: Dict[int, object] = {}
@@ -366,6 +390,9 @@ def run_fedasync_reference(model, cfg_model, clients, cfg: RunConfig, *,
             # rejected: no mix, no download — the stale copy and version
             # stamp stay put, but the iteration stamp still advances
             t += 1
+        # the row scatters back encoded either way (idempotent when the
+        # stored copy was already round-tripped)
+        local_w[a.cid] = rt_w(local_w[a.cid], version[a.cid])
         if collect_trace:
             traj[t] = jax.tree.map(np.asarray, w)
         if t % cfg.eval_every == 0 or t == cfg.T:
@@ -397,8 +424,11 @@ def run_fedbuff_reference(model, cfg_model, clients, cfg: RunConfig, *,
                             resolve_upload_codec(cfg).tree_bytes(w))
     sgd = jax.jit(sgd_epochs(model, cfg, mu=0.0))
     w0_init = w
+    srt = _state_roundtripper(cfg, "fedbuff", model, w)
+    rt_w = ((lambda wl, v: wl) if srt is None else
+            (lambda wl, v: srt({"w": wl, "version": jnp.float32(v)})["w"]))
     version = {c.cid: 0 for c in sched.active}
-    local_w = {c.cid: w for c in sched.active}
+    local_w = {c.cid: rt_w(w, 0) for c in sched.active}
     trainable = {c.cid for c in sched.active if c.stream.n > 0}
     M = int(cfg.buffer_size)
     buf = tree_zeros_like(w)
@@ -453,6 +483,9 @@ def run_fedbuff_reference(model, cfg_model, clients, cfg: RunConfig, *,
             # rejected: no deposit, no download — the iteration stamp
             # still advances (stamped by the producer before admission)
             t += 1
+        # the row scatters back encoded either way (idempotent when the
+        # stored copy was already round-tripped)
+        local_w[a.cid] = rt_w(local_w[a.cid], version[a.cid])
         if collect_trace:
             traj[t] = jax.tree.map(np.asarray, w)
         if t % cfg.eval_every == 0 or t == cfg.T:

@@ -242,12 +242,14 @@ def test_build_window_pads_non_pow2_tick_counts():
              [Arrival(cid=2, time=2.0, delay=1.0)],
              [Arrival(cid=3, time=2.5, delay=1.0)]]
     pt = builder.build_window(ticks, t_start=5, window=4, sim_time=2.5)
-    (idx, xs, ys, delays, n_vis, t_arr, mask,
+    (idx, lidx, xs, ys, delays, n_vis, t_arr, mask,
      fresh, dup, corrupt, stal) = pt.arrays
     assert idx.shape == (4, 2) and xs.shape[:2] == (4, 2)  # Tw=4, P=2
     assert pt.n_ticks == 3 and pt.t_start == 5 and pt.t_end == 9
     assert not mask[3].any(), "padding tick must be fully masked"
     assert (idx[3] == 4).all(), "padding tick targets the scratch row"
+    # device residency (no pool): storage rows == global cids
+    np.testing.assert_array_equal(np.asarray(lidx), np.asarray(idx))
     assert (t_arr[3] == 0.0).all() and (delays[3] == 0.0).all()
     # real rows: consecutive global-iteration stamps across the window
     assert [int(v) for v in t_arr[mask]] == [5, 6, 7, 8]

@@ -245,6 +245,54 @@ def test_fault_counter_rollback_audit():
     assert spec_s.retried > 0 and spec_s.crashed > 0
 
 
+def test_pool_counter_rollback_under_speculation():
+    """The host state pool's gather/scatter counters obey the same
+    speculation contract as the chaos ledger: the prefetcher snapshots
+    them before gathering for a peeked window, and a discarded peek
+    restores them — so committed traffic counts every gathered row
+    exactly once, and speculative gathers never touch pool data."""
+    from repro.sim.state_pool import HostStatePool
+
+    clients = _make_clients(6, seed=123)
+    kw = dict(seed=7, dropout_frac=0.0, skip_prob=0.15, init_work=8,
+              round_work=16, sim_time_budget=None, upload_bytes=0.0)
+    pool = HostStatePool({"w": np.zeros((4,), np.float32)}, 6)
+    pool.write_block(0, {"w": np.arange(24, dtype=np.float32).reshape(6, 4)})
+    raw0 = [a.copy() for _, a in pool.flat_items()]
+    shapes = np.random.default_rng(41)
+
+    sched = _sched(clients, kw)
+    committed_rows = 0
+    for _ in range(20):
+        # discarded speculation: the prefetcher gathers for peeked
+        # windows, then the engine rejects the speculation (e.g. an
+        # eval boundary re-splits the window) and rolls the counters back
+        snap = pool.counters()
+        for _ in range(int(shapes.integers(1, 3))):
+            for tick in sched.peek_window(2, 2):
+                if tick:
+                    pool.gather(np.asarray([a.cid for a in tick]))
+        pool.restore_counters(snap)
+        assert pool.counters() == snap, "discarded gather leaked into stats"
+        # committed window: gather, "run", scatter back
+        window = sched.peek_window(2, 2)
+        sched.commit()
+        for tick in window:
+            if not tick:
+                continue
+            rows = np.asarray([a.cid for a in tick])
+            block, seq = pool.gather(rows)
+            pool.patch(block, rows, seq)
+            pool.scatter(rows, block)
+            committed_rows += len(rows)
+    assert committed_rows > 0
+    assert pool.gathered_rows == committed_rows
+    assert pool.scattered_rows == committed_rows
+    # gather->scatter round-trips of untouched blocks leave data bitwise
+    for (_, a), b in zip(pool.flat_items(), raw0):
+        np.testing.assert_array_equal(a, b)
+
+
 # ---------------------------------------------------------------------------
 # (c) Engine level: tick-equivalence and prefetch bit-identity under traces
 # ---------------------------------------------------------------------------

@@ -1,0 +1,411 @@
+"""Out-of-core client-state pool: codecs, pool mechanics, residency pins.
+
+Three layers, mirroring the design:
+
+1. Unit: int4 nibble packing, the quantized ``ClientStateCodec``
+   (round-trip error bound, control-scalar exactness, re-encode
+   stability), and ``HostStatePool`` mechanics (gather purity, dirty-row
+   patching, counter snapshot/rollback, shard transparency).
+2. Residency pins: ``state_residency="host"`` must replay the device
+   engine **bitwise** — the pool is a storage move, not an algorithm
+   change — across algorithms, codecs, window sizes, prefetch on/off,
+   faults, and crash-resume.
+3. Accuracy: the host engine under the int8 quantized codec still
+   tracks the per-arrival reference oracle (which applies the same
+   decode∘encode round-trip), so quantization is the *only* divergence.
+"""
+import dataclasses
+import os
+import sys
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import get_strategy
+from repro.core.algorithms.common import make_state_codec
+from repro.common.dtypes import resolve_state_storage
+from repro.sim.engine import run_strategy
+from repro.sim.state_pool import HostStatePool, pack_int4, unpack_int4
+from repro.sim.workloads import get_workload
+
+_WL = get_workload("lstm_regression")
+_CFG_MODEL, _MODEL = _WL.build()
+_K = 8
+
+
+def _clients(fault_rate=None):
+    return _WL.make_clients(_K, seed=0, fault_rate=fault_rate)
+
+
+def _base_cfg(**kw):
+    kw.setdefault("window", 4)
+    kw.setdefault("eval_every", 12)
+    return _WL.run_config(T=24, batch_size=4, local_epochs=1, eta=0.02,
+                          lam=1.0, beta=0.001, seed=0, **kw)
+
+
+def _run(alg, cfg, fault_rate=None, prefetch=None, **kw):
+    tr = []
+    run_strategy(get_strategy(alg), _MODEL, _CFG_MODEL, _clients(fault_rate),
+                 cfg, trace=tr, prefetch=prefetch, **kw)
+    return tr
+
+
+def _assert_bitwise(tr_a, tr_b):
+    assert len(tr_a) == len(tr_b) > 0
+    for (t1, w1), (t2, w2) in zip(tr_a, tr_b):
+        assert t1 == t2
+        for a, b in zip(jax.tree.leaves(w1), jax.tree.leaves(w2)):
+            np.testing.assert_array_equal(a, b)
+
+
+def _pair(alg, cfg, fault_rate=None, prefetch=None):
+    """Run device vs host residency and require bitwise-equal traces."""
+    tr_d = _run(alg, cfg, fault_rate, prefetch)
+    tr_h = _run(alg, dataclasses.replace(cfg, state_residency="host",
+                                         state_shards=3),
+                fault_rate, prefetch)
+    _assert_bitwise(tr_d, tr_h)
+    return len(tr_d)
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 8, 33])
+def test_pack_unpack_int4_roundtrip(n):
+    rng = np.random.default_rng(n)
+    codes = rng.integers(-8, 8, size=(5, n)).astype(np.int8)
+    packed = pack_int4(codes)
+    assert packed.dtype == np.uint8
+    assert packed.shape == (5, (n + 1) // 2)
+    np.testing.assert_array_equal(unpack_int4(packed, n), codes)
+
+
+def test_state_storage_table():
+    assert resolve_state_storage(None) is None
+    for name, bits, levels in (("fp32", 32, None), ("bf16", 16, None),
+                               ("fp16", 16, None), ("int8", 8, 127),
+                               ("int4", 4, 7)):
+        st = resolve_state_storage(name)
+        assert st.pool_bits == bits and st.levels == levels
+    # aliases resolve to the canonical entry
+    assert resolve_state_storage("float32").name == "fp32"
+    assert resolve_state_storage("bfloat16").name == "bf16"
+    with pytest.raises(ValueError, match="unknown state dtype"):
+        resolve_state_storage("int2")
+
+
+# ---------------------------------------------------------------------------
+# Quantized delta codec
+# ---------------------------------------------------------------------------
+
+
+def _toy_codec(state_dtype, qclip=0.5):
+    cfg = types.SimpleNamespace(state_dtype=state_dtype, state_qclip=qclip)
+    anchor = {"w": jnp.full((9,), 0.25, jnp.float32),
+              "c": jnp.zeros((), jnp.float32)}
+    mask = {"w": True, "c": False}
+    return make_state_codec(cfg, anchor, mask), anchor
+
+
+@pytest.mark.parametrize("state_dtype", ["int8", "int4"])
+def test_quantized_codec_roundtrip_bound(state_dtype):
+    codec, anchor = _toy_codec(state_dtype)
+    storage = resolve_state_storage(state_dtype)
+    scale = 0.5 / storage.levels
+    rng = np.random.default_rng(3)
+    # deltas within the clip range round-trip to within scale/2/elem
+    x = {"w": anchor["w"] + jnp.asarray(
+        rng.uniform(-0.5, 0.5, 9).astype(np.float32)),
+        "c": jnp.asarray(1027.0)}
+    enc = codec.encode(x)
+    assert enc["w"].dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(enc["w"]))) <= storage.levels
+    dec = codec.decode(enc)
+    np.testing.assert_allclose(np.asarray(dec["w"]), np.asarray(x["w"]),
+                               atol=scale / 2 + 1e-7)
+    # control scalars pass through untouched — exact, any magnitude
+    assert enc["c"].dtype == jnp.float32
+    assert float(dec["c"]) == 1027.0
+    # out-of-range deltas saturate at the clip edge, never wrap
+    big = {"w": anchor["w"] + 7.0, "c": jnp.asarray(0.0)}
+    dec_big = codec.decode(codec.encode(big))
+    np.testing.assert_allclose(np.asarray(dec_big["w"]),
+                               np.asarray(anchor["w"]) + 0.5, atol=1e-6)
+
+
+@pytest.mark.parametrize("state_dtype", ["int8", "int4"])
+def test_quantized_codec_reencode_stable(state_dtype):
+    # encode∘decode∘encode == encode bitwise: host-pool gather/scatter
+    # round-trips are idempotent
+    codec, anchor = _toy_codec(state_dtype)
+    rng = np.random.default_rng(7)
+    x = {"w": anchor["w"] + jnp.asarray(
+        rng.uniform(-2.0, 2.0, 9).astype(np.float32)),
+        "c": jnp.asarray(5.0)}
+    enc = codec.encode(x)
+    enc2 = codec.encode(codec.decode(enc))
+    for a, b in zip(jax.tree.leaves(enc), jax.tree.leaves(enc2)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_quantized_codec_rejects_bad_qclip():
+    with pytest.raises(ValueError, match="state_qclip"):
+        _toy_codec("int8", qclip=0.0)
+
+
+# ---------------------------------------------------------------------------
+# HostStatePool mechanics
+# ---------------------------------------------------------------------------
+
+
+def _mk_pool(n_rows=17, shards=1, packed=False):
+    tmpl = {"a": np.zeros((2, 3), np.float32), "q": np.zeros((5,), np.int8)}
+    pool = HostStatePool(tmpl, n_rows, packed=packed, shards=shards)
+    rng = np.random.default_rng(11)
+    block = {"a": rng.normal(size=(n_rows, 2, 3)).astype(np.float32),
+             "q": rng.integers(-7, 8, (n_rows, 5)).astype(np.int8)}
+    pool.write_block(0, block)
+    return pool, block
+
+
+@pytest.mark.parametrize("shards,packed", [(1, False), (3, False), (4, True)])
+def test_pool_gather_scatter_roundtrip(shards, packed):
+    pool, block = _mk_pool(shards=shards, packed=packed)
+    rows = np.array([0, 5, 16, 2])
+    got, _seq = pool.gather(rows)
+    np.testing.assert_array_equal(got["a"], block["a"][rows])
+    np.testing.assert_array_equal(got["q"], block["q"][rows])
+    # scatter fresh values (ignoring trailing pad rows), gather them back
+    rng = np.random.default_rng(13)
+    upd = {"a": rng.normal(size=(6, 2, 3)).astype(np.float32),
+           "q": rng.integers(-7, 8, (6, 5)).astype(np.int8)}
+    pool.scatter(rows, jax.tree.map(lambda x: x, upd))
+    back, _ = pool.gather(rows)
+    np.testing.assert_array_equal(back["a"], upd["a"][:4])
+    np.testing.assert_array_equal(back["q"], upd["q"][:4])
+    # untouched rows unchanged
+    other, _ = pool.gather(np.array([1, 3]))
+    np.testing.assert_array_equal(other["a"], block["a"][[1, 3]])
+    # int4 packing halves the int8 leaf (5 elems -> 3 bytes/row)
+    if packed:
+        fp = 17 * 2 * 3 * 4
+        assert pool.nbytes == fp + 17 * 3
+
+
+def test_pool_sharding_is_transparent():
+    pool1, _ = _mk_pool(shards=1)
+    pool3, _ = _mk_pool(shards=3)
+    rows = np.array([16, 0, 7, 11])
+    a, _ = pool1.gather(rows)
+    b, _ = pool3.gather(rows)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_pool_gather_pure_and_counters_roll_back():
+    """Speculative gathers (the prefetcher's discarded peeks) must leave
+    both the data and the committed counters bit-identical."""
+    pool, block = _mk_pool()
+    committed = pool.counters()
+    raw_before = [a.copy() for _, a in pool.flat_items()]
+    for rows in ([0, 1], [5, 6, 7], [16]):
+        pool.gather(np.asarray(rows))
+    assert pool.gathered_rows == 6  # speculation did count...
+    pool.restore_counters(committed)  # ...until the discard rolls it back
+    assert pool.counters() == committed
+    for (_, a), b in zip(pool.flat_items(), raw_before):
+        np.testing.assert_array_equal(a, b)
+    # committed traffic counts exactly once
+    pool.gather(np.array([2, 3]))
+    pool.scatter(np.array([2]), {"a": block["a"][:1], "q": block["q"][:1]})
+    assert pool.gathered_rows == 2 and pool.scattered_rows == 1
+    assert pool.gather_s >= 0.0 and pool.scatter_s >= 0.0
+
+
+def test_pool_patch_repairs_exactly_dirty_rows():
+    pool, block = _mk_pool()
+    rows = np.array([1, 4, 9, 12])
+    got, seq = pool.gather(rows)
+    # a later scatter (the previous window committing) overwrites row 9
+    upd = {"a": np.full((1, 2, 3), 7.0, np.float32),
+           "q": np.full((1, 5), 3, np.int8)}
+    pool.scatter(np.array([9]), upd)
+    stale = {k: v.copy() for k, v in got.items()}
+    assert pool.patch(got, rows, seq) == 1
+    np.testing.assert_array_equal(got["a"][2], upd["a"][0])
+    np.testing.assert_array_equal(got["q"][2], upd["q"][0])
+    for i in (0, 1, 3):  # clean rows are not re-copied
+        np.testing.assert_array_equal(got["a"][i], stale["a"][i])
+    assert pool.patch(got, rows, pool._seq) == 0  # nothing newer
+
+
+def test_pool_validation_and_snapshot_mismatch():
+    tmpl = {"a": np.zeros((3,), np.float32)}
+    with pytest.raises(ValueError, match="n_rows"):
+        HostStatePool(tmpl, 0)
+    with pytest.raises(ValueError, match="shards"):
+        HostStatePool(tmpl, 4, shards=5)
+    pool = HostStatePool(tmpl, 4)
+    with pytest.raises(ValueError, match="missing array"):
+        pool.load_flat({})
+    with pytest.raises(ValueError, match="expected"):
+        pool.load_flat({"leaf0000_shard0000": np.zeros((4, 2), np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# Residency pins: host == device, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window,prefetch", [(1, False), (1, True),
+                                             (4, False), (4, True)])
+def test_host_matches_device_bitwise_fp32(window, prefetch):
+    n = _pair("asofed", _base_cfg(window=window), prefetch=prefetch)
+    assert n >= 2
+
+
+@pytest.mark.parametrize("alg", ["fedasync", "fedbuff"])
+def test_host_matches_device_bitwise_other_algs(alg):
+    _pair(alg, _base_cfg())
+
+
+@pytest.mark.parametrize("state_dtype", ["int8", "int4"])
+def test_host_matches_device_bitwise_quantized(state_dtype):
+    _pair("asofed", _base_cfg(state_dtype=state_dtype))
+
+
+def test_host_matches_device_bitwise_under_faults():
+    cfg = _base_cfg(max_staleness=16.0, max_delta_norm=5.0)
+    _pair("asofed", cfg, fault_rate=0.3)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("alg,state_dtype", [
+    ("asofed", "bf16"), ("fedasync", "int8"), ("fedbuff", "int8"),
+    ("fedasync", "int4"), ("fedbuff", "bf16"),
+])
+def test_host_matches_device_bitwise_matrix(alg, state_dtype):
+    _pair(alg, _base_cfg(state_dtype=state_dtype))
+
+
+def test_host_stats_report_pool_traffic():
+    cfg = dataclasses.replace(_base_cfg(state_dtype="int4"),
+                              state_residency="host", state_shards=2)
+    st = {}
+    run_strategy(get_strategy("asofed"), _MODEL, _CFG_MODEL, _clients(),
+                 cfg, stats=st)
+    assert st["state_residency"] == "host"
+    assert st["host_pool_bytes"] > 0
+    assert st["gathered_rows"] > 0 and st["scattered_rows"] > 0
+    assert st["gather_s"] > 0.0 and st["scatter_s"] > 0.0
+    dt = {}
+    run_strategy(get_strategy("asofed"), _MODEL, _CFG_MODEL, _clients(),
+                 _base_cfg(), stats=dt)
+    assert dt["state_residency"] == "device"
+    assert dt["host_pool_bytes"] == 0 and dt["gathered_rows"] == 0
+    # the nibble-packed int4 pool holds the same fleet in ~1/8 the bytes
+    # of the device run's fp32 stacked state
+    assert st["host_pool_bytes"] < dt["stacked_state_bytes"] / 4
+
+
+# ---------------------------------------------------------------------------
+# Oracle accuracy under the quantized codec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alg", ["asofed", "fedasync", "fedbuff"])
+def test_host_engine_matches_oracle_int8(alg):
+    from repro.sim.reference import (run_asofed_reference,
+                                     run_fedasync_reference,
+                                     run_fedbuff_reference)
+    reference = {"asofed": run_asofed_reference,
+                 "fedasync": run_fedasync_reference,
+                 "fedbuff": run_fedbuff_reference}[alg]
+    cfg = _base_cfg(state_dtype="int8")
+    ref = reference(_MODEL, _CFG_MODEL, _clients(), cfg)
+    tr = _run(alg, dataclasses.replace(cfg, state_residency="host"))
+    assert tr, "engine produced no dispatches"
+    for t, w in tr:
+        assert t in ref, f"window boundary t={t} not in reference"
+        for a, b in zip(jax.tree.leaves(w), jax.tree.leaves(ref[t])):
+            np.testing.assert_allclose(a, b, atol=3e-4, rtol=3e-3,
+                                       err_msg=f"divergence at t={t}")
+
+
+# ---------------------------------------------------------------------------
+# Crash-resume and fail-fast
+# ---------------------------------------------------------------------------
+
+
+def test_crash_resume_host_residency_bitwise(tmp_path):
+    ck = str(tmp_path / "ck")
+    cfg = dataclasses.replace(_base_cfg(state_dtype="int8"),
+                              state_residency="host", state_shards=2)
+    tr_full = _run("asofed", cfg)
+    run_strategy(get_strategy("asofed"), _MODEL, _CFG_MODEL, _clients(),
+                 dataclasses.replace(cfg, T=12), checkpoint_path=ck,
+                 checkpoint_every=8)
+    tr_res = _run("asofed", cfg, resume_from=ck)
+    full = {t: w for t, w in tr_full}
+    post = [(t, w) for t, w in tr_res if t in full]
+    assert post, "resume replayed no post-checkpoint windows"
+    for t, w in post:
+        for a, b in zip(jax.tree.leaves(full[t]), jax.tree.leaves(w)):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_residency_mismatch_fails_readably(tmp_path):
+    host_ck = str(tmp_path / "host_ck")
+    dev_ck = str(tmp_path / "dev_ck")
+    hcfg = dataclasses.replace(_base_cfg(), T=12, state_residency="host")
+    run_strategy(get_strategy("asofed"), _MODEL, _CFG_MODEL, _clients(),
+                 hcfg, checkpoint_path=host_ck, checkpoint_every=8)
+    run_strategy(get_strategy("asofed"), _MODEL, _CFG_MODEL, _clients(),
+                 dataclasses.replace(hcfg, state_residency="device"),
+                 checkpoint_path=dev_ck, checkpoint_every=8)
+    with pytest.raises(ValueError, match="state-residency mismatch"):
+        _run("asofed", _base_cfg(), resume_from=host_ck)
+    with pytest.raises(ValueError, match="state-residency mismatch"):
+        _run("asofed", hcfg, resume_from=dev_ck)
+
+
+def test_engine_fails_fast_on_bad_residency_config():
+    with pytest.raises(ValueError, match="unknown state_residency"):
+        _run("asofed", dataclasses.replace(_base_cfg(),
+                                           state_residency="hots"))
+    # host residency needs an async schedule (there is no per-window
+    # active cohort to gather under the synchronous sweep)
+    with pytest.raises(ValueError, match="async schedules only"):
+        _run("fedavg", dataclasses.replace(_base_cfg(),
+                                           state_residency="host"))
+    with pytest.raises(ValueError, match="state_shards"):
+        _run("asofed", dataclasses.replace(_base_cfg(), state_shards=0))
+    with pytest.raises(ValueError, match="eval_every"):
+        _run("asofed", _base_cfg(eval_every=-1))
+
+
+def test_eval_every_zero_disables_evaluation():
+    st = {}
+    hist = run_strategy(get_strategy("asofed"), _MODEL, _CFG_MODEL,
+                        _clients(), _base_cfg(eval_every=0), stats=st)
+    assert hist == []
+    assert st["iters"] > 0
+
+
+def test_bench_args_validate_residency():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+    try:
+        from benchmarks.sim_bench import validate_bench_args
+    finally:
+        sys.path.pop(0)
+    validate_bench_args(state_residency="host")
+    validate_bench_args(state_residency=None)
+    with pytest.raises(ValueError, match="state_residency"):
+        validate_bench_args(state_residency="hots")
